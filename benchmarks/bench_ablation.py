@@ -1,0 +1,56 @@
+"""Paper Tab. V: ablation of the online memory-aware planner and the KV
+cache transfer protocol (llama3.3-70b, both request patterns).
+
+The regime is probed so the planner's thresholds actually fire during the
+run (the paper's setup generates until memory saturates)."""
+from benchmarks.common import Row
+from repro.configs.registry import get_config
+from repro.core.cost_model import CostEnv, Workload
+from repro.core.offline_scheduler import allocate
+from repro.core.online_planner import OnlinePlanner
+from repro.core.pipeline_sim import simulate_lime
+from repro.core.profiles import env_lowmem, mbps
+
+N = 500
+
+
+def _probe_prompt(devices, cfg, nm, n_tokens):
+    w = Workload(cfg, mb=1, ctx=1024, n_micro=nm)
+    env = CostEnv(devices, mbps(200), w)
+    r = allocate(env, cfg.n_layers, n_emp=1024)
+    if not r.feasible:
+        return 1024
+    pl = OnlinePlanner(env, r.plan, horizon_tokens=2 ** 20)
+    ts = [l[0].threshold_tokens for l in pl.ladders if l]
+    return max(min(ts) - n_tokens // 4, 512) if ts else 4096
+
+
+def run():
+    cfg = get_config("llama3.3-70b")
+    devices = env_lowmem(1)
+    rows = []
+    for pattern, nm in (("sporadic", 1), ("bursty", 5)):
+        P = _probe_prompt(devices, cfg, nm, N)
+        w = Workload(cfg, mb=1, ctx=P, n_micro=nm)
+        env = CostEnv(devices, mbps(200), w)
+        kw = dict(n_micro=nm, n_emp=max(P // 2, 512), prompt=P)
+        full = simulate_lime(env, cfg.n_layers, N, **kw)
+        no_kv = simulate_lime(env, cfg.n_layers, N, use_kv_transfer=False,
+                              **kw)
+        no_pl = simulate_lime(env, cfg.n_layers, N,
+                              planner_full_layer_fallback=True, **kw)
+        sc = f"ablation/{pattern}"
+        rows += [Row(sc, "LIME", full.ms_per_token),
+                 Row(sc, "no-kv-transfer", no_kv.ms_per_token),
+                 Row(sc, "no-planner", no_pl.ms_per_token)]
+        print(f"{sc}: LIME {full.ms_per_token:.1f} | "
+              f"no-KV-transfer {no_kv.ms_per_token:.1f} "
+              f"({full.ms_per_token/no_kv.ms_per_token:.2f}x) | "
+              f"no-planner {no_pl.ms_per_token:.1f} "
+              f"({full.ms_per_token/no_pl.ms_per_token:.2f}x) "
+              f"[paper: 0.86x / 0.67x]")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Paper Fig. 18: latency under randomly varying bandwidth (50-250 Mbps,
+re-drawn every ~50 tokens) on Qwen3-32B."""
+import random
+
+from benchmarks.common import ENVS, run_scenario, speedup_table
+from repro.configs.registry import get_config
+from repro.core.profiles import env_E2, mbps
+
+
+def schedule(tok: int) -> float:
+    rnd = random.Random(tok // 50)          # piecewise-constant, seeded
+    return mbps(rnd.uniform(50, 250))
+
+
+def run():
+    cfg = get_config("qwen3-32b")
+    rows = []
+    for pattern, nm in (("sporadic", 1), ("bursty", 3)):
+        sc = f"varbw/{pattern}"
+        rows.extend(run_scenario(sc, env_E2(), cfg, bw_mbps=150,
+                                 pattern=pattern, n_micro=nm,
+                                 bandwidth_schedule=schedule))
+    for sc, t in speedup_table(rows).items():
+        lime = next(r for r in rows
+                    if r.scenario == sc and r.method == "LIME")
+        print(f"{sc}: LIME {lime.ms_per_token:.0f} ms/tok | "
+              + " ".join(f"{m}={v}" for m, v in t.items() if m != "LIME"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""Kernel micro-benchmarks: wall time of the jnp reference paths on CPU
+(the Pallas kernels are TPU-target; interpret mode measures Python, not
+hardware) + the analytic VMEM working-set / arithmetic-intensity numbers
+the BlockSpec choices are based on."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import chunked_attention, decode_attention_ref
+from repro.models.ssm import wkv_scan_ref
+
+
+def _time(fn, *args, reps=3):
+    jax.block_until_ready(fn(*args))          # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    # prefill attention reference
+    q = jax.random.normal(key, (1, 2048, 8, 128), jnp.bfloat16)
+    kv = jax.random.normal(key, (1, 2048, 2, 128), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: chunked_attention(q, k, v, causal=True,
+                                                  window=None))
+    us = _time(f, q, kv, kv)
+    print(f"chunked_attention 2k x 8H/2KV x 128: {us:.0f} us/call (CPU ref)")
+    rows.append(("flash_ref_2k", us))
+    # decode attention
+    q1 = jax.random.normal(key, (8, 1, 8, 128), jnp.bfloat16)
+    c = jax.random.normal(key, (8, 4096, 2, 128), jnp.bfloat16)
+    ids = jnp.arange(4096, dtype=jnp.int32)
+    g = jax.jit(lambda q, k, v: decode_attention_ref(q, k, v, ids,
+                                                     jnp.int32(4095),
+                                                     window=None))
+    us = _time(g, q1, c, c)
+    print(f"decode_attention 4k cache x B8: {us:.0f} us/call (CPU ref)")
+    rows.append(("decode_ref_4k", us))
+    # wkv
+    r = jax.random.normal(key, (2, 256, 4, 64))
+    w = jax.nn.sigmoid(jax.random.normal(key, (2, 256, 4, 64)))
+    u = jax.random.normal(key, (4, 64)) * 0.1
+    s0 = jnp.zeros((2, 4, 64, 64))
+    h = jax.jit(lambda r, k, v, w: wkv_scan_ref(r, k, v, w, u, s0))
+    us = _time(h, r, r, r, w)
+    print(f"wkv_scan 256 x 4H x 64: {us:.0f} us/call (CPU ref)")
+    rows.append(("wkv_ref_256", us))
+
+    # static kernel design numbers (TPU-target)
+    bq, bk, dh = 128, 512, 128
+    vmem = (2 * bq + 3 * bk) * dh * 2 + bq * dh * 4
+    print(f"flash kernel VMEM working set @({bq},{bk},{dh}): "
+          f"{vmem/1e6:.2f} MB of 16 MB")
+    ai = (2 * bq * bk * dh * 2) / ((bq + 2 * bk) * dh * 2)
+    print(f"flash kernel arithmetic intensity: {ai:.0f} flops/byte "
+          f"(v5e ridge ~240)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Paper Figs 15-17: extremely low-memory settings 1-3 (llama3.3-70b on 5
+devices, memory progressively restricted); baselines OOM/OOT, LIME holds."""
+from benchmarks.common import run_scenario, speedup_table
+from repro.configs.registry import get_config
+from repro.core.profiles import env_lowmem
+
+
+def run():
+    cfg = get_config("llama3.3-70b")
+    rows = []
+    for setting in (1, 2, 3):
+        devices = env_lowmem(setting)
+        for bw in (100, 200):
+            for pattern, nm in (("sporadic", 1), ("bursty", 5)):
+                sc = f"S{setting}/{bw}Mbps/{pattern}"
+                rows.extend(run_scenario(sc, devices, cfg, bw_mbps=bw,
+                                         pattern=pattern, n_micro=nm,
+                                         n_tokens=150))
+    for sc, t in speedup_table(rows).items():
+        lime = next(r for r in rows
+                    if r.scenario == sc and r.method == "LIME")
+        status = lime.status if lime.status != "ok" else \
+            f"{lime.ms_per_token:.0f} ms/tok"
+        print(f"{sc}: LIME {status} | "
+              + " ".join(f"{m}={v}" for m, v in t.items() if m != "LIME"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

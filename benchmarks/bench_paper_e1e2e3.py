@@ -1,0 +1,25 @@
+"""Paper Figs 12-14: E1/E2/E3 latency, two bandwidths x two request
+patterns, LIME vs all six baselines."""
+from benchmarks.common import ENVS, run_scenario, speedup_table
+from repro.configs.registry import get_config
+
+
+def run():
+    rows = []
+    for env_name, (arch, envf, D) in ENVS.items():
+        cfg = get_config(arch)
+        for bw in (100, 200):
+            for pattern, nm in (("sporadic", 1), ("bursty", D)):
+                sc = f"{env_name}/{arch}/{bw}Mbps/{pattern}"
+                rows.extend(run_scenario(sc, envf(), cfg, bw_mbps=bw,
+                                         pattern=pattern, n_micro=nm))
+    for sc, t in speedup_table(rows).items():
+        lime = next(r for r in rows
+                    if r.scenario == sc and r.method == "LIME")
+        print(f"{sc}: LIME {lime.ms_per_token:.0f} ms/tok | "
+              + " ".join(f"{m}={v}" for m, v in t.items() if m != "LIME"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

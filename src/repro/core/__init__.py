@@ -1,0 +1,12 @@
+"""LIME core: the paper's contribution (DESIGN.md §1-2).
+
+Reproduction (simulator): cost_model, offline_scheduler, online_planner,
+kv_transfer, pipeline_sim, baselines.
+TPU runtime: engine (interleaved pipeline under shard_map).
+"""
+from repro.core.cost_model import CostEnv, Workload, Plan, DeviceAlloc  # noqa: F401
+from repro.core.offline_scheduler import allocate, ScheduleResult  # noqa: F401
+from repro.core.online_planner import OnlinePlanner  # noqa: F401
+from repro.core.kv_transfer import KVTransferProtocol  # noqa: F401
+from repro.core.pipeline_sim import InterleavedPipelineSim, simulate_lime, SimResult  # noqa: F401
+from repro.core.engine import InterleavedEngine, UniformPlan  # noqa: F401

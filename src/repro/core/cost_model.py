@@ -1,0 +1,226 @@
+"""Offload-oriented cost model for the interleaved pipeline (paper §IV-B).
+
+All quantities are *per autoregressive step* unless suffixed ``_seg`` (per
+segment). The paper's Eq. 1/2 terms are implemented with the per-segment
+reading that makes them internally consistent (DESIGN.md §8):
+
+    T_total  = T_comp + T_comm + T_uncover
+    T_comp   = Σ_i comp(L_i)                      (all segments)
+    T_comm   = #Seg · |D| · h_size / bw_net
+    T_uncover= #Seg · max_i max(load_seg(L̃_i) − T_i^idle_seg, 0)
+    T_i^idle = comp_seg(L_i − L̃_i) + Σ_{i'≠i} comp_seg(L_i') + |D|·h/bw  (Eq.2)
+
+Workload model: per-layer compute time on a device is
+max(FLOPs/dev.flops, bytes_touched/dev.mem_bw) — the second term makes
+micro-batch-1 decode bandwidth-bound (the regime where the paper's sporadic
+pattern lives) while bursty batches become compute-bound, which is exactly
+the sporadic/bursty asymmetry in the paper's results.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+from repro.configs.base import ModelConfig
+from repro.core.profiles import DeviceProfile
+
+DTYPE_BYTES = 2  # fp16/bf16 weights + KV
+
+
+# ============================================================================
+# Workload: what one decoder layer costs for a given micro-batch / context
+# ============================================================================
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """One auto-regressive step for `mb` sequences at context length `ctx`."""
+    cfg: ModelConfig
+    mb: int                     # micro-batch size (tokens per step per stage)
+    ctx: int                    # current context length (KV read span)
+    n_micro: int = 1            # micro-batches in flight (bursty: |D|)
+
+    # ---- model-side sizes (paper Tab. I symbols) ----
+    @property
+    def l_size(self) -> float:
+        """Bytes of one decoder layer (average over depth)."""
+        n = self.cfg.n_layers
+        tot = sum(self.cfg.layer_params(i) for i in range(n))
+        return tot / n * DTYPE_BYTES
+
+    @property
+    def attn_block_bytes(self) -> float:
+        return self.cfg.attn_params_per_layer() * DTYPE_BYTES
+
+    @property
+    def mlp_block_bytes(self) -> float:
+        return self.cfg.mlp_params_per_layer() * DTYPE_BYTES
+
+    @property
+    def p_A(self) -> float:
+        return self.cfg.p_A()
+
+    @property
+    def p_M(self) -> float:
+        return self.cfg.p_M()
+
+    @property
+    def h_size(self) -> float:
+        """Intermediate activation bytes handed between devices (per mb)."""
+        return self.mb * self.cfg.d_model * DTYPE_BYTES
+
+    def kv_bytes_per_token_layer(self) -> float:
+        """KV-cache bytes one token adds on one layer (whole micro-batch set)."""
+        c = self.cfg
+        if c.is_attention_free:
+            return 0.0
+        per_seq = 2 * c.n_kv_heads * (c.head_dim or 0) * DTYPE_BYTES
+        return per_seq * self.mb * self.n_micro
+
+    # ---- per-layer step cost on a device ----
+    def layer_flops(self) -> float:
+        """FLOPs of one layer for one step of `mb` tokens (active params)."""
+        c = self.cfg
+        if c.is_moe:
+            dff = c.moe_d_ff or c.d_ff
+            mlp = (c.top_k + c.n_shared_experts) * 3 * c.d_model * dff
+        else:
+            mlp = 3 * c.d_model * c.d_ff
+        dense = c.attn_params_per_layer() + mlp
+        flops = 2.0 * dense * self.mb
+        if not c.is_attention_free:
+            # attention reads: q·K^T and P·V over the live context
+            span = min(self.ctx, c.window_size) \
+                if c.attn_kind.value in ("sliding",) else self.ctx
+            flops += 4.0 * self.mb * span * c.n_heads * (c.head_dim or 0)
+        return flops
+
+    def layer_bytes_touched(self, resident_bytes: Optional[float] = None) -> float:
+        """HBM traffic of one layer step: active weights + KV read."""
+        c = self.cfg
+        if c.is_moe:
+            dff = c.moe_d_ff or c.d_ff
+            active = (c.attn_params_per_layer()
+                      + min(self.mb * c.top_k, c.n_experts) * 3 * c.d_model * dff
+                      + c.n_shared_experts * 3 * c.d_model * dff) * DTYPE_BYTES
+        else:
+            active = self.l_size if resident_bytes is None else resident_bytes
+        kv = self.kv_bytes_per_token_layer() / max(self.n_micro, 1) * self.ctx \
+            / max(self.mb, 1) * self.mb  # read whole per-mb KV span
+        return active + kv
+
+    def comp_layer(self, dev: DeviceProfile) -> float:
+        """Seconds for one layer's step on `dev` (roofline max of terms)."""
+        return max(self.layer_flops() / dev.flops,
+                   self.layer_bytes_touched() / dev.mem_bw)
+
+
+# ============================================================================
+# Allocation plan (output of the offline scheduler, input to sim/engine)
+# ============================================================================
+@dataclasses.dataclass
+class DeviceAlloc:
+    """Per-device allocation. Counts are *per segment* for offloaded layers
+    (the interleave repeats the same shape every segment, paper Fig. 6)."""
+    resident_total: int          # fully-resident layers (across all segments)
+    off_full_seg: int = 0        # layers fully (re)loaded, per segment
+    off_attn_only_seg: int = 0   # MLP resident, MHA loaded, per segment
+    off_mlp_only_seg: int = 0    # MHA resident, MLP loaded, per segment
+
+    def off_layers_seg(self) -> int:
+        return self.off_full_seg + self.off_attn_only_seg + self.off_mlp_only_seg
+
+    def layers_total(self, n_seg: int) -> int:
+        return self.resident_total + n_seg * self.off_layers_seg()
+
+    def load_bytes_seg(self, w: Workload) -> float:
+        return (self.off_full_seg * w.l_size
+                + self.off_attn_only_seg * w.attn_block_bytes
+                + self.off_mlp_only_seg * w.mlp_block_bytes)
+
+    def resident_bytes(self, w: Workload, n_seg: int) -> float:
+        """Weight bytes held simultaneously: fully-resident layers + one
+        segment's offload buffer + the resident halves of split layers."""
+        split_res = (self.off_attn_only_seg * w.mlp_block_bytes
+                     + self.off_mlp_only_seg * w.attn_block_bytes) * n_seg
+        return (self.resident_total * w.l_size
+                + self.load_bytes_seg(w)        # double-buffer: one segment live
+                + split_res)
+
+
+@dataclasses.dataclass
+class Plan:
+    n_seg: int
+    devices: List[DeviceAlloc]
+    t_comp: float = 0.0
+    t_comm: float = 0.0
+    t_uncover: float = 0.0
+    off_trim: int = 0           # padding overshoot when #Seg ∤ |L_left|
+                                # (cost terms stay conservative/padded)
+
+    @property
+    def t_total(self) -> float:
+        return self.t_comp + self.t_comm + self.t_uncover
+
+    def layers_total(self) -> int:
+        return sum(d.layers_total(self.n_seg)
+                   for d in self.devices) - self.off_trim
+
+
+# ============================================================================
+# Cost environment: devices + network + workload  ->  Eq. 1 terms
+# ============================================================================
+@dataclasses.dataclass
+class CostEnv:
+    devices: Sequence[DeviceProfile]
+    bw_net: float                      # bytes/s between any two devices
+    work: Workload
+    net_latency: float = 1e-3          # per-message latency (edge LAN ~1 ms);
+                                       # dominates TP's per-layer syncs
+
+    # -- building blocks -----------------------------------------------------
+    def comp_layers(self, dev_idx: int, n_layers: float) -> float:
+        return n_layers * self.work.comp_layer(self.devices[dev_idx])
+
+    def load_time(self, dev_idx: int, nbytes: float) -> float:
+        return nbytes / self.devices[dev_idx].load_bw
+
+    def comm_seg(self) -> float:
+        """One segment's activation ring: |D| hops of h_size (Eq. 1)."""
+        return len(self.devices) * (self.work.h_size / self.bw_net
+                                    + self.net_latency)
+
+    # -- Eq. 2: per-device overlap budget within one segment ------------------
+    def idle_seg(self, plan: Plan, i: int) -> float:
+        d = plan.devices[i]
+        own_nonoff = self.comp_layers(i, d.resident_total / plan.n_seg)
+        others = sum(
+            self.comp_layers(j, plan.devices[j].layers_total(plan.n_seg)
+                             / plan.n_seg)
+            for j in range(len(plan.devices)) if j != i)
+        return own_nonoff + others + self.comm_seg()
+
+    # -- Eq. 1: total latency of a plan ---------------------------------------
+    def evaluate(self, plan: Plan) -> Plan:
+        w = self.work
+        plan.t_comp = sum(
+            self.comp_layers(i, plan.devices[i].layers_total(plan.n_seg))
+            for i in range(len(plan.devices)))
+        plan.t_comm = plan.n_seg * self.comm_seg()
+        unc = 0.0
+        for i, d in enumerate(plan.devices):
+            load = self.load_time(i, d.load_bytes_seg(w))
+            unc = max(unc, max(load - self.idle_seg(plan, i), 0.0))
+        plan.t_uncover = plan.n_seg * unc
+        return plan
+
+    # -- memory audit ----------------------------------------------------------
+    def kv_reserve_bytes(self, layers_on_dev: int, n_tokens: int) -> float:
+        return layers_on_dev * n_tokens * self.work.kv_bytes_per_token_layer()
+
+    def mem_ok(self, plan: Plan, n_tokens: int) -> bool:
+        for i, d in enumerate(plan.devices):
+            used = (d.resident_bytes(self.work, plan.n_seg)
+                    + self.kv_reserve_bytes(d.layers_total(plan.n_seg),
+                                            n_tokens))
+            if used > self.devices[i].mem_bytes + 1e-6:
+                return False
+        return True

@@ -1,0 +1,718 @@
+"""TPU-native LIME: the interleaved pipeline as a JAX shard_map program.
+
+This is implementation (B) of DESIGN.md §2 — the paper's mechanism mapped to
+a TPU pod slice:
+
+  Jetson device        -> pipeline stage (one slice of the mesh's stage axis)
+  SSD weight offload   -> offloaded layers *sharded across all stages* on
+                          their largest divisible weight dim (the pod's
+                          aggregate HBM is "the SSD"); restored by an
+                          all_to_all — per slot (fetch_mode="slot",
+                          paper-literal per-segment streaming) or once per
+                          decode step in a two-axis-manual region
+                          (fetch_mode="step", optimized; EXPERIMENTS §Perf H1)
+  SSD read bandwidth   -> ICI all-to-all bandwidth
+  Ethernet activation  -> lax.ppermute ring between stages
+  interleaved prefetch -> the restore for the *next* unit of work is issued
+                          before the current one's compute consumes its
+                          weights, so XLA's async collectives overlap it with
+                          compute — the paper's overlap claim, structural.
+
+Layer placement (uniform — TPU stages are homogeneous; the heterogeneous
+path lives in the offline scheduler + simulator): the L layers are cut into
+C = n_seg·n_stage contiguous chunks of k = k_res + k_off layers; chunk c
+runs on stage c mod n_stage during segment c // n_stage. Within a chunk the
+first k_res layers are resident, the last k_off stream in per segment —
+"positions consistent across segments" (paper §IV-A).
+
+Decode schedule: micro-batch m computes chunk c at slot τ = m + c
+(sporadic: n_mb = 1; bursty: n_mb = n_stage). The slot loop is a lax.scan,
+so HLO size is O(1) in pipeline depth; fill/drain bubbles are masked
+commits, not control flow.
+
+Losslessness is the contract: engine output ≡ single-device decode_step
+(test_engine.py asserts equality within bf16 tolerance).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import Family, ModelConfig
+from repro.models import model as M
+from repro.models import spec as pspec
+
+
+# cache entries stacked on the layer dim (everything else — pos, pos_ids —
+# is global; classifying by KEY, not shape, avoids the S_c == n_layers trap)
+PER_LAYER_CACHE_KEYS = frozenset({"k", "v", "rwkv_state", "last_tm",
+                                  "last_cm", "conv_state", "ssm_state",
+                                  "xk", "xv"})
+
+
+# ============================================================================
+# Uniform plan (TPU homogeneous stages)
+# ============================================================================
+@dataclasses.dataclass(frozen=True)
+class UniformPlan:
+    n_stage: int
+    n_seg: int
+    k_res: int                  # resident layers per chunk
+    k_off: int                  # streamed layers per chunk
+
+    @property
+    def k(self) -> int:
+        return self.k_res + self.k_off
+
+    @property
+    def n_chunks(self) -> int:
+        return self.n_seg * self.n_stage
+
+    @property
+    def n_layers(self) -> int:
+        return self.n_chunks * self.k
+
+
+def plan_for(cfg: ModelConfig, n_stage: int, *, hbm_frac_for_weights: float,
+             hbm_bytes: float = 16e9) -> UniformPlan:
+    """Pick (n_seg, k_res, k_off) so resident weights fit the per-stage HBM
+    budget. Layers that don't divide evenly are padded into the last chunk
+    by the caller (layer counts in the assigned configs all factor cleanly
+    for n_stage in {4, 8, 16} after segment choice — see tests)."""
+    budget = hbm_bytes * hbm_frac_for_weights
+    l_bytes = cfg.layer_params() * 2
+    total_per_stage = cfg.n_layers / n_stage * l_bytes
+    if total_per_stage <= budget:
+        # everything resident: degenerate single-segment pipeline
+        k = math.ceil(cfg.n_layers / n_stage)
+        return UniformPlan(n_stage, 1, k, 0)
+    res_layers = int(budget // l_bytes) * n_stage
+    off_layers = cfg.n_layers - res_layers
+    for n_seg in range(2, max(3, cfg.n_layers // n_stage + 1)):
+        c = n_seg * n_stage
+        if cfg.n_layers % c:
+            continue
+        k = cfg.n_layers // c
+        k_off = max(math.ceil(off_layers / c), 1)
+        if k_off < k:
+            return UniformPlan(n_stage, n_seg, k - k_off, k_off)
+    # fallback: 2 segments, all layers streamed beyond one resident
+    c = 2 * n_stage
+    k = math.ceil(cfg.n_layers / c)
+    return UniformPlan(n_stage, 2, max(k - max(off_layers // c, 1), 0),
+                       min(max(off_layers // c, 1), k))
+
+
+# ============================================================================
+# Param / cache reshaping (host-side, once at engine build)
+# ============================================================================
+def _pad_layers(leaf, L_target: int):
+    L = leaf.shape[0]
+    if L == L_target:
+        return leaf
+    pad = [(0, L_target - L)] + [(0, 0)] * (leaf.ndim - 1)
+    return jnp.pad(leaf, pad)
+
+
+def stage_shard_dim(per_layer_shape, n_stage: int):
+    """Which weight dim the offload store shards over the stage axis ("the
+    SSD" distribution). Largest dim divisible by n_stage wins, so the
+    all_to_all moves big contiguous slabs; None -> leaf too small / odd
+    shaped, kept replicated across stages (its bytes are noise)."""
+    best, best_sz = None, 0
+    for i, d in enumerate(per_layer_shape):
+        if d % n_stage == 0 and d > best_sz:
+            best, best_sz = i, d
+    return best
+
+
+def split_layer_stack(stacked, plan: UniformPlan):
+    """(L, ...) pytree -> (resident, offloaded).
+
+    resident:  (n_seg, n_stage, k_res, *dims) — stage-sharded on dim 1.
+    offloaded: (n_seg, n_stage, k_off, *dims) — stage-sharded on weight dim
+               `stage_shard_dim(dims) + 3` (or replicated when None), so
+               streamed layers stay 'model'-sharded on their other dims
+               under GSPMD the whole time — one chip never materializes a
+               full MoE layer (kimi-k2: 34 GB/layer).
+    """
+    def do(leaf):
+        leaf = _pad_layers(leaf, plan.n_layers)
+        shp = leaf.shape[1:]
+        x = leaf.reshape(plan.n_seg, plan.n_stage, plan.k, *shp)
+        res = x[:, :, :plan.k_res]
+        off = x[:, :, plan.k_res:]
+        return res, off
+    pairs = jax.tree.map(do, stacked)
+    res = jax.tree.map(lambda p: p[0], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    off = jax.tree.map(lambda p: p[1], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return res, off
+
+
+# ============================================================================
+# The engine
+# ============================================================================
+class InterleavedEngine:
+    """LIME decode engine over a mesh axis (default: 'data' doubles as the
+    pipeline-stage axis; remaining mesh axes — 'model', 'pod' — stay under
+    GSPMD auto-sharding, giving tensor parallelism inside each stage)."""
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh, plan: UniformPlan, *,
+                 stage_axis: str = "data", n_mb: int = 1, mb: int = 1,
+                 max_len: int = 256, long_mode: bool = False,
+                 prefetch: bool = True, impl: str = "ref",
+                 enc_len: int = 0, fetch_mode: str = "step"):
+        """fetch_mode:
+        'slot' — paper-literal per-segment streaming: an all_to_all inside
+                 every pipeline slot re-fetches the active chunk's layers.
+                 Simple, but each stage re-pulls the same chunk n_stage
+                 times per step, and the in-scan collective forces the
+                 partitioner to un-shard auto ('model') dims of the slab
+                 (§Perf baseline).
+        'step' — one two-axis-manual all_to_all per decode step restores
+                 every stage's streamed layers for all segments into a
+                 double buffer the slot scan indexes; each streamed byte
+                 moves once per step and stays 'model'-sharded end to end
+                 (§Perf optimized; the beyond-paper variant)."""
+        assert mesh.shape[stage_axis] == plan.n_stage, \
+            (mesh.shape, plan.n_stage)
+        assert fetch_mode in ("slot", "step")
+        self.cfg, self.mesh, self.plan = cfg, mesh, plan
+        self.axis = stage_axis
+        self.n_mb, self.mb = n_mb, mb
+        self.max_len = max_len
+        self.long_mode = long_mode
+        self.prefetch = prefetch
+        self.impl = impl
+        self.enc_len = enc_len          # ENCDEC: encoder runs outside
+        self.fetch_mode = fetch_mode if plan.k_off else "slot"
+        self.S_c = M.kv_cache_len(cfg, max_len, long_mode)
+        self._fetch = self._build_fetch() if self.fetch_mode == "step" \
+            else None
+        self._step = self._build_step()
+
+    # -- state construction ----------------------------------------------------
+    def init_state(self, params) -> Dict[str, Any]:
+        """params: the model's usual pytree (layers stacked on L). Returns the
+        engine state with resident/offloaded splits + per-stage caches."""
+        cfg, plan = self.cfg, self.plan
+        assert "dense_layers" not in params, \
+            "engine expects a homogeneous stack; fold dense layers via " \
+            "configs with first_dense_layers=0 or pad (see tests)"
+        res, off = split_layer_stack(params["layers"], plan)
+        cache = M.init_cache(cfg, self.n_mb * self.mb, self.max_len,
+                             self.long_mode,
+                             enc_out=(jnp.zeros((self.n_mb * self.mb,
+                                                 self.enc_len, cfg.d_model),
+                                                jnp.bfloat16)
+                                      if self.enc_len else None))
+        per_layer = {}
+        glob = {"pos": cache["pos"]}
+        for k, v in cache.items():
+            if k == "pos":
+                continue
+            if k in PER_LAYER_CACHE_KEYS:
+                x = _pad_layers(v, plan.n_layers)
+                shp = x.shape[1:]
+                # (L, B, ...) -> (n_seg, n_stage, k, n_mb, mb, ...)
+                x = x.reshape(plan.n_seg, plan.n_stage, plan.k, *shp)
+                x = x.reshape(plan.n_seg, plan.n_stage, plan.k,
+                              self.n_mb, self.mb, *shp[1:])
+                per_layer[k] = x
+            else:
+                glob[k] = v                      # pos_ids etc. (global)
+        others = {k: v for k, v in params.items() if k != "layers"}
+        state = {
+            "resident": res, "offload": off, "shared": others,
+            "cache": per_layer, "glob": glob,
+        }
+        return jax.device_put(state, self.state_shardings())
+
+    def _model_part(self, dim_size: int, logical_axis) -> Optional[str]:
+        """'model' when the rules shard this logical axis there and the dim
+        divides (auto-axis at-rest sharding — GSPMD keeps it)."""
+        if logical_axis is None or "model" not in self.mesh.shape:
+            return None
+        from repro.sharding import rules as R
+        axes = tuple(a for a in R.RULES.get(logical_axis, ())
+                     if a == "model")
+        if axes and dim_size % self.mesh.shape["model"] == 0:
+            return "model"
+        return None
+
+    def _off_pspec(self, per_layer_shape, per_layer_axes=None) -> P:
+        sdim = stage_shard_dim(per_layer_shape, self.plan.n_stage)
+        parts: list = [None] * (3 + len(per_layer_shape))
+        if per_layer_axes is not None:
+            for i, (d, la) in enumerate(zip(per_layer_shape, per_layer_axes)):
+                mp = self._model_part(d, la)
+                if mp and i != sdim:
+                    parts[3 + i] = mp
+        if sdim is not None:
+            parts[3 + sdim] = self.axis
+        return P(*parts)
+
+    def _res_pspec(self, per_layer_shape, per_layer_axes=None) -> P:
+        parts: list = [None, self.axis] + [None] * (1 + len(per_layer_shape))
+        if per_layer_axes is not None:
+            for i, (d, la) in enumerate(zip(per_layer_shape, per_layer_axes)):
+                mp = self._model_part(d, la)
+                if mp:
+                    parts[3 + i] = mp
+        return P(*parts)
+
+    def _shared_pspec(self, spec: pspec.ParamSpec) -> P:
+        parts = [self._model_part(d, la)
+                 for d, la in zip(spec.shape, spec.axes)]
+        return P(*parts)
+
+    def _cache_pspec(self, shape) -> P:
+        """(n_seg, n_stage, k, n_mb, mb, d5, ...): stage on dim 1; the big
+        per-layer dim (KV seq / heads / d_model) over 'model' when it
+        divides; mb over 'pod' when present (bursty replicas per pod)."""
+        parts: list = [None, self.axis] + [None] * (len(shape) - 2)
+        if "pod" in self.mesh.shape and len(shape) > 4 \
+                and shape[4] % self.mesh.shape["pod"] == 0 and shape[4] > 1:
+            parts[4] = "pod"
+        if "model" in self.mesh.shape and len(shape) > 5 \
+                and shape[5] % self.mesh.shape["model"] == 0:
+            parts[5] = "model"
+        return P(*parts)
+
+    def state_shardings(self):
+        mesh, ax = self.mesh, self.axis
+        specs = M.build_param_specs(self.cfg)
+
+        def ns(*spec):
+            return NamedSharding(mesh, P(*spec))
+
+        is_spec = pspec.is_spec
+        res_sh = jax.tree.map(
+            lambda s: NamedSharding(mesh, self._res_pspec(s.shape[1:],
+                                                          s.axes[1:])),
+            specs["layers"], is_leaf=is_spec)
+        off_sh = jax.tree.map(
+            lambda s: NamedSharding(mesh, self._off_pspec(s.shape[1:],
+                                                          s.axes[1:])),
+            specs["layers"], is_leaf=is_spec)
+        cs = M.cache_specs(self.cfg, self.n_mb * self.mb, self.max_len,
+                           self.long_mode, self.enc_len)
+        cache_sh = {}
+        for k in self._cache_keys():
+            shape = (self.plan.n_seg, self.plan.n_stage, self.plan.k,
+                     self.n_mb, self.mb) + cs[k].shape[2:]
+            cache_sh[k] = NamedSharding(mesh, self._cache_pspec(shape))
+        shared_sh = jax.tree.map(
+            lambda s: NamedSharding(mesh, self._shared_pspec(s)),
+            {k: v for k, v in specs.items() if k != "layers"},
+            is_leaf=is_spec)
+        return {"resident": res_sh, "offload": off_sh, "shared": shared_sh,
+                "cache": cache_sh,
+                "glob": {k: ns() for k in self._glob_keys()}}
+
+    # prototypes for tree-mapping shardings without materialized params
+    def _tree_proto(self):
+        specs = M.build_param_specs(self.cfg)
+        shapes = pspec.shapes(specs["layers"])
+        return shapes, shapes
+
+    def _shared_proto(self):
+        specs = M.build_param_specs(self.cfg)
+        return pspec.shapes({k: v for k, v in specs.items()
+                             if k != "layers"})
+
+    def _cache_keys(self):
+        cs = M.cache_specs(self.cfg, 1, self.max_len, self.long_mode,
+                           self.enc_len)
+        return [k for k in cs if k in PER_LAYER_CACHE_KEYS]
+
+    def _glob_keys(self):
+        cs = M.cache_specs(self.cfg, 1, self.max_len, self.long_mode,
+                           self.enc_len)
+        return [k for k in cs if k not in PER_LAYER_CACHE_KEYS]
+
+    # -- step-granular weight restore (fetch_mode="step") ------------------------
+    def _fetched_pspec(self, per_layer_shape, per_layer_axes) -> P:
+        """(n_stage, n_seg, k_off, *dims): stage dim manual, model dims kept
+        — except the stage-store dim, which arrives fully merged."""
+        sdim = stage_shard_dim(per_layer_shape, self.plan.n_stage)
+        parts: list = [self.axis, None, None] + [None] * len(per_layer_shape)
+        for i, (d, la) in enumerate(zip(per_layer_shape, per_layer_axes)):
+            mp = self._model_part(d, la)
+            if mp and i != sdim:
+                parts[3 + i] = mp
+        return P(*parts)
+
+    def _build_fetch(self):
+        """shard_map with BOTH stage and model axes manual: the all_to_all
+        then never forces the partitioner to materialize un-sharded slabs
+        (the failure mode of in-scan fetches — EXPERIMENTS.md §Perf)."""
+        plan = self.plan
+        n_stage, n_seg, k_off = plan.n_stage, plan.n_seg, plan.k_off
+        ax = self.axis
+        mesh = self.mesh
+        specs = M.build_param_specs(self.cfg)["layers"]
+        manual = {a for a in (ax, "model") if a in mesh.shape}
+
+        def off_in_pspec(s):
+            sdim = stage_shard_dim(s.shape[1:], n_stage)
+            parts: list = [None] * (3 + len(s.shape[1:]))
+            if sdim is not None:
+                parts[3 + sdim] = ax
+            for i, (d, la) in enumerate(zip(s.shape[1:], s.axes[1:])):
+                mp = self._model_part(d, la)
+                if mp and i != sdim:
+                    parts[3 + i] = mp
+            return P(*parts)
+
+        in_specs = jax.tree.map(off_in_pspec, specs, is_leaf=pspec.is_spec)
+        out_specs = jax.tree.map(
+            lambda s: self._fetched_pspec(s.shape[1:], s.axes[1:]),
+            specs, is_leaf=pspec.is_spec)
+        sdims = jax.tree.map(
+            lambda s: stage_shard_dim(s.shape[1:], n_stage), specs,
+            is_leaf=pspec.is_spec)
+
+        def fetch_fn(off):
+            def one(leaf, sdim):
+                # leaf local: (n_seg, n_stage, k_off, *local_dims)
+                contrib = jnp.moveaxis(leaf, 1, 0)  # (n_stage, n_seg, ...)
+                if sdim is None:
+                    d = jax.lax.axis_index(ax)
+                    own = jax.lax.dynamic_index_in_dim(contrib, d, 0, False)
+                    return own[None]
+                got = jax.lax.all_to_all(contrib, ax, split_axis=0,
+                                         concat_axis=2 + sdim)
+                shp = list(got.shape)
+                merged = shp[:2 + sdim] + [shp[2 + sdim] * shp[3 + sdim]] \
+                    + shp[4 + sdim:]
+                return got.reshape(merged)[None]
+            return jax.tree.map(one, off, sdims)
+
+        return jax.jit(shard_map(fetch_fn, mesh=mesh, in_specs=(in_specs,),
+                                 out_specs=out_specs, axis_names=manual,
+                                 check_vma=False))
+
+    # -- the SPMD step -----------------------------------------------------------
+    def _build_step(self):
+        cfg, plan = self.cfg, self.plan
+        n_stage, n_seg, k, k_res, k_off = (plan.n_stage, plan.n_seg, plan.k,
+                                           plan.k_res, plan.k_off)
+        C = plan.n_chunks
+        n_mb, mb = self.n_mb, self.mb
+        n_slots = C + n_mb - 1
+        ax = self.axis
+        impl = self.impl
+        PV = M.round_up(cfg.vocab_size, 256)
+        prefetch = self.prefetch
+
+        layer_shapes = pspec.shapes(M.build_param_specs(cfg)["layers"])
+        is_sds = lambda x: isinstance(x, jax.ShapeDtypeStruct)
+        stage_dims = jax.tree.map(
+            lambda s: stage_shard_dim(s.shape[1:], n_stage), layer_shapes,
+            is_leaf=is_sds)
+
+        def fetch_chunk_weights(off_local, tau):
+            """all_to_all restore of each stage's streamed layers for the
+            chunk it runs at slot `tau`. Stage-sharded leaves arrive via an
+            untiled all_to_all on their stage dim; replicated leaves are a
+            local gather. 'model'-sharded dims stay sharded throughout
+            (GSPMD auto axes)."""
+            if k_off == 0:
+                return None
+            e = jnp.arange(n_stage)
+            m_e = (tau - e) % n_stage if n_mb > 1 else jnp.zeros_like(e)
+            c_e = tau - m_e
+            s_e = jnp.clip(c_e // n_stage, 0, n_seg - 1)
+            d = jax.lax.axis_index(ax)
+            s_d = jnp.clip((tau - ((tau - d) % n_stage if n_mb > 1 else 0))
+                           // n_stage, 0, n_seg - 1)
+
+            def one(leaf, sdim):
+                if sdim is None:
+                    # replicated store: local pick of (my segment, my stage)
+                    seg = jax.lax.dynamic_index_in_dim(leaf, s_d, 0, False)
+                    return jax.lax.dynamic_index_in_dim(seg, d, 0, False)
+                contrib = leaf[s_e, e]        # (n_stage, k_off, *dims_local)
+                # untiled all_to_all: axis0 consumed, new n_stage axis at
+                # the stage-sharded dim; merge it back to the full dim.
+                cat = 2 + sdim                # k_off + dims offset, +1 below
+                got = jax.lax.all_to_all(contrib, ax, split_axis=0,
+                                         concat_axis=1 + sdim)
+                # got: (k_off, ..., n_stage, dim/n_stage, ...) at 1+sdim
+                shp = list(got.shape)
+                merged = shp[:1 + sdim] + [shp[1 + sdim] * shp[2 + sdim]] \
+                    + shp[3 + sdim:]
+                return got.reshape(merged)
+            return jax.tree.map(one, off_local, stage_dims)
+
+        def chunk_params(res_local, fetched, s_d):
+            """Assemble the k layers of the active chunk on this stage."""
+            res_s = jax.tree.map(
+                lambda r: jax.lax.dynamic_index_in_dim(r[:, 0], s_d, 0,
+                                                       keepdims=False),
+                res_local)                        # (k_res, ...)
+            if k_off == 0:
+                return res_s
+            return jax.tree.map(
+                lambda r, f: jnp.concatenate([r, f.astype(r.dtype)], axis=0),
+                res_s, fetched)
+
+        step_mode = self.fetch_mode == "step"
+
+        def step_fn(resident, offload, shared, cache, glob, tokens):
+            """One autoregressive token for all n_mb micro-batches.
+            tokens: (n_mb, mb, 1) int32 (replicated). Locals per stage:
+            resident (n_seg, 1, k_res, ...); cache (n_seg, 1, k, n_mb,
+            mb, ...); offload: fetch_mode='slot' -> the sharded store,
+            'step' -> the per-stage restored buffer (1, n_seg, k_off, ...)."""
+            d = jax.lax.axis_index(ax)
+            pos = glob["pos"]
+            pos_ids = glob.get("pos_ids")
+            slot = jnp.int32(0)
+            if pos_ids is not None:
+                S_c = pos_ids.shape[0]
+                slot = pos % S_c
+                pos_ids = jax.lax.dynamic_update_slice(
+                    pos_ids, pos[None].astype(pos_ids.dtype), (slot,))
+
+            x0 = jnp.zeros((mb, 1, cfg.d_model), jnp.bfloat16)
+            logits0 = jnp.zeros((n_mb, mb, PV), jnp.float32)
+            fetched0 = None if step_mode else \
+                fetch_chunk_weights(offload, jnp.int32(0))
+
+            def slot_body(carry, tau):
+                x, logits_buf, cache_l, fetched = carry
+                # my active (chunk, micro-batch) at this slot
+                m_d = ((tau - d) % n_stage) if n_mb > 1 else jnp.int32(0)
+                m_d = jnp.where(n_mb > 1, m_d, 0)
+                c_d = tau - m_d
+                valid = (c_d >= 0) & (c_d < C) & (m_d < n_mb) \
+                    & (c_d % n_stage == d)
+                s_d = jnp.clip(c_d // n_stage, 0, n_seg - 1)
+
+                # interleave: issue next slot's weight fetch BEFORE compute
+                if step_mode:
+                    nxt = None
+                    cur = None if k_off == 0 else jax.tree.map(
+                        lambda w: jax.lax.dynamic_index_in_dim(
+                            w[0], s_d, 0, False), offload)
+                else:
+                    nxt = fetch_chunk_weights(offload, tau + 1) if prefetch \
+                        else None
+                    cur = fetched if prefetch else \
+                        fetch_chunk_weights(offload, tau)
+
+                # entering micro-batches embed their token at chunk 0
+                tok_m = jnp.take(tokens, jnp.clip(m_d, 0, n_mb - 1), axis=0)
+                x_in = jnp.where((c_d == 0)[..., None, None],
+                                 M.embed(shared, tok_m).astype(jnp.bfloat16),
+                                 x)
+
+                p_chunk = chunk_params(resident, cur, s_d)
+                cache_chunk = {kk: jax.lax.dynamic_index_in_dim(
+                    v[:, 0], s_d, 0, keepdims=False) for kk, v in
+                    cache_l.items()}      # (k, n_mb, mb, ...)
+                cache_mb = {kk: jax.lax.dynamic_index_in_dim(
+                    v, jnp.clip(m_d, 0, n_mb - 1), 1, keepdims=False)
+                    for kk, v in cache_chunk.items()}   # (k, mb, ...)
+
+                layer_off = c_d * k
+                moe_mesh = self.mesh if (cfg.family == Family.MOE
+                                         and "model" in self.mesh.shape) \
+                    else None
+                body = M._decode_body(cfg, moe_mesh, impl,
+                                      cfg.family == Family.MOE, pos, slot,
+                                      pos_ids, enc_len=self.enc_len,
+                                      moe_mode="auto")
+                xs = {"p": p_chunk,
+                      "window": M.layer_windows(cfg, k, self.long_mode,
+                                                layer_off)}
+                xs.update(cache_mb)
+                (x_out, _), ys = jax.lax.scan(body, (x_in, jnp.float32(0.)),
+                                              xs)
+
+                # commit cache only when valid
+                m_c = jnp.clip(m_d, 0, n_mb - 1)
+
+                def commit(old, new):
+                    cur_s = jax.lax.dynamic_index_in_dim(old[:, 0], s_d, 0,
+                                                         False)
+                    prev = jax.lax.dynamic_index_in_dim(cur_s, m_c, 1, False)
+                    upd = jnp.where(valid, new.astype(old.dtype), prev)
+                    cur_s = jax.lax.dynamic_update_index_in_dim(
+                        cur_s, upd, m_c, 1)
+                    return jax.lax.dynamic_update_index_in_dim(
+                        old, cur_s[None], s_d, 0)
+                cache_l = dict(cache_l)      # keep read-only keys (xk/xv)
+                cache_l.update({kk: commit(cache_l[kk], ys[kk])
+                                for kk in ys})
+
+                # last chunk: unembed and stash logits
+                is_last = valid & (c_d == C - 1)
+                xn = M.rms_norm(x_out, shared["final_norm"], cfg.norm_eps)
+                lg = M.unembed(shared, xn)[:, 0].astype(jnp.float32)
+                logits_buf = jnp.where(
+                    is_last,
+                    jax.lax.dynamic_update_index_in_dim(
+                        logits_buf, lg, jnp.clip(m_d, 0, n_mb - 1), 0),
+                    logits_buf)
+
+                # hand activation to the next stage (ring)
+                x_next = jax.lax.ppermute(
+                    x_out, ax, [(i, (i + 1) % n_stage)
+                                for i in range(n_stage)])
+                dbg = (jnp.abs(x_out.astype(jnp.float32)).sum(),
+                       c_d, valid.astype(jnp.int32))
+                return (x_next, logits_buf, cache_l,
+                        nxt if prefetch else fetched), dbg
+
+            carry0 = (x0, logits0, cache, fetched0)
+            (xf, logits_buf, cache_f, _), dbg = jax.lax.scan(
+                slot_body, carry0, jnp.arange(n_slots, dtype=jnp.int32))
+
+            logits = jax.lax.psum(logits_buf, ax) / 1.0  # only last stage wrote
+            new_glob = dict(glob)
+            new_glob["pos"] = pos + 1
+            if pos_ids is not None:
+                new_glob["pos_ids"] = pos_ids
+            dbg_out = jnp.stack([dbg[0],
+                                 dbg[1].astype(jnp.float32),
+                                 dbg[2].astype(jnp.float32)], -1)[None]
+            return logits, cache_f, new_glob, dbg_out
+
+        proto = self._tree_proto()[0]
+        if step_mode:
+            off_in = jax.tree.map(lambda _: P(ax), proto, is_leaf=is_sds)
+        else:
+            off_in = jax.tree.map(lambda s: self._off_pspec(s.shape[1:]),
+                                  proto, is_leaf=is_sds)
+        in_specs = (jax.tree.map(lambda _: P(None, ax), proto,
+                                 is_leaf=is_sds),
+                    off_in,
+                    jax.tree.map(lambda _: P(), self._shared_proto()),
+                    {kk: P(None, ax) for kk in self._cache_keys()},
+                    {kk: P() for kk in self._glob_keys()},
+                    P())
+        out_specs = (P(), {kk: P(None, ax) for kk in self._cache_keys()},
+                     {kk: P() for kk in self._glob_keys()}, P(ax))
+        fn = shard_map(step_fn, mesh=self.mesh, in_specs=in_specs,
+                       out_specs=out_specs, axis_names={ax},
+                       check_vma=False)
+        # donate the KV/state caches: the slot scan's functional update
+        # would otherwise double-buffer them (kimi-k2: +4.2 GB/chip peak)
+        return jax.jit(fn, donate_argnums=(3,))
+
+    def seed_cache(self, state, cache) -> Dict[str, Any]:
+        """Adopt a model-layout cache (e.g. produced by M.prefill on
+        replicated params) into the engine's per-stage layout."""
+        plan = self.plan
+        new_cache = {}
+        glob = dict(state["glob"])
+        for kk, v in cache.items():
+            if kk in PER_LAYER_CACHE_KEYS:
+                x = _pad_layers(v, plan.n_layers)
+                shp = x.shape[1:]
+                x = x.reshape(plan.n_seg, plan.n_stage, plan.k,
+                              self.n_mb, self.mb, *shp[1:])
+                new_cache[kk] = x
+            else:
+                glob[kk] = v
+        out = dict(state)
+        sh = self.state_shardings()
+        out["cache"] = jax.device_put(new_cache, sh["cache"])
+        out["glob"] = glob
+        return out
+
+    # -- public API ---------------------------------------------------------------
+    def decode_step(self, state, tokens):
+        """tokens: (n_mb * mb, 1) int32 -> (logits (n_mb*mb, PV), state)."""
+        t = tokens.reshape(self.n_mb, self.mb, 1)
+        off = state["offload"]
+        if self.fetch_mode == "step":
+            off = self._fetch(off)
+        logits, cache, glob, dbg = self._step(
+            state["resident"], off, state["shared"],
+            state["cache"], state["glob"], t)
+        new_state = dict(state)
+        new_state["cache"] = cache
+        new_state["glob"] = glob
+        self.last_debug = dbg       # (n_stage, n_slots, [xnorm, chunk, valid])
+        return logits.reshape(self.n_mb * self.mb, -1), new_state
+
+    def lower_step(self):
+        """For the dry-run: lower the full serve_step (restore + pipeline)
+        without materializing state."""
+        shapes = self._abstract_state()
+        t = jax.ShapeDtypeStruct((self.n_mb, self.mb, 1), jnp.int32)
+        if self.fetch_mode == "step":
+            def full(res, off, shared, cache, glob, tokens):
+                w = self._fetch(off)
+                return self._step(res, w, shared, cache, glob, tokens)
+            return jax.jit(full, donate_argnums=(3,)).lower(
+                shapes["resident"], shapes["offload"], shapes["shared"],
+                shapes["cache"], shapes["glob"], t)
+        return self._step.lower(
+            shapes["resident"], shapes["offload"], shapes["shared"],
+            shapes["cache"], shapes["glob"], t)
+
+    def _abstract_state(self):
+        cfg, plan = self.cfg, self.plan
+        specs = M.build_param_specs(cfg)
+        sh = self.state_shardings()
+
+        def res_shape(s):
+            per = (plan.n_seg, plan.n_stage, plan.k_res) + s.shape[1:]
+            return jax.ShapeDtypeStruct(per, s.dtype)
+
+        def off_shape(s):
+            return jax.ShapeDtypeStruct(
+                (plan.n_seg, plan.n_stage, plan.k_off) + s.shape[1:],
+                s.dtype)
+
+        layer_shapes = pspec.shapes(specs["layers"])
+        res = jax.tree.map(res_shape, layer_shapes,
+                           is_leaf=lambda x: isinstance(
+                               x, jax.ShapeDtypeStruct))
+        off = jax.tree.map(off_shape, layer_shapes,
+                           is_leaf=lambda x: isinstance(
+                               x, jax.ShapeDtypeStruct))
+        shared = pspec.shapes({k: v for k, v in specs.items()
+                               if k != "layers"})
+        cs = M.cache_specs(cfg, self.n_mb * self.mb, self.max_len,
+                           self.long_mode, self.enc_len)
+        cache = {}
+        glob = {}
+        for kk, v in cs.items():
+            shp = v.shape
+            if kk in PER_LAYER_CACHE_KEYS:
+                per = (plan.n_seg, plan.n_stage, plan.k, self.n_mb,
+                       self.mb) + shp[2:]
+                cache[kk] = jax.ShapeDtypeStruct(per, v.dtype)
+            else:
+                glob[kk] = jax.ShapeDtypeStruct(shp, v.dtype)
+
+        def with_sh(tree, shtree):
+            return jax.tree.map(
+                lambda s, n: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                  sharding=n),
+                tree, shtree,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        return {"resident": with_sh(res, sh["resident"]),
+                "offload": with_sh(off, sh["offload"]),
+                "shared": with_sh(shared, sh["shared"]),
+                "cache": {kk: jax.ShapeDtypeStruct(
+                    v.shape, v.dtype, sharding=sh["cache"][kk])
+                    for kk, v in cache.items()},
+                "glob": {kk: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                         for kk, v in glob.items()}}

@@ -1,0 +1,199 @@
+"""Discrete-event simulator for the interleaved pipeline (paper §IV, Figs 3-8).
+
+The cost model (Eq. 1) predicts steady-state latency; this simulator *executes*
+a Plan on a timeline with explicit resources — per-device compute, per-device
+weight loader (SSD/ICI channel), and the activation ring — so pipeline fill,
+load/compute overlap, online-planner triggers and KV-transfer effects emerge
+rather than being assumed. It is the artifact behind EXPERIMENTS.md §Repro
+(Figs 12-18, Tab. V) and the golden-trace tests.
+
+Execution order per auto-regressive step (paper Fig. 6): for each segment
+s = 1..#Seg, each device computes all in-flight micro-batches for its stage
+of s, hands activations to the next device (h_size/bw per hop), and — after
+the *last* micro-batch of s — its loader evicts the segment-s offloaded
+blocks and begins fetching segment s+1's (the interleave). A stage may not
+start until its activation arrives AND its weights are resident.
+
+Request patterns (paper §V-A): sporadic = 1 micro-batch in flight;
+bursty = |D| micro-batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.cost_model import CostEnv, DeviceAlloc, Plan, Workload
+from repro.core.online_planner import OnlinePlanner
+from repro.core.kv_transfer import KVTransferProtocol
+
+
+@dataclasses.dataclass
+class StepTrace:
+    token: int
+    latency: float
+    load_stall: float          # time any stage waited on weights
+    comm_time: float
+    planner_fired: bool = False
+
+
+@dataclasses.dataclass
+class SimResult:
+    per_token: List[StepTrace]
+    oom: bool = False
+    oot: bool = False
+    reason: str = ""
+
+    @property
+    def ms_per_token(self) -> float:
+        if not self.per_token:
+            return float("inf")
+        return 1e3 * sum(t.latency for t in self.per_token) / len(self.per_token)
+
+    @property
+    def total_s(self) -> float:
+        return sum(t.latency for t in self.per_token)
+
+
+# ----------------------------------------------------------------------------
+# Core timeline
+# ----------------------------------------------------------------------------
+class InterleavedPipelineSim:
+    """Simulates LIME decoding `n_tokens` with an allocation Plan."""
+
+    def __init__(self, env: CostEnv, plan: Plan, *,
+                 use_planner: bool = True, use_kv_transfer: bool = True,
+                 planner_full_layer_fallback: bool = False,
+                 horizon_tokens: Optional[int] = None,
+                 bandwidth_schedule: Optional[Callable[[int], float]] = None,
+                 prompt_tokens: int = 64):
+        self.env = env
+        self.plan = plan
+        self.w = env.work
+        self.D = len(plan.devices)
+        self.n_seg = max(plan.n_seg, 1)
+        self.bw_schedule = bandwidth_schedule
+        self.prompt = prompt_tokens
+        if horizon_tokens is None:
+            # cover the largest context any device could conceivably reach
+            horizon_tokens = int(2 ** 20)
+        self.planner = OnlinePlanner(env, plan, horizon_tokens=horizon_tokens) \
+            if use_planner or planner_full_layer_fallback else None
+        self.full_layer_fallback = planner_full_layer_fallback
+        self.kv = KVTransferProtocol(env, plan, self.planner) \
+            if (use_kv_transfer and self.planner) else None
+        if self.kv:
+            self.kv.init_transfers(ctx_tokens=prompt_tokens)
+        # per-device rolling loader state: when next segment's weights land
+        self._loader_free = [0.0] * self.D
+        self._load_done = [[0.0] * (self.n_seg + 1) for _ in range(self.D)]
+
+    # -- per-device per-segment quantities -------------------------------------
+    def _layers_seg(self, i: int) -> float:
+        d = self.plan.devices[i]
+        return d.resident_total / self.n_seg + d.off_layers_seg()
+
+    def _comp_seg_mb(self, i: int, ctx: int) -> float:
+        """One micro-batch's compute for device i's slice of one segment."""
+        w = dataclasses.replace(self.w, ctx=max(ctx, 1))
+        return self._layers_seg(i) * w.comp_layer(self.env.devices[i])
+
+    def _load_bytes_seg(self, i: int) -> float:
+        d = self.plan.devices[i]
+        extra = self.planner.extra_load_bytes_seg(i) if self.planner else 0.0
+        if self.full_layer_fallback and self.planner:
+            st = self.planner.states[i]
+            if st.alpha or st.beta:    # ablation: whole layers, not blocks
+                extra = max(st.alpha, st.beta) * self.w.l_size
+        total = d.load_bytes_seg(self.w) + extra
+        if self.kv:
+            # delegated KV frees memory that pins blocks resident (Eq. 8 win)
+            total = max(total - self.kv.load_reduction_bytes_seg(i), 0.0)
+        return total
+
+    def _hop_time(self, bw: float) -> float:
+        return self.w.h_size / bw + self.env.net_latency
+
+    # -- one auto-regressive step ----------------------------------------------
+    def _step(self, t0: float, ctx: int, bw: float, n_micro: int
+              ) -> Tuple[float, float, float]:
+        """Returns (t_end, load_stall, comm_time)."""
+        D, S = self.D, self.n_seg
+        hop = self._hop_time(bw)
+        dev_free = [t0] * D
+        stall = 0.0
+        comm = 0.0
+        # activation readiness per micro-batch (enters device 0, segment 0)
+        ready = [t0] * n_micro
+        for s in range(S):
+            for i in range(D):
+                w_ready = self._load_done[i][s % S]
+                last_end = dev_free[i]
+                for m in range(n_micro):
+                    start = max(ready[m], dev_free[i], w_ready)
+                    stall += max(w_ready - max(ready[m], dev_free[i]), 0.0)
+                    end = start + self._comp_seg_mb(i, ctx)
+                    dev_free[i] = end
+                    ready[m] = end + hop
+                    comm += hop
+                    last_end = end
+                # interleave: evict seg-s blocks, fetch seg-(s+1) blocks
+                lb = self._load_bytes_seg(i)
+                if lb > 0:
+                    ld_start = max(last_end, self._loader_free[i])
+                    ld_end = ld_start + lb / self.env.devices[i].load_bw
+                    # KV-transfer wire time rides the otherwise-idle network
+                    # inside the uncovered window (Eq. 8 sizes it to fit), so
+                    # it adds no loader-channel latency by construction.
+                    self._loader_free[i] = ld_end
+                    self._load_done[i][(s + 1) % S] = ld_end
+        return max(max(dev_free), max(ready)), stall, comm
+
+    # -- main loop ---------------------------------------------------------------
+    def run(self, n_tokens: int, *, n_micro: int = 1,
+            oot_s_per_token: Optional[float] = None) -> SimResult:
+        traces: List[StepTrace] = []
+        t = 0.0
+        bw = self.env.bw_net
+        for tok in range(n_tokens):
+            ctx = self.prompt + tok
+            if self.bw_schedule:
+                new_bw = self.bw_schedule(tok)
+                if new_bw != bw:
+                    if self.kv:
+                        self.kv.on_bandwidth(new_bw, ctx * n_micro)
+                    bw = new_bw
+            fired = False
+            if self.planner:
+                if self.kv:
+                    self.kv.refresh(ctx)
+                offsets = [self.kv.transferred_tokens(i)
+                           for i in range(self.D)] if self.kv else None
+                fired = bool(self.planner.on_token(ctx, offsets))
+            t_end, stall, comm = self._step(t, ctx, bw, n_micro)
+            traces.append(StepTrace(tok, t_end - t, stall, comm, fired))
+            t = t_end
+            if oot_s_per_token and traces[-1].latency > oot_s_per_token:
+                return SimResult(traces, oot=True,
+                                 reason=f"{traces[-1].latency:.1f}s/token")
+        return SimResult(traces)
+
+
+# ----------------------------------------------------------------------------
+# Convenience wrapper: schedule + simulate LIME
+# ----------------------------------------------------------------------------
+def simulate_lime(env: CostEnv, n_layers: int, n_tokens: int, *,
+                  n_micro: int = 1, n_emp: int = 512, prompt: int = 64,
+                  use_planner: bool = True, use_kv_transfer: bool = True,
+                  planner_full_layer_fallback: bool = False,
+                  bandwidth_schedule=None,
+                  oot_s_per_token: Optional[float] = None) -> SimResult:
+    from repro.core.offline_scheduler import allocate
+    r = allocate(env, n_layers, n_emp=n_emp)
+    if not r.feasible:
+        return SimResult([], oom=True, reason=r.reason)
+    sim = InterleavedPipelineSim(
+        env, r.plan, use_planner=use_planner,
+        use_kv_transfer=use_kv_transfer,
+        planner_full_layer_fallback=planner_full_layer_fallback,
+        bandwidth_schedule=bandwidth_schedule, prompt_tokens=prompt)
+    return sim.run(n_tokens, n_micro=n_micro, oot_s_per_token=oot_s_per_token)

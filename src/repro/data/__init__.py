@@ -1,0 +1,2 @@
+from repro.data.pipeline import SyntheticCorpus, PackedBatches, \
+    make_batches  # noqa: F401

@@ -1,0 +1,113 @@
+"""Flash-decode GQA attention for TPU (Pallas).
+
+One query token per sequence attends to a long KV cache. This is LIME's
+per-autoregressive-step compute hot spot: the op is memory-bound (read the
+whole cache, O(1) FLOPs per byte), so the kernel's job is to stream K/V
+through VMEM exactly once at full HBM bandwidth while the online softmax
+state stays in scratch.
+
+Layout (arranged by ops.py): q (B, KV, G, dh) — the G = H/KV query heads of
+one KV group form the MXU's M dimension; k/v (B, KV, S_c, dh); pos_ids
+(1, S_c) int32. Grid (B, KV, n_kv_blocks); the kv-block dimension is
+sequential, carrying (m, l, acc) scratch like the prefill kernel. Slot
+validity (ring buffers, empty slots, sliding window) is computed from
+pos_ids against the [pos, window] scalar-prefetch operands, so the same
+kernel serves contiguous caches, gemma3 ring buffers, and hymba sliding
+windows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e30
+
+
+def _decode_kernel(scalars_ref,                   # SMEM: [pos, window]
+                   q_ref, k_ref, v_ref, ids_ref,  # VMEM blocks
+                   o_ref,                         # VMEM out
+                   m_ref, l_ref, acc_ref,         # VMEM scratch
+                   *, dh_real: int, block_k: int):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)           # (G, dh)
+    k = k_ref[0, 0].astype(jnp.float32)           # (block_k, dh)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * (dh_real ** -0.5)                     # (G, block_k)
+
+    pos = scalars_ref[0]
+    window = scalars_ref[1]
+    ids = ids_ref[0]                              # (block_k,) int32
+    valid = (ids >= 0) & (ids <= pos) & ((pos - ids) < window)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+    v = v_ref[0, 0].astype(jnp.float32)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(q, k, v, pos_ids, pos, window, *, dh_real: int,
+                            block_k: int = 512, interpret: bool = False):
+    """q: (B, KV, G, dh); k, v: (B, KV, S_c, dh); pos_ids: (1, S_c) int32;
+    pos, window: int32 scalars. S_c % block_k == 0, dh % 128 == 0.
+    Returns (B, KV, G, dh)."""
+    B, KV, G, dh = q.shape
+    S_c = k.shape[2]
+    block_k = min(block_k, S_c)
+    grid = (B, KV, S_c // block_k)
+    scalars = jnp.stack([jnp.asarray(pos, jnp.int32),
+                         jnp.asarray(window, jnp.int32)])
+
+    kernel = functools.partial(_decode_kernel, dh_real=dh_real,
+                               block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, dh),
+                             lambda b, h, ik, sc: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, block_k, dh),
+                             lambda b, h, ik, sc: (b, h, ik, 0)),
+                pl.BlockSpec((1, 1, block_k, dh),
+                             lambda b, h, ik, sc: (b, h, ik, 0)),
+                pl.BlockSpec((1, block_k),
+                             lambda b, h, ik, sc: (0, ik)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, dh),
+                                   lambda b, h, ik, sc: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, dh), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, dh), q.dtype),
+        interpret=interpret,
+    )(scalars, q, k, v, pos_ids)

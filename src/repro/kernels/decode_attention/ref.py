@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the decode-attention kernel.
+
+Single new token attending to a (possibly ring-buffer) KV cache. Slot
+validity comes from ``pos_ids`` (absolute position per slot, -1 = empty);
+this is the semantics `repro.models.attention.decode_attention_ref`
+implements — re-exported here so the kernel package is self-contained.
+"""
+from repro.models.attention import decode_attention_ref  # noqa: F401

@@ -1,0 +1,127 @@
+"""Blocked causal flash attention for TPU (Pallas).
+
+Layout (arranged by ops.py): q (B, H, Sq, dh); k, v (B, KV, Skv, dh), dh
+padded to a multiple of 128 lanes (MXU alignment). Grid is
+``(B, H, n_q_blocks, n_kv_blocks)`` — the last grid dimension is sequential
+on TPU, so the online-softmax running state (m, l, acc) lives in VMEM
+scratch and is carried across kv blocks; output is written on the final kv
+block. GQA is expressed in the k/v index_map (``h // group``), so KV blocks
+are fetched once per q-head group member without reshapes.
+
+The sliding window arrives as a scalar-prefetch operand (SMEM), which lets
+gemma3-style local:global stacks scan one homogeneous layer body over a
+traced per-layer window array.
+
+VMEM working set per program: q/k/v/o blocks + acc =
+(3·block_k + 2·block_q)·dh_p·2B + block_q·dh_p·4B ≈ 0.6 MB at the default
+128/512 blocks with dh_p=128 — well inside 16 MB VMEM, leaving room for the
+compiler's double buffering of the k/v streams.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e30
+
+
+def _flash_kernel(scalars_ref,                       # SMEM: [window]
+                  q_ref, k_ref, v_ref,               # VMEM blocks
+                  o_ref,                             # VMEM out block
+                  m_ref, l_ref, acc_ref,             # VMEM scratch
+                  *, causal: bool, sq_real: int, skv_real: int, dh_real: int,
+                  block_q: int, block_k: int, q_offset: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (block_q, dh)
+    k = k_ref[0, 0].astype(jnp.float32)              # (block_k, dh)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * (dh_real ** -0.5)                        # (block_q, block_k)
+
+    i = q_offset + iq * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    j = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = j < skv_real
+    if causal:
+        mask &= j <= i
+    window = scalars_ref[0]
+    mask &= (i - j) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                              # (block_q, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                           # (block_q, block_k)
+    corr = jnp.exp(m_prev - m_new)                   # (block_q, 1)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+    v = v_ref[0, 0].astype(jnp.float32)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)              # fully-masked (pad) rows
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, window, *, causal: bool,
+                           sq_real: int, skv_real: int, dh_real: int,
+                           block_q: int = 128, block_k: int = 512,
+                           q_offset: int = 0, interpret: bool = False):
+    """q: (B, H, Sq, dh); k, v: (B, KV, Skv, dh); window: (1,) int32.
+
+    Sq % block_q == 0, Skv % block_k == 0, dh % 128 == 0 (ops.py pads).
+    Returns (B, H, Sq, dh) in q.dtype.
+    """
+    B, H, Sq, dh = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    grid = (B, H, Sq // block_q, Skv // block_k)
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, sq_real=sq_real, skv_real=skv_real,
+        dh_real=dh_real, block_q=block_q, block_k=block_k, q_offset=q_offset)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, block_q, dh),
+                             lambda b, h, iq, ik, ws: (b, h, iq, 0)),
+                pl.BlockSpec((1, 1, block_k, dh),
+                             lambda b, h, iq, ik, ws: (b, h // G, ik, 0)),
+                pl.BlockSpec((1, 1, block_k, dh),
+                             lambda b, h, iq, ik, ws: (b, h // G, ik, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, block_q, dh),
+                                   lambda b, h, iq, ik, ws: (b, h, iq, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((block_q, 1), jnp.float32),
+                pltpu.VMEM((block_q, 1), jnp.float32),
+                pltpu.VMEM((block_q, dh), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, dh), q.dtype),
+        interpret=interpret,
+    )(window, q, k, v)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Materializes the full (Sq, Skv) score matrix — only usable at test sizes.
+Semantics must match kernel.py exactly: GQA, causal flag, sliding window
+(key j visible to query i iff j <= i and i - j < window), fp32 softmax.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window=None,
+                        q_offset: int = 0):
+    """q: (B, Sq, H, dh); k, v: (B, Skv, KV, dh) -> (B, Sq, H, dh)."""
+    B, Sq, H, dh = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, Sq, KV, G, dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bikgd,bjkd->bkgij", qf, kf) * (dh ** -0.5)
+    i = q_offset + jnp.arange(Sq)[:, None]
+    j = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= j <= i
+    if window is not None:
+        mask &= (i - j) < window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgij,bjkd->bikgd", probs, vf)
+    return out.reshape(B, Sq, H, dh).astype(q.dtype)

@@ -1,0 +1,3 @@
+"""Pure-jnp oracle for the RWKV6 WKV kernel — re-export of the model's
+sequential `lax.scan` recurrence (single source of truth for semantics)."""
+from repro.models.ssm import wkv_scan_ref  # noqa: F401

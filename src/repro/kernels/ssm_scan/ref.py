@@ -1,0 +1,3 @@
+"""Pure-jnp oracle for the selective-scan kernel — re-export of the model's
+`lax.scan` recurrence (single source of truth for semantics)."""
+from repro.models.ssm import ssm_scan_ref  # noqa: F401

@@ -1,0 +1,3 @@
+# NOTE: do not import dryrun here — it sets XLA_FLAGS at import time and
+# must only be imported as the entry module (python -m repro.launch.dryrun).
+from repro.launch.mesh import make_production_mesh, make_test_mesh  # noqa: F401

@@ -1,0 +1,418 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init); do not move them. This module is the only place that
+forces 512 host devices — tests and benches see the real device count.
+
+For each assigned architecture and input shape this builds the appropriate
+step on the production mesh, lowers with ShapeDtypeStruct stand-ins (no
+allocation), compiles, and reports:
+
+  * memory_analysis()  — per-device bytes (proves the sharding fits HBM)
+  * cost_analysis()    — FLOPs / bytes for EXPERIMENTS.md §Roofline
+  * collective bytes   — parsed from the compiled HLO (§Roofline's third
+    term; cost_analysis does not cover collectives)
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+"""
+import argparse
+import functools
+import json
+import math
+import re
+import sys
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import Family, InputShape, ModelConfig
+from repro.configs.registry import (ASSIGNED_ARCHS, INPUT_SHAPES, get_config,
+                                    dryrun_pairs)
+from repro.core.engine import InterleavedEngine, UniformPlan
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models import spec as pspec
+from repro.optim.adamw import AdamW, constant_schedule
+from repro.sharding import rules
+from repro.training.trainer import make_train_step, zero1_sharding
+
+
+# ============================================================================
+# input_specs: ShapeDtypeStruct stand-ins per (arch, shape)
+# ============================================================================
+def batch_sharding(mesh: Mesh, all_axes: bool = False) -> NamedSharding:
+    names = ("pod", "data", "model") if all_axes else ("pod", "data")
+    axes = tuple(a for a in names if a in mesh.shape)
+    ba = axes if len(axes) > 1 else (axes[0] if axes else None)
+    return NamedSharding(mesh, P(ba))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                all_axes_batch: bool = False) -> Dict[str, Any]:
+    """Training / prefill batch stand-ins, batch-sharded over (pod, data)."""
+    B, S = shape.global_batch, shape.seq_len
+    bs = batch_sharding(mesh, all_axes_batch)
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=bs)
+    out = {"tokens": tok}
+    if shape.mode == "train":
+        out["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=bs)
+        out["mask"] = jax.ShapeDtypeStruct((B, S), jnp.float32, sharding=bs)
+    if cfg.frontend_tokens:
+        # modality stub (assignment carve-out): precomputed patch/frame
+        # embeddings of the right shape stand in for the ViT/conv frontend
+        fe = jax.ShapeDtypeStruct((B, cfg.frontend_tokens, cfg.d_model),
+                                  jnp.bfloat16, sharding=bs)
+        if cfg.family == Family.ENCDEC:
+            out["frontend_embeds"] = fe
+        else:
+            out["frontend_embeds"] = fe
+    return out
+
+
+def param_specs_sharded(cfg: ModelConfig, mesh: Mesh):
+    specs = M.build_param_specs(cfg)
+    sh = rules.shardings(specs, mesh)
+    shapes = pspec.shapes(specs)
+    return jax.tree.map(
+        lambda s, n: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=n),
+        shapes, sh, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+# ============================================================================
+# per-shape step builders (lowered, no execution)
+# ============================================================================
+def lower_train(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                impl: str = "ref", strategy: str = "tp"):
+    """strategy='tp': Megatron weights over 'model' + DP over (pod, data).
+    strategy='dp': weights replicated over 'model', batch over ALL axes —
+    wins for small models where TP allreduces dominate (§Perf/H2)."""
+    model_par = mesh.shape.get("model", 1)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    if strategy == "tp" and cfg.total_params() * 2 / model_par > 8e9:
+        strategy = "fsdp"      # weights exceed the HBM budget model-sharded
+    # AdamW fp32 state = 12 B/param; above ~6 GB/chip use Adafactor
+    factored = cfg.total_params() * 12 / n_dev > 6e9
+    if factored:
+        from repro.optim.adafactor import Adafactor
+        opt = Adafactor(lr=constant_schedule(1e-4))
+    else:
+        opt = AdamW(lr=constant_schedule(1e-4))
+    step = make_train_step(cfg, opt, mesh, impl=impl, remat=True)
+    rl = {"dp": rules.dp_rules(), "fsdp": rules.fsdp_rules()}.get(strategy)
+    specs = M.build_param_specs(cfg)
+    sh = rules.shardings(specs, mesh, rl)
+    shapes = pspec.shapes(specs)
+    is_sds = lambda x: isinstance(x, jax.ShapeDtypeStruct)
+    p_specs = jax.tree.map(
+        lambda s, n: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=n),
+        shapes, sh, is_leaf=is_sds)
+    if factored:
+        opt_specs = opt.state_specs(p_specs)
+    else:
+        z1 = zero1_sharding(None, mesh,
+                            over=("pod", "data", "model")
+                            if strategy == "dp" else ("pod", "data"))
+        m_specs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.float32,
+                sharding=z1(s.sharding, s.shape)),
+            p_specs, is_leaf=is_sds)
+        from repro.optim.adamw import AdamWState
+        opt_specs = AdamWState(jax.ShapeDtypeStruct((), jnp.int32),
+                               m_specs, m_specs, m_specs)
+    batch = input_specs(cfg, shape, mesh,
+                        all_axes_batch=(strategy == "dp"))
+    fn = jax.jit(step, donate_argnums=(0, 1))
+    if strategy == "dp":
+        with M.batch_axes(("pod", "data", "model")):
+            return fn.lower(p_specs, opt_specs, batch)
+    if strategy == "fsdp":
+        with M.seq_shard(True):     # remat carries must also shard (kimi)
+            return fn.lower(p_specs, opt_specs, batch)
+    return fn.lower(p_specs, opt_specs, batch)
+
+
+def lower_prefill(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                  impl: str = "ref"):
+    """Prefill: fill the KV cache for `seq_len` under GSPMD batch+tensor
+    sharding (the engine serves decode; prefill is throughput-bound and
+    data-parallel like training)."""
+    B, S = shape.global_batch, shape.seq_len
+    model_par = mesh.shape.get("model", 1)
+    fsdp = cfg.total_params() * 2 / model_par > 8e9
+    specs_ = M.build_param_specs(cfg)
+    sh_ = rules.shardings(specs_, mesh,
+                          rules.fsdp_rules() if fsdp else None)
+    is_sds = lambda x: isinstance(x, jax.ShapeDtypeStruct)
+    p_specs = jax.tree.map(
+        lambda s, n: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=n),
+        pspec.shapes(specs_), sh_, is_leaf=is_sds)
+    batch = input_specs(cfg, shape, mesh)
+    bs = batch_sharding(mesh)
+    cs = M.cache_specs(cfg, B, S)
+    cache_specs = {}
+    for k, v in cs.items():
+        parts = [None] * len(v.shape)
+        if v.shape and v.shape[0] == cfg.n_layers and len(v.shape) > 1:
+            parts[1] = bs.spec[0]          # batch dim of (L, B, ...)
+            if len(v.shape) > 2 and "model" in mesh.shape \
+                    and v.shape[2] % mesh.shape["model"] == 0:
+                parts[2] = "model"
+        cache_specs[k] = jax.ShapeDtypeStruct(
+            v.shape, v.dtype, sharding=NamedSharding(mesh, P(*parts)))
+
+    enc = cfg.family == Family.ENCDEC
+
+    def prefill_step(params, tokens, cache, frontend_embeds=None):
+        enc_out = None
+        if enc:
+            enc_out = M.encode(cfg, params, frontend_embeds, mesh=mesh,
+                               impl=impl)
+            cache = M.seed_cross_kv(cfg, params, cache, enc_out)
+            fe = None
+        else:
+            fe = frontend_embeds
+        logits, new_cache = M.prefill(cfg, params, tokens, cache,
+                                      frontend_embeds=fe, mesh=mesh,
+                                      impl=impl, enc_out=enc_out)
+        return logits, new_cache
+
+    args = [p_specs, batch["tokens"], cache_specs]
+    if cfg.frontend_tokens:
+        args.append(batch["frontend_embeds"])
+    if fsdp:
+        with M.seq_shard(True):
+            return jax.jit(prefill_step).lower(*args)
+    return jax.jit(prefill_step).lower(*args)
+
+
+def decode_plan(cfg: ModelConfig, n_stage: int) -> UniformPlan:
+    """Uniform LIME plan for serving: segments chosen so each stage's
+    resident share fits the HBM weight budget, one streamed layer per chunk
+    when offloading is needed (k_off=1 keeps the all_to_all slab ~l_size,
+    mirroring the paper's per-segment single-extra-load property)."""
+    l_bytes = cfg.layer_params() * 2
+    budget = 16e9 * 0.45                  # weights' share of HBM per chip
+    model_par = 16
+    per_stage_resident = cfg.n_layers / n_stage * l_bytes / model_par
+    L_pad = math.ceil(cfg.n_layers / n_stage) * n_stage
+    if per_stage_resident <= budget:
+        return UniformPlan(n_stage, 1, L_pad // n_stage, 0)
+    # offload: choose n_seg = ceil(L / (n_stage * k)) with k = k_res + 1
+    for n_seg in range(2, max(cfg.n_layers // n_stage, 2) + 1):
+        k = math.ceil(cfg.n_layers / (n_seg * n_stage))
+        res_bytes = (k - 1) * n_seg * l_bytes / model_par
+        if res_bytes <= budget and k >= 1:
+            return UniformPlan(n_stage, n_seg, k - 1, 1)
+    return UniformPlan(n_stage, max(cfg.n_layers // n_stage, 2), 0, 1)
+
+
+def lower_decode(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                 impl: str = "ref", fetch_mode: str = "step"):
+    """serve_step: ONE new token against a seq_len KV cache via the LIME
+    interleaved engine ('data' axis = pipeline stages)."""
+    n_stage = mesh.shape["data"]
+    B = shape.global_batch
+    long_mode = shape.name == "long_500k"
+    if B >= n_stage:
+        n_mb, mb = n_stage, B // n_stage      # bursty: fill the pipeline
+    else:
+        n_mb, mb = 1, B                       # sporadic
+    plan = decode_plan(cfg, n_stage)
+    eng = InterleavedEngine(cfg, mesh, plan, n_mb=n_mb, mb=mb,
+                            max_len=shape.seq_len, long_mode=long_mode,
+                            fetch_mode=fetch_mode, impl=impl,
+                            enc_len=cfg.frontend_tokens or 0)
+    return eng.lower_step()
+
+
+def lower_decode_tp(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                    impl: str = "ref"):
+    """Pipeline-free serve_step for sporadic traffic (§Perf/H3): weights
+    sharded over (data x model) jointly, the single micro-batch's decode
+    runs every layer under GSPMD — no pipeline bubbles, at the price of
+    all-gather-style weight traffic per step. Compare with the engine via
+    analytic terms + HLO inventory."""
+    B = shape.global_batch
+    long_mode = shape.name == "long_500k"
+    joint = {k: (tuple(v) + ("data",) if v == ("model",) else v)
+             for k, v in rules.RULES.items()}
+    joint = {k: (("model", "data") if v == ("model", "data") else v)
+             for k, v in joint.items()}
+    specs = M.build_param_specs(cfg)
+    sh = rules.shardings(specs, mesh, joint)
+    shapes = pspec.shapes(specs)
+    is_sds = lambda x: isinstance(x, jax.ShapeDtypeStruct)
+    p_specs = jax.tree.map(
+        lambda s, n: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=n),
+        shapes, sh, is_leaf=is_sds)
+    cs = M.cache_specs(cfg, B, shape.seq_len, long_mode)
+    cache_specs = {}
+    for k, v in cs.items():
+        parts = [None] * len(v.shape)
+        if v.shape and v.shape[0] == cfg.n_layers and len(v.shape) > 2:
+            if v.shape[2] % mesh.shape.get("model", 1) == 0:
+                parts[2] = "model"      # seq dim of (L, B, S, ...)
+        cache_specs[k] = jax.ShapeDtypeStruct(
+            v.shape, v.dtype, sharding=NamedSharding(mesh, P(*parts)))
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+
+    def serve_step(params, cache, token):
+        return M.decode_step(cfg, params, cache, token, mesh=None,
+                             impl=impl, long_mode=long_mode)
+
+    return jax.jit(serve_step).lower(p_specs, cache_specs, tok)
+
+
+def lower_pair(arch: str, shape_name: str, mesh: Mesh, impl: str = "ref",
+               fetch_mode: str = "step", strategy: str = "default"):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if shape.mode == "train":
+        return lower_train(cfg, shape, mesh, impl,
+                           strategy="dp" if strategy == "dp" else "tp")
+    if shape.mode == "prefill":
+        return lower_prefill(cfg, shape, mesh, impl)
+    if strategy == "tp_serve":
+        return lower_decode_tp(cfg, shape, mesh, impl)
+    return lower_decode(cfg, shape, mesh, impl, fetch_mode)
+
+
+# ============================================================================
+# analysis: analytic roofline (primary) + HLO evidence (cross-check)
+# ============================================================================
+def analytic_terms(arch: str, shape_name: str, mesh: Mesh,
+                   fetch_mode: str = "step"):
+    from repro.launch import roofline as RL
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ms = dict(mesh.shape)
+    if shape.mode == "train":
+        return RL.train_terms(cfg, shape, ms)
+    if shape.mode == "prefill":
+        return RL.prefill_terms(cfg, shape, ms)
+    plan = decode_plan(cfg, ms.get("data", 1))
+    B = shape.global_batch
+    n_stage = ms.get("data", 1)
+    n_mb, mb = (n_stage, B // n_stage) if B >= n_stage else (1, B)
+    return RL.decode_terms(cfg, shape, ms, n_seg=plan.n_seg,
+                           k_res=plan.k_res, k_off=plan.k_off,
+                           n_mb=n_mb, mb=mb, fetch_mode=fetch_mode,
+                           long_mode=shape.name == "long_500k")
+
+
+def analyze(lowered, compiled, n_devices: int) -> Dict[str, Any]:
+    from repro.launch import roofline as RL
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    inv = RL.collective_inventory(hlo)
+    return {
+        "hlo_flops_scan_once": float(cost.get("flops", 0.0)),
+        "hlo_bytes_scan_once": float(cost.get("bytes accessed", 0.0)),
+        "hlo_collectives": {"bytes": inv["bytes"], "counts": inv["counts"],
+                            "total_bytes": inv["total_bytes"]},
+        "memory_per_device": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+        },
+    }
+
+
+def model_flops_per_step(cfg: ModelConfig, shape: InputShape) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE); decode steps use D = batch."""
+    n = cfg.active_params()
+    if shape.mode == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.mode == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # one token per sequence
+
+
+# ============================================================================
+# CLI
+# ============================================================================
+def run_one(arch: str, shape_name: str, mesh: Mesh, *, impl: str = "ref",
+            fetch_mode: str = "step", verbose: bool = True) -> Dict[str, Any]:
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    lowered = lower_pair(arch, shape_name, mesh, impl, fetch_mode)
+    compiled = lowered.compile()
+    info = analyze(lowered, compiled, n_dev)
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    terms = analytic_terms(arch, shape_name, mesh, fetch_mode)
+    info["terms"] = terms.as_dict()
+    mf = model_flops_per_step(cfg, shape)
+    info["model_flops"] = mf
+    info["useful_ratio"] = mf / terms.flops if terms.flops else 0.0
+    info["arch"], info["shape"] = arch, shape_name
+    info["mesh"] = dict(mesh.shape)
+    if verbose:
+        t = info["terms"]
+        print(f"[{arch} x {shape_name} x "
+              f"{'x'.join(map(str, mesh.shape.values()))}] "
+              f"compute={t['compute_s']*1e3:.2f}ms "
+              f"memory={t['memory_s']*1e3:.2f}ms "
+              f"collective={t['collective_s']*1e3:.2f}ms "
+              f"dominant={t['dominant']} useful={info['useful_ratio']:.2f}")
+        print(f"  mem/device: "
+              f"peak={info['memory_per_device']['peak_bytes']/1e9:.2f}GB "
+              f"args={info['memory_per_device']['argument_bytes']/1e9:.2f}GB "
+              f"| hlo collectives: "
+              f"{ {k: round(v/1e6) for k, v in info['hlo_collectives']['bytes'].items() if v} } MB")
+    return info
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--impl", default="ref")
+    ap.add_argument("--fetch-mode", default="step",
+                    choices=("step", "slot"),
+                    help="'slot' = paper-literal per-segment streaming "
+                         "(perf baseline); 'step' = per-step restore")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    results = []
+    if args.all:
+        for arch, shape_name, runnable, skip in dryrun_pairs():
+            if not runnable:
+                print(f"[{arch} x {shape_name}] SKIP: {skip}")
+                results.append({"arch": arch, "shape": shape_name,
+                                "skip": skip})
+                continue
+            try:
+                results.append(run_one(arch, shape_name, mesh,
+                                       impl=args.impl,
+                                       fetch_mode=args.fetch_mode))
+            except Exception as e:
+                print(f"[{arch} x {shape_name}] FAIL: {type(e).__name__}: {e}")
+                results.append({"arch": arch, "shape": shape_name,
+                                "error": f"{type(e).__name__}: {e}"})
+    else:
+        results.append(run_one(args.arch, args.shape, mesh, impl=args.impl,
+                               fetch_mode=args.fetch_mode))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+    bad = [r for r in results if "error" in r]
+    print(f"\n{len(results) - len(bad)}/{len(results)} pairs OK")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

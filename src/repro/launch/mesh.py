@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (dryrun.py sets XLA_FLAGS before any jax init).
+
+Mesh semantics (DESIGN.md §5):
+  single-pod: (data=16, model=16)        — 256 chips (one v5e pod)
+  multi-pod:  (pod=2, data=16, model=16) — 512 chips
+
+'data'  — batch parallel for train/prefill; doubles as the LIME pipeline
+          *stage* axis in the serving engine.
+'model' — tensor parallel (heads / ffn / experts / vocab).
+'pod'   — batch/replica parallel across pods (bursty request replicas).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_stage: int = 4, n_model: int = 2):
+    """Small mesh for CPU tests (requires forced host device count)."""
+    return jax.make_mesh((n_stage, n_model), ("data", "model"))

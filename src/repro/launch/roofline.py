@@ -1,0 +1,287 @@
+"""Roofline term derivation (EXPERIMENTS.md §Roofline).
+
+Two complementary sources, cross-checked:
+
+1. **Analytic workload model** — FLOPs / HBM bytes / wire bytes per step
+   from the config + input shape + mesh + engine plan. Primary numbers for
+   the roofline table: XLA's `cost_analysis()` visits `while` bodies once
+   (verified experimentally — see EXPERIMENTS.md §Dry-run), so raw HLO
+   counts understate scanned work by ~L×.
+
+2. **HLO collective inventory** — every collective op parsed out of
+   `compiled.as_text()`, multiplied by its enclosing while-loop's trip
+   count (extracted from the loop condition). This grounds the analytic
+   wire-byte model in the actually-compiled program and catches GSPMD
+   surprises (redundant all-gathers, accidental replication).
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI with ~4 usable links per chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional
+
+from repro.configs.base import AttnKind, Family, InputShape, ModelConfig
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW_PER_LINK = 50e9
+ICI_LINKS = 4
+DTYPE = 2
+
+
+# ============================================================================
+# analytic workload model
+# ============================================================================
+@dataclasses.dataclass
+class Terms:
+    flops: float                # global FLOPs per step
+    hbm_bytes: float            # global HBM traffic per step
+    wire_bytes_per_dev: float   # per-device ICI traffic per step
+    n_devices: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / (self.n_devices * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / (self.n_devices * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        return self.wire_bytes_per_dev / (ICI_BW_PER_LINK * ICI_LINKS)
+
+    @property
+    def dominant(self) -> str:
+        d = {"compute": self.compute_s, "memory": self.memory_s,
+             "collective": self.collective_s}
+        return max(d, key=d.get)
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
+                "wire_bytes_per_dev": self.wire_bytes_per_dev,
+                "compute_s": self.compute_s, "memory_s": self.memory_s,
+                "collective_s": self.collective_s,
+                "dominant": self.dominant}
+
+
+def _attn_span(cfg: ModelConfig, ctx: int, long_mode: bool) -> float:
+    if cfg.attn_kind == AttnKind.NONE:
+        return 0.0
+    if cfg.attn_kind == AttnKind.SLIDING or \
+            (cfg.attn_kind == AttnKind.LOCAL_GLOBAL and long_mode):
+        return min(ctx, cfg.window_size)
+    if cfg.attn_kind == AttnKind.LOCAL_GLOBAL:
+        r = cfg.local_global_ratio
+        return (r * min(ctx, cfg.window_size) + ctx) / (r + 1)
+    return ctx
+
+
+def train_terms(cfg: ModelConfig, shape: InputShape,
+                mesh_shape: Dict[str, int], strategy: str = "tp") -> Terms:
+    n_dev = 1
+    for v in mesh_shape.values():
+        n_dev *= v
+    B, S = shape.global_batch, shape.seq_len
+    tokens = B * S
+    N = cfg.active_params()
+    # 6ND dense/MoE-active + attention quadratic term (fwd 2x + bwd 4x,
+    # causal halves the square) + remat recompute (~1 extra fwd = +2ND)
+    span = _attn_span(cfg, S, False)
+    attn = 6.0 * cfg.n_layers * B * S * span * 0.5 \
+        * cfg.n_heads * (cfg.head_dim or 0) * 2
+    flops = 6.0 * N * tokens + attn
+    flops_remat = (2.0 * N * tokens + attn / 3.0)
+    flops += flops_remat
+    p_bytes = cfg.total_params() * DTYPE
+    # fwd read + bwd read + grad write (bf16) + AdamW: read m,v,master +
+    # write m,v,master,params (fp32 moments)
+    hbm = 3 * p_bytes + (3 + 4) * cfg.total_params() * 4
+    # activations: remat stores layer-boundary carries, recompute re-reads
+    hbm += 4.0 * tokens * cfg.d_model * DTYPE * cfg.n_layers
+    # wire: grad all-reduce over (pod, data) = 2 x sharded-param bytes;
+    # per-layer activation collectives for tensor parallel: 2 ar of (B,S,D)
+    # per layer forward + backward
+    data_par = mesh_shape.get("data", 1) * mesh_shape.get("pod", 1)
+    model_par = mesh_shape.get("model", 1)
+    wire = 0.0
+    if strategy == "dp":
+        # weights replicated: grad all-reduce over all n_dev chips; no
+        # per-layer tensor-parallel traffic at all
+        wire += 2.0 * p_bytes * (n_dev - 1) / n_dev
+    else:
+        if data_par > 1:
+            wire += 2.0 * p_bytes / model_par * (data_par - 1) / data_par
+        if model_par > 1:
+            act = tokens / data_par * cfg.d_model * DTYPE
+            wire += cfg.n_layers * 2 * 3 * act * 2 * (model_par - 1) \
+                / model_par
+    return Terms(flops, hbm, wire, n_dev)
+
+
+def prefill_terms(cfg: ModelConfig, shape: InputShape,
+                  mesh_shape: Dict[str, int]) -> Terms:
+    n_dev = 1
+    for v in mesh_shape.values():
+        n_dev *= v
+    B, S = shape.global_batch, shape.seq_len
+    tokens = B * S
+    N = cfg.active_params()
+    span = _attn_span(cfg, S, False)
+    attn = 2.0 * cfg.n_layers * B * S * span * 0.5 \
+        * cfg.n_heads * (cfg.head_dim or 0) * 2
+    flops = 2.0 * N * tokens + attn
+    p_bytes = cfg.total_params() * DTYPE
+    kv_write = cfg.n_layers * tokens * 2 * cfg.n_kv_heads \
+        * (cfg.head_dim or 0) * DTYPE
+    hbm = p_bytes + kv_write + 2.0 * tokens * cfg.d_model * DTYPE \
+        * cfg.n_layers
+    data_par = mesh_shape.get("data", 1) * mesh_shape.get("pod", 1)
+    model_par = mesh_shape.get("model", 1)
+    wire = 0.0
+    if model_par > 1:
+        act = tokens / data_par * cfg.d_model * DTYPE
+        wire += cfg.n_layers * 2 * act * 2 * (model_par - 1) / model_par
+    return Terms(flops, hbm, wire, n_dev)
+
+
+def decode_terms(cfg: ModelConfig, shape: InputShape,
+                 mesh_shape: Dict[str, int], *, n_seg: int, k_res: int,
+                 k_off: int, n_mb: int, mb: int,
+                 fetch_mode: str = "step",
+                 long_mode: bool = False) -> Terms:
+    """LIME engine serve_step: one token for `n_mb x mb` sequences.
+
+    fetch_mode mirrors the engine schedule: 'slot' re-fetches the active
+    chunk's streamed layers every pipeline slot (paper-literal per-segment
+    streaming, n_slots fetches); 'step' restores each stage's streamed
+    layers once per decode step (n_seg slabs) — the §Perf optimized path.
+    """
+    n_dev = 1
+    for v in mesh_shape.values():
+        n_dev *= v
+    n_stage = mesh_shape.get("data", 1)
+    model_par = mesh_shape.get("model", 1)
+    pod = mesh_shape.get("pod", 1)
+    B = shape.global_batch
+    ctx = shape.seq_len
+    N = cfg.active_params()
+    k = k_res + k_off
+    n_chunks = n_seg * n_stage
+    n_slots = n_chunks + n_mb - 1
+    span = _attn_span(cfg, ctx, long_mode)
+
+    flops = 2.0 * N * B
+    flops += 2.0 * cfg.n_layers * B * span * cfg.n_heads \
+        * (cfg.head_dim or 0) * 2
+    # bubble waste: invalid slots still compute (masked commit)
+    occupancy = (n_chunks * n_mb) / (n_slots * n_stage)
+    flops = flops / max(occupancy, 1e-6) * 1.0
+
+    l_bytes = cfg.layer_params() * DTYPE
+    kv_read = cfg.n_layers * B * span * 2 * cfg.n_kv_heads \
+        * (cfg.head_dim or 0) * DTYPE
+    # weights touched once per micro-batch group per chunk
+    w_traffic = cfg.n_layers * l_bytes * max(n_mb // n_stage, 1)
+    hbm = w_traffic + kv_read * 1.0 + B * cfg.d_model * DTYPE * cfg.n_layers
+    # streamed weights also land in HBM on the consuming stage
+    fetches = {"slot": n_slots, "chunk": n_chunks, "step": n_seg}[fetch_mode]
+    stream_bytes_dev = k_off * l_bytes / model_par * (n_stage - 1) / n_stage
+    hbm += stream_bytes_dev * fetches * n_stage
+
+    wire = stream_bytes_dev * fetches                 # all_to_all, per dev
+    wire += n_slots * mb * cfg.d_model * DTYPE        # ppermute ring
+    PV = ((cfg.vocab_size + 255) // 256) * 256
+    wire += 2.0 * n_mb * mb * PV * 4 / model_par      # logits psum
+    if model_par > 1:                                  # TP activation ar
+        wire += cfg.n_layers / n_stage * 2 * mb * cfg.d_model * DTYPE \
+            * 2 * (model_par - 1) / model_par * n_mb
+    return Terms(flops, hbm, wire, n_dev)
+
+
+# ============================================================================
+# HLO collective inventory with while-trip multiplication
+# ============================================================================
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|pred|f64|s64)"
+                       r"\[([0-9,]*)\]")
+_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4, "s8": 1,
+          "u8": 1, "pred": 1, "f64": 8, "s64": 8}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[m.group(1)]
+    return total
+
+
+def _split_computations(hlo: str) -> Dict[str, str]:
+    comps: Dict[str, str] = {}
+    cur = None
+    buf: list = []
+    for line in hlo.splitlines():
+        m = re.match(r"^(%?[\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*{\s*$", line) \
+            or re.match(r"^ENTRY\s+(%?[\w\.\-]+)", line)
+        if "{" in line and ("->" in line or line.startswith("ENTRY")):
+            if cur:
+                comps[cur] = "\n".join(buf)
+            name = line.split("(")[0].strip().lstrip("%")
+            name = name.replace("ENTRY", "").strip().lstrip("%")
+            cur = name
+            buf = [line]
+        else:
+            buf.append(line)
+    if cur:
+        comps[cur] = "\n".join(buf)
+    return comps
+
+
+def _trip_count(cond_body: str) -> int:
+    """Heuristic: largest integer constant compared in the loop condition."""
+    consts = [int(x) for x in re.findall(r"constant\((\d+)\)", cond_body)]
+    return max(consts) if consts else 1
+
+
+def collective_inventory(hlo: str) -> Dict[str, Any]:
+    comps = _split_computations(hlo)
+    # map body computation -> trip count via while ops
+    trips: Dict[str, int] = {}
+    for cname, text in comps.items():
+        for m in re.finditer(
+                r"while\([^)]*\),\s*condition=%?([\w\.\-]+),\s*"
+                r"body=%?([\w\.\-]+)", text):
+            cond, body = m.group(1), m.group(2)
+            trips[body] = _trip_count(comps.get(cond, ""))
+
+    # nested loops: body computations containing while ops multiply
+    def effective_trip(cname: str, seen=()) -> int:
+        t = trips.get(cname, 1)
+        return t
+
+    per_op = {c: 0.0 for c in COLLECTIVES}
+    counts = {c: 0 for c in COLLECTIVES}
+    for cname, text in comps.items():
+        mult = effective_trip(cname)
+        # account nesting one level: if this comp is a body nested inside
+        # another body, multiply (walk callers)
+        for line in text.splitlines():
+            ls = line.strip()
+            for c in COLLECTIVES:
+                if re.search(rf"= [^=]*\b{c}(-start)?\(", ls):
+                    lhs = ls.split("=")[1]
+                    lhs = lhs.split(c)[0]
+                    per_op[c] += _shape_bytes(lhs) * mult
+                    counts[c] += 1
+                    break
+    total = sum(per_op.values())
+    return {"bytes": per_op, "counts": counts, "total_bytes": total,
+            "loop_trips": trips}

@@ -1,0 +1,52 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --steps 200 \
+      --batch 8 --seq 256 [--smoke] [--ckpt out/]
+
+On this CPU container use --smoke (reduced config); on a pod the full config
+with the production mesh applies the same code path.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config, get_smoke_config
+from repro.data import make_batches
+from repro.training import Trainer
+from repro.checkpoint import save
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mesh", action="store_true",
+                    help="build the production mesh (needs >=256 devices)")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh()
+    tr = Trainer(cfg, mesh=mesh, peak_lr=args.lr,
+                 warmup=max(args.steps // 10, 5), total_steps=args.steps)
+    params, opt_state = tr.init()
+    batches = make_batches(cfg.vocab_size, args.batch, args.seq)
+    params, opt_state, hist = tr.fit(params, opt_state, batches, args.steps)
+    if args.ckpt:
+        save(args.ckpt, params, step=args.steps)
+        print(f"saved checkpoint to {args.ckpt}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,803 @@
+"""Unified model builder for all assigned architecture families.
+
+One :class:`~repro.configs.base.ModelConfig` fully determines
+
+* ``build_param_specs(cfg)``   — ParamSpec pytree (layers scan-stacked)
+* ``forward(cfg, params, tokens, ...)``          — train / prefill pass
+* ``decode_step(cfg, params, cache, token, ...)``— one autoregressive token
+* ``init_cache / cache_specs`` — per-family decode state
+
+Layers are stacked on a leading ``L`` axis and executed with ``lax.scan`` so
+HLO size (and hence 512-device dry-run compile time) is O(1) in depth. Families
+with a leading dense layer before MoE layers (deepseek-moe, kimi-k2) run two
+scans. gemma3's 5:1 local:global pattern is a per-layer traced ``window``
+array fed to one homogeneous scan body.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import AttnKind, Family, ModelConfig
+from repro.models import spec as pspec
+from repro.models.attention import (attention_specs, attn_forward, attn_decode,
+                                    cross_attn_decode)
+from repro.models.modules import (embed, embed_specs, mlp, mlp_specs, rms_norm,
+                                  rms_norm_spec, round_up, unembed,
+                                  cross_entropy_loss)
+from repro.models.moe import moe_specs, moe_forward
+from repro.models.ssm import (rwkv_timemix_specs, rwkv_channelmix_specs,
+                              rwkv_timemix, rwkv_channelmix,
+                              mamba_head_specs, mamba_forward, _causal_conv,
+                              ssm_scan_ref)
+
+GLOBAL_WINDOW = jnp.int32(2 ** 30)   # sentinel: effectively unwindowed
+
+
+# ============================================================================
+# Param specs
+# ============================================================================
+def _dense_layer_specs(cfg: ModelConfig) -> dict:
+    s = {
+        "ln1": rms_norm_spec(cfg.d_model),
+        "attn": attention_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.head_dim),
+    }
+    if not cfg.parallel_block:
+        s["ln2"] = rms_norm_spec(cfg.d_model)
+    s["mlp"] = mlp_specs(cfg.d_model, cfg.d_ff)
+    return s
+
+
+def _moe_layer_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": rms_norm_spec(cfg.d_model),
+        "attn": attention_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.head_dim),
+        "ln2": rms_norm_spec(cfg.d_model),
+        "moe": moe_specs(cfg.d_model, cfg.n_experts, cfg.moe_d_ff or cfg.d_ff,
+                         cfg.n_shared_experts),
+    }
+
+
+def _rwkv_layer_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": rms_norm_spec(cfg.d_model),
+        "tm": rwkv_timemix_specs(cfg.d_model, cfg.n_heads, cfg.head_dim),
+        "ln2": rms_norm_spec(cfg.d_model),
+        "cm": rwkv_channelmix_specs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def _hymba_layer_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": rms_norm_spec(cfg.d_model),
+        "attn": attention_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.head_dim),
+        "mamba": mamba_head_specs(cfg.d_model, cfg.ssm_heads, cfg.head_dim,
+                                  cfg.ssm_state_size),
+        "ln_attn": rms_norm_spec(cfg.n_heads * cfg.head_dim),
+        "ln_ssm": rms_norm_spec(cfg.ssm_heads * cfg.head_dim),
+        "w_fuse": pspec.ParamSpec((cfg.n_heads * cfg.head_dim, cfg.d_model),
+                                  ("ffn", "embed")),
+        "ln2": rms_norm_spec(cfg.d_model),
+        "mlp": mlp_specs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def _encdec_decoder_layer_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": rms_norm_spec(cfg.d_model),
+        "attn": attention_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.head_dim),
+        "ln_x": rms_norm_spec(cfg.d_model),
+        "xattn": attention_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.head_dim),
+        "ln2": rms_norm_spec(cfg.d_model),
+        "mlp": mlp_specs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def _layer_specs(cfg: ModelConfig) -> dict:
+    if cfg.family in (Family.DENSE, Family.VLM):
+        return _dense_layer_specs(cfg)
+    if cfg.family == Family.MOE:
+        return _moe_layer_specs(cfg)
+    if cfg.family == Family.SSM:
+        return _rwkv_layer_specs(cfg)
+    if cfg.family == Family.HYBRID:
+        return _hymba_layer_specs(cfg)
+    if cfg.family == Family.ENCDEC:
+        return _encdec_decoder_layer_specs(cfg)
+    raise ValueError(cfg.family)
+
+
+def build_param_specs(cfg: ModelConfig) -> dict:
+    specs: Dict[str, Any] = dict(embed_specs(cfg.vocab_size, cfg.d_model,
+                                             cfg.tie_embeddings))
+    specs["final_norm"] = rms_norm_spec(cfg.d_model)
+    n_dense_first = cfg.first_dense_layers if cfg.family == Family.MOE else 0
+    if n_dense_first:
+        specs["dense_layers"] = pspec.stack(_dense_layer_specs(cfg),
+                                            n_dense_first, "layer")
+    specs["layers"] = pspec.stack(_layer_specs(cfg),
+                                  cfg.n_layers - n_dense_first, "layer")
+    if cfg.family == Family.ENCDEC:
+        specs["encoder"] = pspec.stack(_dense_layer_specs(cfg),
+                                       cfg.n_encoder_layers, "layer")
+        specs["enc_final_norm"] = rms_norm_spec(cfg.d_model)
+    return specs
+
+
+def init_params(cfg: ModelConfig, key):
+    return pspec.init(key, build_param_specs(cfg))
+
+
+def param_shapes(cfg: ModelConfig):
+    return pspec.shapes(build_param_specs(cfg))
+
+
+# ============================================================================
+# Per-layer windows (gemma3 local:global; hymba sliding; others full)
+# ============================================================================
+def layer_windows(cfg: ModelConfig, n_layers: int, long_mode: bool = False,
+                  offset: int = 0):
+    """(n_layers,) int32 visibility window per layer."""
+    if cfg.attn_kind == AttnKind.FULL:
+        return jnp.full((n_layers,), GLOBAL_WINDOW)
+    if cfg.attn_kind == AttnKind.SLIDING:
+        return jnp.full((n_layers,), jnp.int32(cfg.window_size))
+    if cfg.attn_kind == AttnKind.LOCAL_GLOBAL:
+        idx = jnp.arange(n_layers) + offset     # offset may be traced
+        is_global = (idx + 1) % (cfg.local_global_ratio + 1) == 0
+        if long_mode:  # long-context serving: cap globals to the window too
+            return jnp.full((n_layers,), jnp.int32(cfg.window_size))
+        return jnp.where(is_global, GLOBAL_WINDOW, jnp.int32(cfg.window_size))
+    return jnp.full((n_layers,), GLOBAL_WINDOW)
+
+
+def kv_cache_len(cfg: ModelConfig, max_len: int, long_mode: bool = False) -> int:
+    if cfg.attn_kind == AttnKind.NONE:
+        return 0
+    if cfg.attn_kind == AttnKind.SLIDING:
+        return min(max_len, cfg.window_size)
+    if cfg.attn_kind == AttnKind.LOCAL_GLOBAL and long_mode:
+        return min(max_len, cfg.window_size)
+    return max_len
+
+
+# ============================================================================
+# Layer bodies (sequence / train / prefill)
+# ============================================================================
+def _seq_body(cfg: ModelConfig, mesh, impl: str, moe: bool):
+    """Returns scan body: (carry, (params_l, window_l)) -> (carry, kv_l)."""
+    bc = _bconstraint(mesh)
+
+    def body(carry, xs):
+        x, aux = carry
+        p, window = xs
+        if cfg.family == Family.SSM:
+            B, S, D = x.shape
+            st = jnp.zeros((B, cfg.n_heads, cfg.head_dim, cfg.head_dim),
+                           jnp.float32)
+            last = jnp.zeros((B, D), x.dtype)
+            h, _, _ = rwkv_timemix(p["tm"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                                   last, st, n_heads=cfg.n_heads,
+                                   head_dim=cfg.head_dim,
+                                   norm_eps=cfg.norm_eps, impl=impl)
+            x = x + h
+            h, _ = rwkv_channelmix(p["cm"], rms_norm(x, p["ln2"], cfg.norm_eps),
+                                   jnp.zeros((B, D), x.dtype))
+            x = bc(x + h)
+            return (x, aux), jnp.zeros((0,), x.dtype)
+
+        if cfg.family == Family.HYBRID:
+            B, S, D = x.shape
+            xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+            a_out, _ = attn_forward(p["attn"], xn, rope_theta=cfg.rope_theta,
+                                    causal=True, window=window, impl=impl)
+            conv0 = jnp.zeros((B, p["mamba"]["conv"].shape[0] - 1,
+                               cfg.ssm_heads * cfg.head_dim), x.dtype)
+            ssm0 = jnp.zeros((B, cfg.ssm_heads, cfg.ssm_state_size,
+                              cfg.head_dim), jnp.float32)
+            m_out, _, _ = mamba_forward(p["mamba"], xn, conv0, ssm0,
+                                        n_heads=cfg.ssm_heads,
+                                        head_dim=cfg.head_dim,
+                                        ssm_size=cfg.ssm_state_size,
+                                        norm_eps=cfg.norm_eps, impl=impl)
+            fused = 0.5 * (rms_norm(a_out, p["ln_attn"], cfg.norm_eps)
+                           + rms_norm(m_out, p["ln_ssm"], cfg.norm_eps))
+            x = x + fused @ p["w_fuse"]
+            x = x + mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+            return (bc(x), aux), jnp.zeros((0,), x.dtype)
+
+        # attention families
+        xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+        a_out, (k, v) = attn_forward(p["attn"], xn, rope_theta=cfg.rope_theta,
+                                     causal=True, window=window, impl=impl)
+        if cfg.parallel_block:  # stablelm-2: attn and MLP share the pre-norm
+            x = x + a_out + mlp(p["mlp"], xn)
+        elif moe and "moe" in p:
+            x = x + a_out
+            m_out, l_aux = moe_forward(p["moe"],
+                                       rms_norm(x, p["ln2"], cfg.norm_eps),
+                                       cfg=cfg, mesh=mesh)
+            x = x + m_out
+            aux = aux + l_aux
+        else:
+            x = x + a_out
+            x = x + mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+        return (bc(x), aux), (k, v)
+
+    return body
+
+
+_BATCH_AXES = ("pod", "data")     # activation batch-sharding axes
+
+
+@contextlib.contextmanager
+def batch_axes(axes):
+    """Trace-time override of the activation batch axes. The DP-only
+    training strategy (small models: replicate weights, shard batch over
+    *all* mesh axes) wraps `.lower()` in `batch_axes(("pod","data","model"))`
+    — see launch/dryrun.lower_train and EXPERIMENTS.md §Perf/H2."""
+    global _BATCH_AXES
+    prev = _BATCH_AXES
+    _BATCH_AXES = tuple(axes)
+    try:
+        yield
+    finally:
+        _BATCH_AXES = prev
+
+
+_SEQ_SHARD = False                # sequence parallelism for activations
+
+
+@contextlib.contextmanager
+def seq_shard(enabled: bool = True):
+    """Trace-time toggle: shard the sequence dim of (B, S, D) activations
+    over 'model' (Megatron sequence parallelism). Needed when remat layer
+    carries exceed HBM (kimi-k2 train: 940 MB x 61 layers per chip without
+    it — EXPERIMENTS.md §Dry-run)."""
+    global _SEQ_SHARD
+    prev = _SEQ_SHARD
+    _SEQ_SHARD = enabled
+    try:
+        yield
+    finally:
+        _SEQ_SHARD = prev
+
+
+def _bconstraint(mesh, batch_axes=None):
+    if mesh is None:
+        return lambda x: x
+    seq_model = _SEQ_SHARD and "model" in mesh.shape
+    axes = tuple(a for a in (batch_axes or _BATCH_AXES)
+                 if a in mesh.shape)
+    ba = axes if len(axes) > 1 else (axes[0] if axes else None)
+
+    def f(x):
+        sh = x.shape
+        n = 1
+        for a in (axes or ()):
+            n *= mesh.shape[a]
+        if ba is None or sh[0] % max(n, 1):
+            return x
+        rest = [None] * (len(sh) - 1)
+        if seq_model and len(sh) == 3 \
+                and sh[1] % mesh.shape["model"] == 0:
+            rest[0] = "model"
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(mesh, P(ba, *rest)))
+    return f
+
+
+def _scan_layers(body, x, stacked_params, windows, remat: bool,
+                 collect_kv: bool = False):
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), kv = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                (stacked_params, windows))
+    return x, aux, (kv if collect_kv else None)
+
+
+# ============================================================================
+# Forward (train / prefill)
+# ============================================================================
+def forward(cfg: ModelConfig, params, tokens, *, frontend_embeds=None,
+            mesh=None, impl: str = "ref", remat: bool = False,
+            return_hidden: bool = False, enc_out=None):
+    """tokens: (B, S_text) int32. Returns hidden (B, S, D) if return_hidden
+    else logits (B, S, padded_vocab); plus aux loss scalar."""
+    x = embed(params, tokens).astype(jnp.bfloat16)
+    if frontend_embeds is not None:
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+    bc = _bconstraint(mesh)
+    x = bc(x)
+
+    aux_total = jnp.float32(0.0)
+    off = 0
+    if "dense_layers" in params:
+        nd = jax.tree.leaves(params["dense_layers"])[0].shape[0]
+        body = _seq_body(cfg, mesh, impl, moe=False)
+        x, aux, _ = _scan_layers(body, x, params["dense_layers"],
+                                 layer_windows(cfg, nd, offset=0), remat)
+        aux_total += aux
+        off = nd
+
+    if cfg.family == Family.ENCDEC:
+        assert enc_out is not None, "encdec forward needs encoder output"
+        body = _encdec_seq_body(cfg, mesh, impl)
+        if remat:
+            body = jax.checkpoint(body)
+        nl = cfg.n_layers
+        (x, _), _ = jax.lax.scan(
+            body, (x, enc_out.astype(x.dtype)),
+            (params["layers"], layer_windows(cfg, nl)))
+    else:
+        nl = jax.tree.leaves(params["layers"])[0].shape[0]
+        body = _seq_body(cfg, mesh, impl, moe=(cfg.family == Family.MOE))
+        x, aux, _ = _scan_layers(body, x, params["layers"],
+                                 layer_windows(cfg, nl, offset=off), remat)
+        aux_total += aux
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, aux_total
+    return unembed(params, x), aux_total
+
+
+def _encdec_seq_body(cfg: ModelConfig, mesh, impl):
+    bc = _bconstraint(mesh)
+
+    def body(carry, xs):
+        x, enc = carry
+        p, window = xs
+        xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+        a, _ = attn_forward(p["attn"], xn, rope_theta=cfg.rope_theta,
+                            causal=True, window=window, impl=impl)
+        x = x + a
+        xn = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        a, _ = attn_forward(p["xattn"], xn, rope_theta=cfg.rope_theta,
+                            causal=False, window=None, kv=(enc, enc), impl=impl)
+        x = x + a
+        x = x + mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+        return (bc(x), enc), jnp.zeros((0,), x.dtype)
+
+    return body
+
+
+def encode(cfg: ModelConfig, params, frame_embeds, *, mesh=None,
+           impl: str = "ref"):
+    """Encoder pass for ENCDEC (bidirectional). frame_embeds: (B, S_enc, D)."""
+    x = frame_embeds.astype(jnp.bfloat16)
+    bc = _bconstraint(mesh)
+
+    def enc_body(carry, xs):
+        x, aux = carry
+        p, window = xs
+        xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+        a, _ = attn_forward(p["attn"], xn, rope_theta=cfg.rope_theta,
+                            causal=False, window=None, impl=impl)
+        x = x + a
+        x = x + mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+        return (bc(x), aux), jnp.zeros((0,), x.dtype)
+
+    nl = cfg.n_encoder_layers
+    (x, _), _ = jax.lax.scan(enc_body, (x, jnp.float32(0.0)),
+                             (params["encoder"], layer_windows(cfg, nl)))
+    return rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+# ============================================================================
+# KV / state cache
+# ============================================================================
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                long_mode: bool = False, enc_len: int = 0) -> dict:
+    """ParamSpec tree for the decode cache (dry-run uses shapes, engine inits)."""
+    L = cfg.n_layers
+    out: Dict[str, Any] = {
+        "pos": pspec.ParamSpec((), (), jnp.int32, init="zeros"),
+    }
+    S_c = kv_cache_len(cfg, max_len, long_mode)
+    if S_c:
+        kv = (L, batch, S_c, cfg.n_kv_heads, cfg.head_dim)
+        ax = ("layer", "batch", "kv_seq", "kv_heads", None)
+        out["k"] = pspec.ParamSpec(kv, ax, jnp.bfloat16, init="zeros")
+        out["v"] = pspec.ParamSpec(kv, ax, jnp.bfloat16, init="zeros")
+        out["pos_ids"] = pspec.ParamSpec((S_c,), (None,), jnp.int32,
+                                         init="zeros")
+    if cfg.family == Family.SSM:
+        out["rwkv_state"] = pspec.ParamSpec(
+            (L, batch, cfg.n_heads, cfg.head_dim, cfg.head_dim),
+            ("layer", "batch", None, None, None), jnp.float32, init="zeros")
+        out["last_tm"] = pspec.ParamSpec((L, batch, cfg.d_model),
+                                         ("layer", "batch", "embed"),
+                                         jnp.bfloat16, init="zeros")
+        out["last_cm"] = pspec.ParamSpec((L, batch, cfg.d_model),
+                                         ("layer", "batch", "embed"),
+                                         jnp.bfloat16, init="zeros")
+    if cfg.family == Family.HYBRID:
+        d_inner = cfg.ssm_heads * cfg.head_dim
+        out["conv_state"] = pspec.ParamSpec((L, batch, 3, d_inner),
+                                            ("layer", "batch", None, "ffn"),
+                                            jnp.bfloat16, init="zeros")
+        out["ssm_state"] = pspec.ParamSpec(
+            (L, batch, cfg.ssm_heads, cfg.ssm_state_size, cfg.head_dim),
+            ("layer", "batch", None, None, None), jnp.float32, init="zeros")
+    if cfg.family == Family.ENCDEC and enc_len:
+        xkv = (L, batch, enc_len, cfg.n_kv_heads, cfg.head_dim)
+        ax = ("layer", "batch", None, "kv_heads", None)
+        out["xk"] = pspec.ParamSpec(xkv, ax, jnp.bfloat16, init="zeros")
+        out["xv"] = pspec.ParamSpec(xkv, ax, jnp.bfloat16, init="zeros")
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               long_mode: bool = False, enc_out=None) -> dict:
+    enc_len = 0 if enc_out is None else enc_out.shape[1]
+    cache = pspec.init(jax.random.PRNGKey(0),
+                       cache_specs(cfg, batch, max_len, long_mode, enc_len))
+    if "pos_ids" in cache:
+        cache["pos_ids"] = cache["pos_ids"] - 1  # -1 = empty slot
+    return cache
+
+
+def seed_cross_kv(cfg: ModelConfig, params, cache, enc_out):
+    wk = params["layers"]["xattn"]["wk"]        # (L, D, KV, dh)
+    wv = params["layers"]["xattn"]["wv"]
+    cache = dict(cache)
+    cache.pop("_needs_xkv", None)
+    cache["xk"] = jnp.einsum("bsd,ldhk->lbshk", enc_out.astype(wk.dtype), wk)
+    cache["xv"] = jnp.einsum("bsd,ldhk->lbshk", enc_out.astype(wv.dtype), wv)
+    return cache
+
+
+# ============================================================================
+# Decode step
+# ============================================================================
+def _decode_body(cfg: ModelConfig, mesh, impl: str, moe: bool, pos, slot,
+                 pos_ids, enc_len: int = 0, moe_mode: str = "shard_map"):
+    bc = _bconstraint(mesh) if moe_mode != "auto" else (lambda x: x)
+
+    def body(carry, xs):
+        x, aux = carry
+        p = xs["p"]
+        window = xs["window"]
+        ys = {}
+        if cfg.family == Family.SSM:
+            B = x.shape[0]
+            xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+            h, new_last_tm, new_state = rwkv_timemix(
+                p["tm"], xn, xs["last_tm"], xs["rwkv_state"],
+                n_heads=cfg.n_heads, head_dim=cfg.head_dim,
+                norm_eps=cfg.norm_eps, impl="ref")
+            x = x + h
+            xn = rms_norm(x, p["ln2"], cfg.norm_eps)
+            h, new_last_cm = rwkv_channelmix(p["cm"], xn, xs["last_cm"])
+            x = bc(x + h)
+            ys = {"rwkv_state": new_state, "last_tm": new_last_tm,
+                  "last_cm": new_last_cm}
+            return (x, aux), ys
+
+        xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+        a_out, ck, cv = attn_decode(p["attn"], xn, xs["k"], xs["v"], pos_ids,
+                                    pos, slot, rope_theta=cfg.rope_theta,
+                                    window=window, impl=impl)
+        ys["k"], ys["v"] = ck, cv
+
+        if cfg.family == Family.HYBRID:
+            m_out, new_conv, new_ssm = _mamba_decode(cfg, p["mamba"], xn,
+                                                     xs["conv_state"],
+                                                     xs["ssm_state"])
+            ys["conv_state"], ys["ssm_state"] = new_conv, new_ssm
+            fused = 0.5 * (rms_norm(a_out, p["ln_attn"], cfg.norm_eps)
+                           + rms_norm(m_out, p["ln_ssm"], cfg.norm_eps))
+            x = x + fused @ p["w_fuse"]
+            x = x + mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+            return (bc(x), aux), ys
+
+        if cfg.family == Family.ENCDEC:
+            x = x + a_out
+            xn = rms_norm(x, p["ln_x"], cfg.norm_eps)
+            x = x + cross_attn_decode(p["xattn"], xn, xs["xk"], xs["xv"],
+                                      enc_len, impl=impl)
+            x = x + mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+            return (bc(x), aux), ys
+
+        if cfg.parallel_block:
+            x = x + a_out + mlp(p["mlp"], xn)
+        elif moe and "moe" in p:
+            x = x + a_out
+            m_out, l_aux = moe_forward(p["moe"],
+                                       rms_norm(x, p["ln2"], cfg.norm_eps),
+                                       cfg=cfg, mesh=mesh, mode=moe_mode)
+            x = x + m_out
+            aux = aux + l_aux
+        else:
+            x = x + a_out
+            x = x + mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+        return (bc(x), aux), ys
+
+    return body
+
+
+def _mamba_decode(cfg, p, x, conv_state, ssm_state):
+    xi = x @ p["in_x"]
+    z = x @ p["in_z"]
+    xi, conv_state = _causal_conv(xi, p["conv"], conv_state.astype(x.dtype))
+    xi = jax.nn.silu(xi)
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    Bm, Cm = x @ p["w_B"], x @ p["w_C"]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    B, S, _ = x.shape
+    xh = xi.reshape(B, S, cfg.ssm_heads, cfg.head_dim)
+    y, ssm_state = ssm_scan_ref(xh, dt, Bm, Cm, A, ssm_state)
+    y = y + p["D_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(B, S, -1).astype(x.dtype)
+    y = rms_norm(y, p["ln"], cfg.norm_eps) * jax.nn.silu(z)
+    return y, conv_state, ssm_state
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, *, mesh=None,
+                impl: str = "ref", long_mode: bool = False, enc_len: int = 0):
+    """token: (B, 1) int32 -> (logits (B, 1, PV), new_cache)."""
+    pos = cache["pos"]
+    x = embed(params, token).astype(jnp.bfloat16)
+    x = _bconstraint(mesh)(x)
+
+    new_cache = dict(cache)
+    slot = jnp.int32(0)
+    pos_ids = cache.get("pos_ids")
+    if pos_ids is not None:
+        S_c = pos_ids.shape[0]
+        # while pos < S_c, pos % S_c == pos, so one rule covers contiguous
+        # caches and ring buffers alike
+        slot = pos % S_c
+        pos_ids = jax.lax.dynamic_update_slice(
+            pos_ids, pos[None].astype(pos_ids.dtype), (slot,))
+        new_cache["pos_ids"] = pos_ids
+
+    aux = jnp.float32(0.0)
+    off = 0
+    per_layer_keys = [k for k in ("k", "v", "rwkv_state", "last_tm", "last_cm",
+                                  "conv_state", "ssm_state", "xk", "xv")
+                      if k in cache]
+
+    def run_stack(x, aux, stack_params, n_layers, layer_off, moe):
+        body = _decode_body(cfg, mesh, impl, moe, pos, slot, pos_ids,
+                            enc_len=enc_len)
+        xs = {"p": stack_params,
+              "window": layer_windows(cfg, n_layers, long_mode, layer_off)}
+        for kkey in per_layer_keys:
+            xs[kkey] = jax.lax.dynamic_slice_in_dim(cache[kkey], layer_off,
+                                                    n_layers, axis=0)
+        (x, aux), ys = jax.lax.scan(body, (x, aux), xs)
+        return x, aux, ys
+
+    if "dense_layers" in params:
+        nd = jax.tree.leaves(params["dense_layers"])[0].shape[0]
+        x, aux, ys = run_stack(x, aux, params["dense_layers"], nd, 0, False)
+        for kkey in ys:
+            new_cache[kkey] = jax.lax.dynamic_update_slice_in_dim(
+                new_cache[kkey], ys[kkey], 0, axis=0)
+        off = nd
+
+    nl = cfg.n_layers - off
+    x, aux, ys = run_stack(x, aux, params["layers"], nl, off,
+                           cfg.family == Family.MOE)
+    for kkey in ys:
+        new_cache[kkey] = jax.lax.dynamic_update_slice_in_dim(
+            new_cache[kkey], ys[kkey], off, axis=0)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, x)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+# ============================================================================
+# Prefill (seeds the cache by running the sequence path, then filling KV)
+# ============================================================================
+def prefill(cfg: ModelConfig, params, tokens, cache, *, frontend_embeds=None,
+            mesh=None, impl: str = "ref", enc_out=None):
+    """Run the full prompt, fill the cache, return last-token logits + cache.
+
+    For simplicity and losslessness this re-runs the sequence path and captures
+    per-layer K/V (full-attention archs) or final states (SSM archs) — one pass,
+    same FLOPs as a fused implementation.
+    """
+    B, S = tokens.shape[0], tokens.shape[1]
+    if frontend_embeds is not None:
+        S = S + frontend_embeds.shape[1]
+
+    if cfg.family == Family.ENCDEC and enc_out is not None:
+        cache = seed_cross_kv(cfg, params, cache, enc_out)
+
+    # run through decode_step token by token would be O(S^2); instead run the
+    # sequence body capturing kv — implemented for attention archs:
+    if "k" in cache and cfg.family not in (Family.SSM,):
+        x = embed(params, tokens).astype(jnp.bfloat16)
+        if frontend_embeds is not None:
+            x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+        x = _bconstraint(mesh)(x)
+        aux = jnp.float32(0.0)
+        off = 0
+        S_c = cache["k"].shape[2]
+
+        def capture_stack(x, aux, stack_params, n_layers, layer_off, moe):
+            if cfg.family == Family.ENCDEC:
+                body = _encdec_prefill_body(cfg, mesh, impl, cache, layer_off)
+                (x, aux), kv = jax.lax.scan(
+                    body, (x, aux),
+                    {"p": stack_params,
+                     "window": layer_windows(cfg, n_layers, False, layer_off),
+                     "xk": cache["xk"], "xv": cache["xv"]})
+            else:
+                body = _seq_body(cfg, mesh, impl, moe)
+                (x, aux), kv = jax.lax.scan(
+                    body, (x, aux),
+                    (stack_params,
+                     layer_windows(cfg, n_layers, False, layer_off)))
+            return x, aux, kv
+
+        new_cache = dict(cache)
+        stacks = []
+        if "dense_layers" in params:
+            nd = jax.tree.leaves(params["dense_layers"])[0].shape[0]
+            stacks.append((params["dense_layers"], nd, 0, False))
+            stacks.append((params["layers"], cfg.n_layers - nd, nd,
+                           cfg.family == Family.MOE))
+        else:
+            stacks.append((params["layers"], cfg.n_layers, 0,
+                           cfg.family == Family.MOE))
+        for sp, n, o, moe in stacks:
+            x, aux, kv = capture_stack(x, aux, sp, n, o, moe)
+            if kv is not None and isinstance(kv, tuple) and kv[0].ndim == 5:
+                k_all, v_all = kv  # (n, B, S, KV, dh)
+                if S <= S_c:  # contiguous fill at slots [0, S)
+                    new_cache["k"] = jax.lax.dynamic_update_slice(
+                        new_cache["k"], k_all.astype(new_cache["k"].dtype),
+                        (o, 0, 0, 0, 0))
+                    new_cache["v"] = jax.lax.dynamic_update_slice(
+                        new_cache["v"], v_all.astype(new_cache["v"].dtype),
+                        (o, 0, 0, 0, 0))
+                else:  # ring: keep the last S_c tokens; slot(p) = p mod S_c
+                    last_k = k_all[:, :, S - S_c:S]
+                    last_v = v_all[:, :, S - S_c:S]
+                    sh = S % S_c
+                    new_cache["k"] = jax.lax.dynamic_update_slice(
+                        new_cache["k"],
+                        jnp.roll(last_k, sh, axis=2).astype(new_cache["k"].dtype),
+                        (o, 0, 0, 0, 0))
+                    new_cache["v"] = jax.lax.dynamic_update_slice(
+                        new_cache["v"],
+                        jnp.roll(last_v, sh, axis=2).astype(new_cache["v"].dtype),
+                        (o, 0, 0, 0, 0))
+        if "pos_ids" in new_cache:
+            if S <= S_c:
+                ids = jnp.where(jnp.arange(S_c) < S, jnp.arange(S_c), -1)
+            else:
+                ids = jnp.roll(jnp.arange(S - S_c, S), S % S_c)
+            new_cache["pos_ids"] = ids.astype(jnp.int32)
+        new_cache["pos"] = jnp.int32(S)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params, x[:, -1:])
+        return logits, new_cache
+
+    if cfg.family == Family.SSM:
+        return _ssm_prefill(cfg, params, tokens, cache, mesh=mesh, impl=impl)
+
+    # fallback: stream through decode_step token by token
+    def step(cache, tok):
+        logits, cache = decode_step(cfg, params, cache, tok[:, None],
+                                    mesh=mesh, impl=impl)
+        return cache, logits[:, 0]
+
+    cache, logits_all = jax.lax.scan(step, cache, jnp.moveaxis(tokens, 1, 0))
+    return logits_all[-1][:, None], cache
+
+
+def _ssm_prefill(cfg: ModelConfig, params, tokens, cache, *, mesh=None,
+                 impl: str = "ref"):
+    """RWKV prefill: sequence pass per layer capturing final (state, shifts)."""
+    bc = _bconstraint(mesh)
+    x = embed(params, tokens).astype(jnp.bfloat16)
+    x = bc(x)
+    B, S, D = x.shape
+
+    def body(carry, xs):
+        x, aux = carry
+        p = xs["p"]
+        h, last_tm, state = rwkv_timemix(
+            p["tm"], rms_norm(x, p["ln1"], cfg.norm_eps), xs["last_tm"],
+            xs["rwkv_state"], n_heads=cfg.n_heads, head_dim=cfg.head_dim,
+            norm_eps=cfg.norm_eps, impl=impl)
+        x = x + h
+        h, last_cm = rwkv_channelmix(p["cm"], rms_norm(x, p["ln2"], cfg.norm_eps),
+                                     xs["last_cm"])
+        x = bc(x + h)
+        return (x, aux), {"rwkv_state": state, "last_tm": last_tm,
+                          "last_cm": last_cm}
+
+    xs = {"p": params["layers"], "rwkv_state": cache["rwkv_state"],
+          "last_tm": cache["last_tm"], "last_cm": cache["last_cm"]}
+    (x, _), ys = jax.lax.scan(body, (x, jnp.float32(0.0)), xs)
+    new_cache = dict(cache)
+    new_cache.update({k: v.astype(cache[k].dtype) for k, v in ys.items()})
+    new_cache["pos"] = cache["pos"] + S
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params, x[:, -1:]), new_cache
+
+
+def _encdec_prefill_body(cfg, mesh, impl, cache, layer_off):
+    bc = _bconstraint(mesh)
+
+    def body(carry, xs):
+        x, aux = carry
+        p, window = xs["p"], xs["window"]
+        xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+        a, (k, v) = attn_forward(p["attn"], xn, rope_theta=cfg.rope_theta,
+                                 causal=True, window=window, impl=impl)
+        x = x + a
+        xn = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        B, S, D = x.shape
+        enc_len = xs["xk"].shape[1]
+        from repro.models.attention import chunked_attention
+        q = jnp.einsum("bsd,dhk->bshk", xn, p["xattn"]["wq"])
+        out = chunked_attention(q, xs["xk"], xs["xv"], causal=False,
+                                window=None)
+        x = x + jnp.einsum("bshk,hkd->bsd", out, p["xattn"]["wo"])
+        x = x + mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+        return (bc(x), aux), (k, v)
+
+    return body
+
+
+# ============================================================================
+# Loss (chunked CE so (B, S, V) logits are never fully materialized)
+# ============================================================================
+def loss_fn(cfg: ModelConfig, params, batch, *, mesh=None, impl: str = "ref",
+            remat: bool = True, ce_chunk: int = 512):
+    tokens, labels = batch["tokens"], batch["labels"]
+    mask = batch.get("mask")
+    fe = batch.get("frontend_embeds")
+    enc_out = None
+    if cfg.family == Family.ENCDEC:
+        enc_out = encode(cfg, params, batch["frontend_embeds"], mesh=mesh,
+                         impl=impl)
+        fe = None
+    hidden, aux = forward(cfg, params, tokens, frontend_embeds=fe, mesh=mesh,
+                          impl=impl, remat=remat, return_hidden=True,
+                          enc_out=enc_out)
+    if fe is not None:
+        hidden = hidden[:, fe.shape[1]:]  # loss only on text positions
+    B, S, D = hidden.shape
+    C = ce_chunk if S % ce_chunk == 0 else S
+    n_chunks = S // C
+
+    def ce_chunk_fn(carry, idx):
+        h = jax.lax.dynamic_slice_in_dim(hidden, idx * C, C, axis=1)
+        l = jax.lax.dynamic_slice_in_dim(labels, idx * C, C, axis=1)
+        m = None if mask is None else \
+            jax.lax.dynamic_slice_in_dim(mask, idx * C, C, axis=1)
+        logits = unembed(params, h)
+        logits = logits.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        nll = lse - picked
+        if m is not None:
+            return (carry[0] + (nll * m).sum(), carry[1] + m.sum()), None
+        return (carry[0] + nll.sum(), carry[1] + nll.size), None
+
+    (tot, cnt), _ = jax.lax.scan(ce_chunk_fn, (jnp.float32(0.), jnp.float32(0.)),
+                                 jnp.arange(n_chunks))
+    loss = tot / jnp.maximum(cnt, 1.0)
+    return loss + cfg.router_aux_coef * aux, {"ce": loss, "aux": aux}

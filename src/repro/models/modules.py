@@ -1,0 +1,98 @@
+"""Shared neural building blocks (pure-functional JAX)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.spec import ParamSpec
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * (1.0 + scale.astype(dt))
+
+
+def rms_norm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), ("embed",), init="zeros")
+
+
+# ----------------------------------------------------------------------------
+# Rotary position embeddings
+# ----------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, dh/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : dh // 2], x[..., dh // 2:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Gated MLP (SwiGLU)
+# ----------------------------------------------------------------------------
+def mlp_specs(d_model: int, d_ff: int) -> dict:
+    return {
+        "wi_gate": ParamSpec((d_model, d_ff), ("embed", "ffn")),
+        "wi_up": ParamSpec((d_model, d_ff), ("embed", "ffn")),
+        "wo": ParamSpec((d_ff, d_model), ("ffn", "embed")),
+    }
+
+
+def mlp(params, x):
+    g = jax.nn.silu(x @ params["wi_gate"])
+    return (g * (x @ params["wi_up"])) @ params["wo"]
+
+
+# ----------------------------------------------------------------------------
+# Embedding / unembedding
+# ----------------------------------------------------------------------------
+def round_up(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
+
+
+def embed_specs(vocab: int, d_model: int, tie: bool) -> dict:
+    pv = round_up(vocab, 256)   # pad for clean vocab sharding
+    out = {"embedding": ParamSpec((pv, d_model), ("vocab", "embed"), scale=1.0)}
+    if not tie:
+        out["lm_head"] = ParamSpec((d_model, pv), ("embed", "vocab"))
+    return out
+
+
+def embed(params, tokens):
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def unembed(params, x):
+    if "lm_head" in params:
+        return x @ params["lm_head"]
+    # tied embeddings (gemma-style): normalize logit scale by 1/sqrt(d)
+    return (x * (x.shape[-1] ** -0.5)) @ params["embedding"].T
+
+
+def cross_entropy_loss(logits, labels, mask=None, real_vocab: Optional[int] = None):
+    """Stable CE over (possibly padded) vocab; labels < real_vocab always."""
+    logits = logits.astype(jnp.float32)
+    if real_vocab is not None and real_vocab < logits.shape[-1]:
+        pad = logits.shape[-1] - real_vocab
+        neg = jnp.full((pad,), -1e30, logits.dtype)
+        logits = logits + jnp.concatenate(
+            [jnp.zeros((real_vocab,), logits.dtype), neg])
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,70 @@
+"""Parameter specification trees.
+
+A model is declared once as a pytree of :class:`ParamSpec` (shape, dtype,
+logical axes). From that single source of truth we derive:
+
+* ``init(key, specs)``       — materialized parameters (smoke tests, examples)
+* ``shapes(specs)``          — ``jax.ShapeDtypeStruct`` tree (dry-run lowering)
+* ``shardings(specs, mesh)`` — ``NamedSharding`` tree via the logical-axis rules
+  in :mod:`repro.sharding.rules`
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]        # logical axis name per dim (or None)
+    dtype: jnp.dtype = jnp.bfloat16
+    init: str = "normal"                   # normal | zeros | ones | small
+    scale: Optional[float] = None          # override fan-in scaling
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_one(key, s: ParamSpec):
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, s.dtype)
+    if s.init == "ones":
+        return jnp.ones(s.shape, s.dtype)
+    if s.init == "small":
+        return (0.01 * jax.random.normal(key, s.shape, jnp.float32)).astype(s.dtype)
+    fan_in = s.shape[0] if len(s.shape) > 1 else max(s.shape[0], 1)
+    scale = s.scale if s.scale is not None else 1.0 / np.sqrt(fan_in)
+    return (scale * jax.random.normal(key, s.shape, jnp.float32)).astype(s.dtype)
+
+
+def init(key, specs):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [_init_one(k, s) for k, s in zip(keys, leaves)])
+
+
+def shapes(specs):
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                        specs, is_leaf=is_spec)
+
+
+def stack(spec_tree, n: int, axis_name: Optional[str] = None):
+    """Prepend a stacking dim of size n (for scan-over-layers parameter stacks)."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, (axis_name,) + s.axes, s.dtype,
+                            s.init, s.scale),
+        spec_tree, is_leaf=is_spec)
+
+
+def count_params(specs) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(specs, is_leaf=is_spec))

@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamW, AdamWState, cosine_schedule, \
+    constant_schedule, global_norm  # noqa: F401

@@ -1,0 +1,106 @@
+"""Adafactor (Shazeer & Stern, 2018) — factored second moment, no momentum.
+
+The production optimizer for models whose AdamW state can't fit the pod:
+kimi-k2 1T x (fp32 master+mu+nu = 12 B/param) = 12.5 TB, vs a v5e pod's
+4 TB HBM. Adafactor keeps one row vector + one column vector per matrix
+(~1e-3 of AdamW's bytes) at the cost of update-rule fidelity; bf16 params
+take the update directly (no fp32 master), the standard trade at this
+scale. launch/dryrun.lower_train switches to it automatically when the
+AdamW state would exceed the per-chip budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vs: Any          # per-leaf dict: {"vr": ..., "vc": ...} or {"v": ...}
+
+
+def _is_state_leaf(x):
+    return isinstance(x, dict) and ("v" in x or "vr" in x)
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    lr: Callable[[jnp.ndarray], jnp.ndarray]
+    eps: float = 1e-30
+    clip_rms: float = 1.0
+    weight_decay: float = 0.0
+
+    def _init_one(self, p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    def init(self, params) -> AdafactorState:
+        return AdafactorState(jnp.int32(0),
+                              jax.tree.map(self._init_one, params))
+
+    def update(self, grads, state: AdafactorState, params
+               ) -> Tuple[Any, AdafactorState]:
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta2 = 1.0 - t ** -0.8
+        lr = self.lr(step)
+
+        def upd(p, g, v):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + self.eps
+            if "vr" in v:
+                vr = beta2 * v["vr"] + (1 - beta2) * g2.mean(-1)
+                vc = beta2 * v["vc"] + (1 - beta2) * g2.mean(-2)
+                denom = vr[..., :, None] * vc[..., None, :] \
+                    / jnp.maximum(vr.mean(-1)[..., None, None], self.eps)
+                u = gf * jax.lax.rsqrt(denom + self.eps)
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nvv = beta2 * v["v"] + (1 - beta2) * g2
+                u = gf * jax.lax.rsqrt(nvv + self.eps)
+                nv = {"v": nvv}
+            rms = jnp.sqrt(jnp.mean(u * u) + self.eps)
+            u = u / jnp.maximum(1.0, rms / self.clip_rms)
+            new_p = p.astype(jnp.float32) - lr * u
+            if self.weight_decay and p.ndim >= 2:
+                new_p = new_p - lr * self.weight_decay * p.astype(jnp.float32)
+            return new_p.astype(p.dtype), nv
+
+        flat_p, td = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_v = jax.tree.leaves(state.vs, is_leaf=_is_state_leaf)
+        outs = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+        new_params = jax.tree.unflatten(td, [o[0] for o in outs])
+        new_vs = jax.tree.unflatten(td, [o[1] for o in outs])
+        return new_params, AdafactorState(step, new_vs)
+
+    # -- dry-run helpers -------------------------------------------------------
+    def state_specs(self, p_specs):
+        """ShapeDtypeStruct state tree from sharded param specs (vr/vc keep
+        the surviving dims' shardings)."""
+        def one(s):
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            spec = list(s.sharding.spec) if s.sharding else []
+            spec += [None] * (len(s.shape) - len(spec))
+            if len(s.shape) >= 2:
+                return {
+                    "vr": jax.ShapeDtypeStruct(
+                        s.shape[:-1], jnp.float32,
+                        sharding=NamedSharding(s.sharding.mesh,
+                                               P(*spec[:-1]))),
+                    "vc": jax.ShapeDtypeStruct(
+                        s.shape[:-2] + s.shape[-1:], jnp.float32,
+                        sharding=NamedSharding(s.sharding.mesh,
+                                               P(*(spec[:-2] + spec[-1:])))),
+                }
+            return {"v": jax.ShapeDtypeStruct(s.shape, jnp.float32,
+                                              sharding=s.sharding)}
+        is_sds = lambda x: isinstance(x, jax.ShapeDtypeStruct)
+        vs = jax.tree.map(one, p_specs, is_leaf=is_sds)
+        return AdafactorState(jax.ShapeDtypeStruct((), jnp.int32), vs)

@@ -1,0 +1,87 @@
+"""AdamW + schedules, pure-JAX pytrees (no optax dependency).
+
+State is a pytree mirroring params, so ZeRO-1 sharding is just a tree of
+NamedShardings over the `data` axis (launch/train.py builds those).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray          # () int32
+    mu: Any                    # first moment (pytree, fp32)
+    nu: Any                    # second moment (pytree, fp32)
+    master: Any                # fp32 master weights (bf16 params would lose
+                               # sub-ulp updates — standard mixed precision)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray]     # schedule: step -> lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+
+    def init(self, params) -> AdamWState:
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(jnp.int32(0), jax.tree.map(z, params),
+                          jax.tree.map(z, params),
+                          jax.tree.map(lambda p: p.astype(jnp.float32),
+                                       params))
+
+    def update(self, grads, state: AdamWState, params
+               ) -> Tuple[Any, AdamWState]:
+        step = state.step + 1
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.grad_clip:
+            gnorm = global_norm(gf)
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            gf = jax.tree.map(lambda g: g * scale, gf)
+        mu = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g,
+                          state.mu, gf)
+        nu = jax.tree.map(lambda v, g: self.b2 * v + (1 - self.b2) * g * g,
+                          state.nu, gf)
+        c1 = 1 - self.b1 ** step.astype(jnp.float32)
+        c2 = 1 - self.b2 ** step.astype(jnp.float32)
+        lr = self.lr(step)
+
+        def upd(w, m, v):
+            mhat = m / c1
+            vhat = v / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if w.ndim >= 2:                      # decay matrices only
+                delta = delta + self.weight_decay * w
+            return w - lr * delta
+
+        master = jax.tree.map(upd, state.master, mu, nu)
+        new_params = jax.tree.map(lambda w, p: w.astype(p.dtype),
+                                  master, params)
+        return new_params, AdamWState(step, mu, nu, master)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor_frac + (1 - floor_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(s < warmup, warm, cos)
+    return f
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.float32(lr)

@@ -1,0 +1,2 @@
+from repro.serving.server import LimeServer, Request, RequestQueue, \
+    SamplerConfig, sample  # noqa: F401

@@ -1,0 +1,2 @@
+from repro.sharding.rules import RULES, spec_for, shardings, \
+    partition_specs, activation_sharding  # noqa: F401

@@ -1,0 +1,117 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style, divisibility-aware).
+
+Logical axes used throughout the model zoo:
+
+  batch     -> ('pod', 'data')  [or ('data',) single-pod]
+  seq       -> None             (activations: sequence replicated)
+  embed     -> None             (d_model rows of weight matrices)
+  heads     -> 'model'          (attention q heads)
+  kv_heads  -> 'model'          (KV heads; replicated if too few)
+  ffn       -> 'model'          (MLP hidden)
+  expert    -> 'model'          (MoE expert axis)
+  vocab     -> 'model'          (embedding / logits)
+  stage     -> 'data'           (LIME pipeline: the data axis doubles as the
+                                 pipeline-stage axis in the serving engine)
+  layer     -> None             (scan-stacked layer dim)
+
+A rule only applies when the dimension is divisible by the mesh-axis size;
+otherwise the dim is replicated (this is what real launchers do for e.g.
+gemma3's 4 q-heads on a 16-way model axis — the MLP still shards).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import spec as pspec
+
+RULES = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    "embed": (),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ffn": ("model",),
+    "expert": ("model",),
+    "vocab": ("model",),
+    "layer": (),
+    "stage": ("data",),
+    "kv_seq": (),
+}
+
+
+def fsdp_rules():
+    """FSDP: weight matrices additionally sharded over 'data' on their
+    d_model rows. Required when total_params x 2B / |model| exceeds the HBM
+    weight budget (kimi-k2 1T: 2 TB / 16 = 125 GB/chip without it;
+    8 GB/chip with). MoE experts stay sharded over 'model' during compute
+    (token dispatch, not weight gather), so the data-dim psum only touches
+    the expert einsum's contraction."""
+    r = dict(RULES)
+    r["embed"] = ("data",)
+    return r
+
+
+def dp_rules():
+    """Pure data-parallel strategy: weights replicated across 'model',
+    batch sharded over every mesh axis. The right call for small models
+    on a big mesh, where 16-way tensor parallelism's per-layer allreduces
+    dominate the step (EXPERIMENTS.md §Perf/H2)."""
+    r = {k: tuple(a for a in v if a != "model") for k, v in RULES.items()}
+    r["batch"] = ("pod", "data", "model")
+    return r
+
+
+def mesh_axis_size(mesh: Mesh, names: Tuple[str, ...]) -> int:
+    n = 1
+    for name in names:
+        if name in mesh.shape:
+            n *= mesh.shape[name]
+    return n
+
+
+def spec_for(shape, axes, mesh: Mesh, rules=None) -> P:
+    rules = rules or RULES
+    parts = []
+    for dim, ax in zip(shape, axes):
+        if ax is None:
+            parts.append(None)
+            continue
+        mesh_axes = tuple(a for a in rules.get(ax, ()) if a in mesh.shape)
+        size = mesh_axis_size(mesh, mesh_axes)
+        if mesh_axes and size > 1 and dim % size == 0:
+            parts.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+        else:
+            parts.append(None)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def shardings(specs, mesh: Mesh, rules=None):
+    """NamedSharding tree for a ParamSpec tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, spec_for(s.shape, s.axes, mesh, rules)),
+        specs, is_leaf=pspec.is_spec)
+
+
+def partition_specs(specs, mesh: Mesh, rules=None):
+    return jax.tree.map(
+        lambda s: spec_for(s.shape, s.axes, mesh, rules),
+        specs, is_leaf=pspec.is_spec)
+
+
+def activation_sharding(mesh: Mesh, *axes: Optional[str], rules=None):
+    """NamedSharding for an activation given logical axis names (None ok)."""
+    rules = rules or RULES
+    parts = []
+    for ax in axes:
+        if ax is None:
+            parts.append(None)
+        else:
+            mesh_axes = tuple(a for a in rules.get(ax, ()) if a in mesh.shape)
+            parts.append(mesh_axes if len(mesh_axes) > 1 else
+                         (mesh_axes[0] if mesh_axes else None))
+    return NamedSharding(mesh, P(*parts))

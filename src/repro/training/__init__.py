@@ -1,0 +1,2 @@
+from repro.training.trainer import Trainer, make_train_step, \
+    zero1_sharding  # noqa: F401

@@ -1,0 +1,127 @@
+"""Training loop: pjit'd train_step with ZeRO-1 optimizer sharding.
+
+The train_4k dry-run shape lowers exactly this step. Weights follow the
+logical-axis rules (tensor over 'model'); AdamW moments additionally shard
+over ('data',) on their largest divisible dim (ZeRO-1) — on the production
+mesh that divides optimizer memory by 256.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models import spec as pspec
+from repro.optim.adamw import AdamW, AdamWState, cosine_schedule
+from repro.sharding import rules
+
+
+def zero1_sharding(param_shardings, mesh: Mesh, over=("pod", "data")):
+    """Moment sharding: param sharding + shard the largest unsharded dim
+    over `over` when divisible (classic ZeRO-1; pass all axes for the
+    DP-replicated-weights strategy, where moments are the memory bill)."""
+    data = 1
+    for a in over:
+        data *= mesh.shape.get(a, 1)
+    axes = tuple(a for a in over if a in mesh.shape)
+    ax = axes if len(axes) > 1 else (axes[0] if axes else None)
+
+    def one(ns: NamedSharding, shape):
+        spec = list(ns.spec) + [None] * (len(shape) - len(ns.spec))
+        if ax is None or data <= 1:
+            return ns
+        used = {a for s in spec if s
+                for a in (s if isinstance(s, tuple) else (s,))}
+        if used & set(axes):
+            return ns           # FSDP already shards this leaf over data
+        # find largest dim not already sharded, divisible by |data|
+        best, best_dim = None, 0
+        for i, (d, s) in enumerate(zip(shape, spec)):
+            if s is None and d % data == 0 and d > best_dim:
+                best, best_dim = i, d
+        if best is None:
+            return ns
+        spec[best] = ax
+        return NamedSharding(ns.mesh, P(*spec))
+    return one
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW, mesh: Optional[Mesh],
+                    *, impl: str = "ref", remat: bool = True):
+    def train_step(params, opt_state, batch):
+        def loss(p):
+            l, metrics = M.loss_fn(cfg, p, batch, mesh=mesh, impl=impl,
+                                   remat=remat)
+            return l, metrics
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics["loss"] = l
+        return new_params, new_state, metrics
+    return train_step
+
+
+@dataclasses.dataclass
+class Trainer:
+    cfg: ModelConfig
+    mesh: Optional[Mesh] = None
+    peak_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 1000
+    impl: str = "ref"
+    remat: bool = True
+    seed: int = 0
+
+    def __post_init__(self):
+        self.opt = AdamW(lr=cosine_schedule(self.peak_lr, self.warmup,
+                                            self.total_steps))
+        self._step_fn = None
+
+    def init(self):
+        params = M.init_params(self.cfg, jax.random.PRNGKey(self.seed))
+        opt_state = self.opt.init(params)
+        if self.mesh is not None:
+            specs = M.build_param_specs(self.cfg)
+            psh = rules.shardings(specs, self.mesh)
+            params = jax.device_put(params, psh)
+            z1 = zero1_sharding(None, self.mesh)
+            msh = jax.tree.map(
+                lambda ns, p: z1(ns, p.shape),
+                psh, params)
+            opt_state = AdamWState(
+                opt_state.step,
+                jax.device_put(opt_state.mu, msh),
+                jax.device_put(opt_state.nu, msh),
+                jax.device_put(opt_state.master, msh))
+        return params, opt_state
+
+    def compile(self):
+        fn = make_train_step(self.cfg, self.opt, self.mesh, impl=self.impl,
+                             remat=self.remat)
+        self._step_fn = jax.jit(fn, donate_argnums=(0, 1))
+        return self._step_fn
+
+    def fit(self, params, opt_state, batches: Iterator[Dict[str, Any]],
+            steps: int, log_every: int = 10,
+            log_fn: Callable[[str], None] = print):
+        step_fn = self._step_fn or self.compile()
+        history = []
+        t0 = time.time()
+        for i in range(steps):
+            batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            if i % log_every == 0 or i == steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                history.append((i, m))
+                log_fn(f"step {i:5d}  loss {m['loss']:.4f}  "
+                       f"ce {m.get('ce', 0):.4f}  "
+                       f"({(time.time() - t0):.1f}s)")
+        return params, opt_state, history

@@ -1,0 +1,15 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real (1-device) CPU; distributed engine tests re-exec themselves in
+a subprocess with a forced device count (see test_engine.py)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def assert_finite(x, msg=""):
+    assert bool(jnp.isfinite(jnp.asarray(x, jnp.float32)).all()), msg

@@ -1,0 +1,209 @@
+"""LIME engine losslessness: pipelined output == single-device decode.
+
+The engine needs >= 4 devices; this module re-execs its worker in a
+subprocess with a forced host device count (the only sanctioned way to get
+multiple CPU devices without polluting the whole test session's jax state).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+WORKER = r"""
+import jax, jax.numpy as jnp, functools, sys
+jnp.bfloat16 = jnp.float32   # fp32 => losslessness must be (near-)exact
+import repro.core.engine as E
+from repro.configs.base import ModelConfig, Family, AttnKind
+from repro.models import model as M
+
+CASES = {
+ "dense": ModelConfig(name="d", family=Family.DENSE, n_layers=8, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                      head_dim=16),
+ "moe": ModelConfig(name="m", family=Family.MOE, n_layers=8, d_model=64,
+                    n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                    head_dim=16, n_experts=4, top_k=2, n_shared_experts=1,
+                    moe_d_ff=64),
+ "ssm": ModelConfig(name="s", family=Family.SSM, n_layers=8, d_model=64,
+                    n_heads=4, n_kv_heads=0, d_ff=128, vocab_size=256,
+                    head_dim=16, attn_kind=AttnKind.NONE, ssm_state_size=16),
+ "hybrid": ModelConfig(name="h", family=Family.HYBRID, n_layers=8,
+                       d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                       vocab_size=256, head_dim=16,
+                       attn_kind=AttnKind.SLIDING, window_size=16,
+                       ssm_state_size=8, ssm_heads=4),
+ "local_global": ModelConfig(name="lg", family=Family.DENSE, n_layers=8,
+                             d_model=64, n_heads=4, n_kv_heads=1, d_ff=128,
+                             vocab_size=256, head_dim=16,
+                             attn_kind=AttnKind.LOCAL_GLOBAL, window_size=8,
+                             tie_embeddings=True),
+}
+key = jax.random.PRNGKey(0)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+fails = []
+for name, cfg in CASES.items():
+    params = jax.tree.map(
+        lambda a: a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a,
+        M.init_params(cfg, key))
+    ref_step = jax.jit(functools.partial(M.decode_step, cfg))
+    for fm in ("slot", "step"):
+        for n_mb, mb, plan in ((4, 2, E.UniformPlan(4, 2, 0, 1)),
+                               (1, 2, E.UniformPlan(4, 2, 1, 1))):
+            eng = E.InterleavedEngine(cfg, mesh, plan, n_mb=n_mb, mb=mb,
+                                      max_len=32, fetch_mode=fm)
+            state = eng.init_state(params)
+            caches = [jax.tree.map(
+                lambda a: a.astype(jnp.float32)
+                if a.dtype == jnp.bfloat16 else a,
+                M.init_cache(cfg, mb, 32)) for _ in range(n_mb)]
+            tok = jax.random.randint(key, (n_mb * mb, 1), 0, cfg.vocab_size)
+            worst = 0.0
+            for step in range(3):
+                rls = []
+                for m in range(n_mb):
+                    rl, caches[m] = ref_step(params, caches[m],
+                                             tok[m*mb:(m+1)*mb])
+                    rls.append(rl[:, 0].astype(jnp.float32))
+                rl = jnp.concatenate(rls, 0)
+                lg, state = eng.decode_step(state, tok)
+                worst = max(worst, float(jnp.abs(lg - rl).max()))
+                tok = jnp.argmax(rl, -1)[:, None].astype(jnp.int32)
+            ok = worst < 5e-4
+            print(f"{name} fetch={fm} n_mb={n_mb} plan={plan}: "
+                  f"worst={worst:.2e} {'OK' if ok else 'FAIL'}")
+            if not ok:
+                fails.append((name, fm, n_mb, worst))
+sys.exit(1 if fails else 0)
+"""
+
+
+@pytest.mark.slow
+def test_engine_lossless_all_families():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", WORKER], env=env,
+                       capture_output=True, text=True, timeout=900)
+    sys.stdout.write(r.stdout)
+    sys.stderr.write(r.stderr[-2000:])
+    assert r.returncode == 0
+
+
+def test_uniform_plan_arithmetic():
+    from repro.core.engine import UniformPlan
+    p = UniformPlan(n_stage=16, n_seg=2, k_res=1, k_off=1)
+    assert p.k == 2 and p.n_chunks == 32 and p.n_layers == 64
+
+
+def test_stage_shard_dim_prefers_largest_divisible():
+    from repro.core.engine import stage_shard_dim
+    assert stage_shard_dim((384, 7168, 2048), 16) == 1
+    assert stage_shard_dim((25,), 16) is None
+    assert stage_shard_dim((64, 64), 4) == 0
+
+
+MULTIPOD_WORKER = r"""
+import jax, jax.numpy as jnp, functools, sys
+jnp.bfloat16 = jnp.float32
+import repro.core.engine as E
+from repro.configs.base import ModelConfig, Family
+from repro.models import model as M
+
+cfg = ModelConfig(name="t", family=Family.DENSE, n_layers=8, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                  head_dim=16)
+key = jax.random.PRNGKey(0)
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+n_mb, mb = 2, 4       # mb=4 shards over pod=2 (bursty replicas per pod)
+params = jax.tree.map(
+    lambda a: a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a,
+    M.init_params(cfg, key))
+eng = E.InterleavedEngine(cfg, mesh, E.UniformPlan(2, 2, 1, 1),
+                          n_mb=n_mb, mb=mb, max_len=32)
+state = eng.init_state(params)
+ref_step = jax.jit(functools.partial(M.decode_step, cfg))
+caches = [jax.tree.map(
+    lambda a: a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a,
+    M.init_cache(cfg, mb, 32)) for _ in range(n_mb)]
+tok = jax.random.randint(key, (n_mb * mb, 1), 0, cfg.vocab_size)
+worst = 0.0
+for step in range(3):
+    rls = []
+    for m in range(n_mb):
+        rl, caches[m] = ref_step(params, caches[m], tok[m*mb:(m+1)*mb])
+        rls.append(rl[:, 0].astype(jnp.float32))
+    rl = jnp.concatenate(rls, 0)
+    lg, state = eng.decode_step(state, tok)
+    worst = max(worst, float(jnp.abs(lg - rl).max()))
+    tok = jnp.argmax(rl, -1)[:, None].astype(jnp.int32)
+print(f"multipod worst={worst:.2e}")
+sys.exit(0 if worst < 5e-4 else 1)
+"""
+
+
+@pytest.mark.slow
+def test_engine_lossless_multipod():
+    """Decode through the 3-axis production mesh shape (pod, data, model):
+    pod shards the bursty replicas, data is the pipeline, model is TP."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", MULTIPOD_WORKER], env=env,
+                       capture_output=True, text=True, timeout=900)
+    sys.stdout.write(r.stdout)
+    sys.stderr.write(r.stderr[-2000:])
+    assert r.returncode == 0
+
+
+LONGMODE_WORKER = r"""
+import jax, jax.numpy as jnp, functools, sys
+jnp.bfloat16 = jnp.float32
+import repro.core.engine as E
+from repro.configs.base import ModelConfig, Family, AttnKind
+from repro.models import model as M
+
+# sliding-window arch decoding PAST the ring-buffer length (the long_500k
+# serving mode: cache is window-capped, slots wrap via pos_ids)
+cfg = ModelConfig(name="sw", family=Family.DENSE, n_layers=8, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                  head_dim=16, attn_kind=AttnKind.SLIDING, window_size=8)
+key = jax.random.PRNGKey(0)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+n_mb, mb, max_len = 4, 1, 16
+params = jax.tree.map(
+    lambda a: a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a,
+    M.init_params(cfg, key))
+eng = E.InterleavedEngine(cfg, mesh, E.UniformPlan(4, 2, 1, 1), n_mb=n_mb,
+                          mb=mb, max_len=max_len, long_mode=True)
+state = eng.init_state(params)
+caches = [jax.tree.map(
+    lambda a: a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a,
+    M.init_cache(cfg, mb, max_len, long_mode=True)) for _ in range(n_mb)]
+tok = jax.random.randint(key, (n_mb * mb, 1), 0, cfg.vocab_size)
+worst = 0.0
+for step in range(14):        # window S_c = 8: wraps around
+    rls = []
+    for m in range(n_mb):
+        rl, caches[m] = M.decode_step(cfg, params, caches[m],
+                                      tok[m*mb:(m+1)*mb], long_mode=True)
+        rls.append(rl[:, 0].astype(jnp.float32))
+    rl = jnp.concatenate(rls, 0)
+    lg, state = eng.decode_step(state, tok)
+    worst = max(worst, float(jnp.abs(lg - rl).max()))
+    tok = jnp.argmax(rl, -1)[:, None].astype(jnp.int32)
+print(f"ring worst={worst:.2e}")
+sys.exit(0 if worst < 5e-4 else 1)
+"""
+
+
+@pytest.mark.slow
+def test_engine_lossless_ring_buffer_long_mode():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", LONGMODE_WORKER], env=env,
+                       capture_output=True, text=True, timeout=900)
+    sys.stdout.write(r.stdout)
+    sys.stderr.write(r.stderr[-2000:])
+    assert r.returncode == 0

@@ -1,0 +1,211 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles.
+
+All kernels run in interpret mode on CPU (TPU is the compile target; the
+kernel bodies execute in Python here, which checks indexing/masking/online
+softmax semantics exactly).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.rwkv6_scan.ops import wkv
+from repro.kernels.rwkv6_scan.ref import wkv_scan_ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ----------------------------------------------------------------------------
+# flash attention (prefill/train)
+# ----------------------------------------------------------------------------
+FLASH_CASES = [
+    # B, Sq, Skv, H, KV, dh, causal, window, dtype
+    (2, 64, 64, 4, 2, 64, True, None, jnp.bfloat16),
+    (1, 128, 128, 8, 8, 128, True, None, jnp.bfloat16),
+    (2, 64, 64, 4, 1, 32, True, 16, jnp.bfloat16),
+    (1, 100, 100, 4, 2, 80, True, None, jnp.float32),     # unaligned dims
+    (1, 64, 64, 4, 2, 64, False, None, jnp.float32),      # bidirectional
+    (1, 96, 192, 3, 1, 64, True, None, jnp.bfloat16),     # Sq != Skv, odd H
+    (1, 32, 32, 2, 2, 256, True, 8, jnp.float32),         # gemma3 head_dim
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES, ids=lambda c: f"B{c[0]}S{c[1]}x{c[2]}H{c[3]}kv{c[4]}d{c[5]}")
+def test_flash_attention_vs_ref(case):
+    B, Sq, Skv, H, KV, dh, causal, window, dtype = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (B, Sq, H, dh), dtype)
+    k = _rand(ks[1], (B, Skv, KV, dh), dtype)
+    v = _rand(ks[2], (B, Skv, KV, dh), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=32, block_k=32, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 0.04 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+def test_flash_attention_traced_window():
+    """The window arrives via scalar prefetch -> usable under scan/vmap."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(ks[0], (1, 64, 2, 64), jnp.float32)
+    k = _rand(ks[1], (1, 64, 2, 64), jnp.float32)
+    v = _rand(ks[2], (1, 64, 2, 64), jnp.float32)
+
+    def f(w):
+        return flash_attention(q, k, v, causal=True, window=w,
+                               block_q=32, block_k=32, interpret=True)
+    for w in (8, 32):
+        out = jax.jit(f)(jnp.int32(w))
+        ref = flash_attention_ref(q, k, v, causal=True, window=w)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5)
+
+
+# ----------------------------------------------------------------------------
+# decode attention
+# ----------------------------------------------------------------------------
+DECODE_CASES = [
+    # B, S_c, H, KV, dh, pos, window, ring
+    (2, 64, 4, 2, 64, 40, None, False),
+    (1, 128, 8, 1, 128, 127, None, False),
+    (2, 100, 4, 4, 80, 60, 32, False),
+    (1, 64, 4, 2, 64, 200, None, True),
+    (1, 64, 4, 2, 64, 200, 48, True),
+    (3, 96, 6, 2, 32, 10, None, False),     # mostly-empty cache
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES,
+                         ids=lambda c: f"S{c[1]}H{c[2]}kv{c[3]}p{c[5]}{'r' if c[7] else ''}")
+def test_decode_attention_vs_ref(case):
+    B, S_c, H, KV, dh, pos, window, ring = case
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = _rand(ks[0], (B, 1, H, dh), jnp.bfloat16)
+    k = _rand(ks[1], (B, S_c, KV, dh), jnp.bfloat16)
+    v = _rand(ks[2], (B, S_c, KV, dh), jnp.bfloat16)
+    if ring:
+        base = pos - S_c + 1
+        ids = (jnp.arange(S_c) - (base % S_c)) % S_c + base
+    else:
+        ids = jnp.where(jnp.arange(S_c) <= pos, jnp.arange(S_c), -1)
+    ids = ids.astype(jnp.int32)
+    out = decode_attention(q, k, v, ids, jnp.int32(pos), window=window,
+                           block_k=32, interpret=True)
+    ref = decode_attention_ref(q, k, v, ids, jnp.int32(pos), window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=0.04)
+
+
+# ----------------------------------------------------------------------------
+# rwkv6 wkv scan
+# ----------------------------------------------------------------------------
+WKV_CASES = [
+    (2, 32, 4, 64, 8), (1, 64, 2, 32, 16), (2, 50, 3, 64, 16),
+    (1, 16, 1, 128, 16), (1, 7, 2, 64, 4),
+]
+
+
+@pytest.mark.parametrize("case", WKV_CASES,
+                         ids=lambda c: f"B{c[0]}S{c[1]}H{c[2]}d{c[3]}bt{c[4]}")
+def test_wkv_vs_ref(case):
+    B, S, H, dh, bt = case
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    r = jax.random.normal(ks[0], (B, S, H, dh)) * 0.5
+    k = jax.random.normal(ks[1], (B, S, H, dh)) * 0.5
+    v = jax.random.normal(ks[2], (B, S, H, dh)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, dh))) * 0.9 + 0.05
+    u = jax.random.normal(ks[4], (H, dh)) * 0.1
+    s0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    out, sT = wkv(r, k, v, w, u, s0, block_t=bt, interpret=True)
+    ref_o, ref_s = wkv_scan_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_o), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(ref_s), atol=1e-4)
+
+
+def test_wkv_state_chaining():
+    """Splitting a sequence across two kernel calls == one call."""
+    B, S, H, dh = 1, 32, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    r = jax.random.normal(ks[0], (B, S, H, dh)) * 0.5
+    k = jax.random.normal(ks[1], (B, S, H, dh)) * 0.5
+    v = jax.random.normal(ks[2], (B, S, H, dh)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, dh))) * 0.9 + 0.05
+    u = jax.random.normal(ks[4], (H, dh)) * 0.1
+    s0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    full, s_full = wkv(r, k, v, w, u, s0, block_t=8, interpret=True)
+    h1, s1 = wkv(r[:, :16], k[:, :16], v[:, :16], w[:, :16], u, s0,
+                 block_t=8, interpret=True)
+    h2, s2 = wkv(r[:, 16:], k[:, 16:], v[:, 16:], w[:, 16:], u, s1,
+                 block_t=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([h1, h2], 1)),
+                               np.asarray(full), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), atol=1e-4)
+
+
+# ----------------------------------------------------------------------------
+# mamba selective scan (hymba SSM heads)
+# ----------------------------------------------------------------------------
+SSM_CASES = [
+    (2, 32, 4, 64, 16, 8), (1, 50, 2, 32, 8, 16), (1, 16, 3, 128, 16, 16),
+    (2, 24, 5, 64, 16, 8),
+]
+
+
+@pytest.mark.parametrize("case", SSM_CASES,
+                         ids=lambda c: f"B{c[0]}S{c[1]}H{c[2]}d{c[3]}N{c[4]}")
+def test_ssm_scan_vs_ref(case):
+    from repro.kernels.ssm_scan.ops import ssm_scan
+    from repro.kernels.ssm_scan.ref import ssm_scan_ref
+    B, S, H, dh, N, bt = case
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    xh = jax.random.normal(ks[0], (B, S, H, dh)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    Bm = jax.random.normal(ks[2], (B, S, N)) * 0.5
+    Cm = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[0], (H,)) * 0.3)
+    s0 = jnp.zeros((B, H, N, dh), jnp.float32)
+    y, sT = ssm_scan(xh, dt, Bm, Cm, A, s0, block_t=bt, interpret=True)
+    ry, rs = ssm_scan_ref(xh, dt, Bm, Cm, A, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ry), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(rs), atol=1e-4)
+
+
+def test_ssm_scan_state_chaining():
+    from repro.kernels.ssm_scan.ops import ssm_scan
+    B, S, H, dh, N = 1, 32, 2, 64, 8
+    ks = jax.random.split(jax.random.PRNGKey(6), 4)
+    xh = jax.random.normal(ks[0], (B, S, H, dh)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    Bm = jax.random.normal(ks[2], (B, S, N)) * 0.5
+    Cm = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[0], (H,)) * 0.3)
+    s0 = jnp.zeros((B, H, N, dh), jnp.float32)
+    full, s_full = ssm_scan(xh, dt, Bm, Cm, A, s0, block_t=8, interpret=True)
+    h1, s1 = ssm_scan(xh[:, :16], dt[:, :16], Bm[:, :16], Cm[:, :16], A, s0,
+                      block_t=8, interpret=True)
+    h2, s2 = ssm_scan(xh[:, 16:], dt[:, 16:], Bm[:, 16:], Cm[:, 16:], A, s1,
+                      block_t=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([h1, h2], 1)),
+                               np.asarray(full), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), atol=1e-4)
+
+
+def test_hymba_forward_pallas_matches_ref():
+    from repro.configs.registry import get_smoke_config
+    from repro.models import model as M
+    cfg = get_smoke_config("hymba-1.5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg.vocab_size)
+    lr, _ = M.forward(cfg, params, tokens, impl="ref")
+    lp, _ = M.forward(cfg, params, tokens, impl="pallas")
+    err = float(jnp.abs(lr.astype(jnp.float32) - lp.astype(jnp.float32)).max())
+    assert err < 0.15, err

@@ -1,0 +1,111 @@
+"""Discrete-event simulator behaviour: schedule shape, overlap, and the
+paper's qualitative claims (golden-trace style assertions)."""
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.baselines import BASELINES, simulate_pp_offload
+from repro.core.cost_model import CostEnv, Workload
+from repro.core.pipeline_sim import simulate_lime
+from repro.core.profiles import (AGX_ORIN_32, AGX_ORIN_64, XAVIER_NX_16,
+                                 env_E3, env_lowmem, mbps)
+
+CFG70 = get_config("llama3.3-70b")
+CFG13 = get_config("llama2-13b")
+
+
+def test_lime_steady_state_latency_stable():
+    env = CostEnv(env_E3(), mbps(200), Workload(CFG70, mb=1, ctx=1024))
+    r = simulate_lime(env, CFG70.n_layers, 50, n_emp=1024, prompt=1024)
+    lats = [t.latency for t in r.per_token]
+    assert max(lats[5:]) / min(lats[5:]) < 1.5     # no drift without pressure
+
+
+def test_interleave_covers_load_when_idle_sufficient():
+    """With fast loaders + slow compute, offload hides completely."""
+    fat = AGX_ORIN_64.scaled_mem(0.35)
+    env = CostEnv([fat] * 4, mbps(200), Workload(CFG70, mb=1, ctx=512))
+    r = simulate_lime(env, CFG70.n_layers, 20, n_emp=512, prompt=512)
+    assert not r.oom
+    base = CostEnv([AGX_ORIN_64] * 8, mbps(200),
+                   Workload(CFG70, mb=1, ctx=512))
+    rb = simulate_lime(base, CFG70.n_layers, 20, n_emp=512, prompt=512)
+    # offloading ~58 GB/step over ~10 GB/s aggregate NVMe: the interleave
+    # keeps the step under ~9x the all-resident fleet (raw serial load
+    # alone would be ~6.5x the all-resident step before any compute)
+    assert not r.oom
+    assert r.ms_per_token < 9 * rb.ms_per_token
+
+
+def test_bursty_throughput_exceeds_sporadic():
+    env1 = CostEnv(env_E3(), mbps(200), Workload(CFG70, mb=1, ctx=1024))
+    r1 = simulate_lime(env1, CFG70.n_layers, 30, n_micro=1, n_emp=1024,
+                       prompt=1024)
+    env4 = CostEnv(env_E3(), mbps(200),
+                   Workload(CFG70, mb=1, ctx=1024, n_micro=4))
+    r4 = simulate_lime(env4, CFG70.n_layers, 30, n_micro=4, n_emp=1024,
+                       prompt=1024)
+    # 4 streams per step: per-request-token latency must beat 4x sporadic
+    assert r4.ms_per_token / 4 < r1.ms_per_token
+
+
+def test_lime_beats_or_matches_all_baselines_under_pressure():
+    env = CostEnv(env_lowmem(1), mbps(200),
+                  Workload(CFG70, mb=1, ctx=2048, n_micro=1))
+    lime = simulate_lime(env, CFG70.n_layers, 40, n_emp=2048, prompt=2048)
+    assert not lime.oom
+    for name, fn in BASELINES.items():
+        b = fn(env, CFG70.n_layers, 40, n_micro=1, prompt=2048)
+        if b.oom:
+            continue
+        assert b.ms_per_token >= 0.95 * lime.ms_per_token, name
+
+
+def test_paper_oom_pattern_lowmem():
+    """Figs 15-17: PP/EdgeShard/Galaxy OOM under Setting >= 2; LIME never."""
+    env = CostEnv(env_lowmem(2), mbps(200),
+                  Workload(CFG70, mb=1, ctx=2048, n_micro=1))
+    lime = simulate_lime(env, CFG70.n_layers, 10, n_emp=2048, prompt=2048)
+    assert not lime.oom
+    assert BASELINES["pp"](env, CFG70.n_layers, 10, prompt=2048).oom
+    assert BASELINES["edgeshard"](env, CFG70.n_layers, 10, prompt=2048).oom
+    assert BASELINES["galaxy"](env, CFG70.n_layers, 10, prompt=2048).oom
+    assert not BASELINES["tpi-llm"](env, CFG70.n_layers, 10,
+                                    prompt=2048).oom
+
+
+def test_naive_pp_offload_pays_uncovered_loads():
+    """Fig 3a/4a: in-stage offloading leaves loading latency exposed;
+    LIME's interleave covers it."""
+    tight = [XAVIER_NX_16.scaled_mem(0.6), AGX_ORIN_32.scaled_mem(0.6),
+             AGX_ORIN_64.scaled_mem(0.6), AGX_ORIN_64.scaled_mem(0.6),
+             AGX_ORIN_64.scaled_mem(0.6)]
+    env = CostEnv(tight, mbps(200), Workload(CFG70, mb=1, ctx=1024))
+    lime = simulate_lime(env, CFG70.n_layers, 25, n_emp=1024, prompt=1024)
+    naive = simulate_pp_offload(env, CFG70.n_layers, 25, prompt=1024)
+    assert not lime.oom and not naive.oom
+    assert naive.ms_per_token > 1.2 * lime.ms_per_token
+
+
+def test_bandwidth_drop_does_not_stall():
+    env = CostEnv(env_lowmem(1), mbps(200),
+                  Workload(CFG70, mb=1, ctx=2048))
+
+    def schedule(tok):
+        return mbps(50 if 10 <= tok < 20 else 200)
+
+    r = simulate_lime(env, CFG70.n_layers, 40, n_emp=2048, prompt=2048,
+                      bandwidth_schedule=schedule)
+    fixed = simulate_lime(env, CFG70.n_layers, 40, n_emp=2048, prompt=2048)
+    assert r.ms_per_token < 3.0 * fixed.ms_per_token
+
+
+def test_ablation_ordering_matches_paper():
+    """Tab. V: full LIME <= no-KV-transfer <= no-planner (same ordering;
+    magnitudes are regime-dependent, EXPERIMENTS.md §Repro)."""
+    env = CostEnv(env_lowmem(1), mbps(200),
+                  Workload(CFG70, mb=1, ctx=2048, n_micro=5))
+    full = simulate_lime(env, CFG70.n_layers, 60, n_micro=5, n_emp=2048,
+                         prompt=2048)
+    no_pl = simulate_lime(env, CFG70.n_layers, 60, n_micro=5, n_emp=2048,
+                          prompt=2048, planner_full_layer_fallback=True)
+    assert full.ms_per_token <= no_pl.ms_per_token * 1.02
