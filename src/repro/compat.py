@@ -1,0 +1,80 @@
+"""Version-tolerant JAX API surface (DESIGN.md §2).
+
+The engine and the MoE layer are written against the *new* ``shard_map``
+API (``jax.shard_map`` with ``axis_names`` / ``check_vma``, JAX >= 0.6).
+Older JAX only ships ``jax.experimental.shard_map.shard_map`` with the
+``auto`` / ``check_rep`` spelling — same semantics, inverted axis set:
+``axis_names`` lists the MANUAL axes, ``auto`` lists everything else.
+
+Import ``shard_map`` from here, never from jax directly, so the repo runs
+unchanged on both sides of the rename.
+"""
+from __future__ import annotations
+
+from typing import Optional, Set
+
+try:                                     # JAX >= 0.6: public, new kwargs
+    from jax import shard_map as _shard_map_new      # type: ignore
+    _HAS_NEW = True
+except ImportError:                      # JAX <= 0.5: experimental, old kwargs
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+    _HAS_NEW = False
+
+# Old XLA's SPMD partitioner fatally asserts (spmd_partitioner.cc
+# IsManualSubgroup check) on ppermute / all_to_all issued inside a
+# *partial*-auto shard_map region; psum survives. Callers that need a
+# collective inside a partial-auto region must emulate it with psum when
+# this is False (see engine._build_step's ring/fetch paths).
+PARTIAL_AUTO_COLLECTIVES_OK = _HAS_NEW
+
+# Same partitioner vintage rejects with_sharding_constraint inside a
+# partial-auto region (the constraint's sharding spans the manual axes).
+# When False, constraint-based pins (moe_forward mode="auto") are dropped:
+# still correct — GSPMD just loses the hint that keeps expert weights
+# sharded, so huge-MoE perf degrades on old JAX.
+PARTIAL_AUTO_SHARDING_CONSTRAINT_OK = _HAS_NEW
+
+
+def top_k(x, k: int):
+    """jax.lax.top_k, usable inside partial-auto shard_map on old JAX.
+
+    The old partitioner also dies on the sort custom-call top_k lowers to
+    when it appears under a manual subgroup, so pre-0.6 we take k rounds of
+    argmax + mask instead — identical values/indices ordering (descending,
+    first occurrence wins ties), O(k·E) instead of O(E log E), and k is the
+    MoE top_k (≤ 8) so the difference is noise.
+    """
+    import jax
+    import jax.numpy as jnp
+    if _HAS_NEW:
+        return jax.lax.top_k(x, k)
+    vals, idxs = [], []
+    work = x
+    pos = jnp.arange(x.shape[-1])
+    for _ in range(k):
+        i = jnp.argmax(work, axis=-1)
+        vals.append(jnp.take_along_axis(x, i[..., None], -1)[..., 0])
+        idxs.append(i)
+        work = jnp.where(pos == i[..., None], -jnp.inf, work)
+    return jnp.stack(vals, -1), jnp.stack(idxs, -1).astype(jnp.int32)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              axis_names: Optional[Set[str]] = None, check_vma: bool = True):
+    """New-style shard_map on any JAX.
+
+    axis_names: mesh axes to run manually (None = all of them); the rest
+    stay under GSPMD auto-sharding. check_vma maps to check_rep on old JAX.
+    """
+    if _HAS_NEW:
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return _shard_map_new(f, **kwargs)
+    manual = set(axis_names) if axis_names is not None \
+        else set(mesh.axis_names)
+    auto = frozenset(mesh.axis_names) - manual
+    return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=bool(check_vma),
+                          auto=auto)

@@ -43,8 +43,9 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import PARTIAL_AUTO_COLLECTIVES_OK, shard_map
 
 from repro.configs.base import Family, ModelConfig
 from repro.models import model as M
@@ -196,7 +197,14 @@ class InterleavedEngine:
         self.impl = impl
         self.enc_len = enc_len          # ENCDEC: encoder runs outside
         self.fetch_mode = fetch_mode if plan.k_off else "slot"
+        if cfg.family == Family.SSM and not PARTIAL_AUTO_COLLECTIVES_OK:
+            # Old XLA's partitioner fatally asserts compiling the RWKV
+            # family's step-fetch program (manual-subgroup check) even with
+            # replicated inputs; the paper-literal slot fetch is verified
+            # lossless there, so fall back (new JAX keeps 'step').
+            self.fetch_mode = "slot"
         self.S_c = M.kv_cache_len(cfg, max_len, long_mode)
+        self._stage_ids = jnp.arange(plan.n_stage, dtype=jnp.int32)
         self._fetch = self._build_fetch() if self.fetch_mode == "step" \
             else None
         self._step = self._build_step()
@@ -362,7 +370,10 @@ class InterleavedEngine:
         ax = self.axis
         mesh = self.mesh
         specs = M.build_param_specs(self.cfg)["layers"]
-        manual = {a for a in (ax, "model") if a in mesh.shape}
+        # manual over EVERY mesh axis: the fetch touches only weights (pod
+        # never shards them), and leaving an axis auto would make this a
+        # partial-auto region whose all_to_all old XLA can't partition
+        manual = set(mesh.axis_names)
 
         def off_in_pspec(s):
             sdim = stage_shard_dim(s.shape[1:], n_stage)
@@ -422,19 +433,21 @@ class InterleavedEngine:
             lambda s: stage_shard_dim(s.shape[1:], n_stage), layer_shapes,
             is_leaf=is_sds)
 
-        def fetch_chunk_weights(off_local, tau):
+        def fetch_chunk_weights(off_local, tau, d):
             """all_to_all restore of each stage's streamed layers for the
             chunk it runs at slot `tau`. Stage-sharded leaves arrive via an
             untiled all_to_all on their stage dim; replicated leaves are a
             local gather. 'model'-sharded dims stay sharded throughout
-            (GSPMD auto axes)."""
+            (GSPMD auto axes). On old XLA the in-scan all_to_all is emulated
+            with a psum of offset-scattered shards (compat: partial-auto
+            collectives other than psum fatally assert in the partitioner).
+            """
             if k_off == 0:
                 return None
             e = jnp.arange(n_stage)
             m_e = (tau - e) % n_stage if n_mb > 1 else jnp.zeros_like(e)
             c_e = tau - m_e
             s_e = jnp.clip(c_e // n_stage, 0, n_seg - 1)
-            d = jax.lax.axis_index(ax)
             s_d = jnp.clip((tau - ((tau - d) % n_stage if n_mb > 1 else 0))
                            // n_stage, 0, n_seg - 1)
 
@@ -444,17 +457,44 @@ class InterleavedEngine:
                     seg = jax.lax.dynamic_index_in_dim(leaf, s_d, 0, False)
                     return jax.lax.dynamic_index_in_dim(seg, d, 0, False)
                 contrib = leaf[s_e, e]        # (n_stage, k_off, *dims_local)
-                # untiled all_to_all: axis0 consumed, new n_stage axis at
-                # the stage-sharded dim; merge it back to the full dim.
-                cat = 2 + sdim                # k_off + dims offset, +1 below
-                got = jax.lax.all_to_all(contrib, ax, split_axis=0,
-                                         concat_axis=1 + sdim)
-                # got: (k_off, ..., n_stage, dim/n_stage, ...) at 1+sdim
-                shp = list(got.shape)
-                merged = shp[:1 + sdim] + [shp[1 + sdim] * shp[2 + sdim]] \
-                    + shp[3 + sdim:]
-                return got.reshape(merged)
+                if PARTIAL_AUTO_COLLECTIVES_OK:
+                    # untiled all_to_all: axis0 consumed, new n_stage axis
+                    # at the stage-sharded dim; merge it back to full width.
+                    got = jax.lax.all_to_all(contrib, ax, split_axis=0,
+                                             concat_axis=1 + sdim)
+                    # got: (k_off, ..., n_stage, dim/n_stage, ...) at 1+sdim
+                    shp = list(got.shape)
+                    merged = shp[:1 + sdim] \
+                        + [shp[1 + sdim] * shp[2 + sdim]] + shp[3 + sdim:]
+                    return got.reshape(merged)
+                # psum emulation: every stage writes its shard of each
+                # destination's slab at its own offset of the full weight
+                # dim (axis 2+sdim of contrib), disjoint across stages, so
+                # the psum concatenates; each stage then picks its own row.
+                shard = contrib.shape[2 + sdim]
+                full = list(contrib.shape)
+                full[2 + sdim] = shard * n_stage
+                starts = [jnp.int32(0)] * len(full)
+                starts[2 + sdim] = d * shard
+                buf = jax.lax.dynamic_update_slice(
+                    jnp.zeros(tuple(full), contrib.dtype), contrib,
+                    tuple(starts))
+                buf = jax.lax.psum(buf, ax)
+                return jax.lax.dynamic_index_in_dim(buf, d, 0, False)
             return jax.tree.map(one, off_local, stage_dims)
+
+        def ring_shift(x, d):
+            """Hand the activation to the next stage. ppermute where the
+            partitioner allows it; else a psum of a one-hot-scattered
+            buffer (stage d writes slot d+1, reads its own slot)."""
+            if PARTIAL_AUTO_COLLECTIVES_OK:
+                return jax.lax.ppermute(
+                    x, ax, [(i, (i + 1) % n_stage) for i in range(n_stage)])
+            buf = jnp.zeros((n_stage,) + x.shape, x.dtype)
+            buf = jax.lax.dynamic_update_index_in_dim(
+                buf, x, (d + 1) % n_stage, 0)
+            buf = jax.lax.psum(buf, ax)
+            return jax.lax.dynamic_index_in_dim(buf, d, 0, False)
 
         def chunk_params(res_local, fetched, s_d):
             """Assemble the k layers of the active chunk on this stage."""
@@ -470,13 +510,18 @@ class InterleavedEngine:
 
         step_mode = self.fetch_mode == "step"
 
-        def step_fn(resident, offload, shared, cache, glob, tokens):
+        def step_fn(resident, offload, shared, cache, glob, tokens,
+                    stage_id):
             """One autoregressive token for all n_mb micro-batches.
             tokens: (n_mb, mb, 1) int32 (replicated). Locals per stage:
             resident (n_seg, 1, k_res, ...); cache (n_seg, 1, k, n_mb,
             mb, ...); offload: fetch_mode='slot' -> the sharded store,
-            'step' -> the per-stage restored buffer (1, n_seg, k_off, ...)."""
-            d = jax.lax.axis_index(ax)
+            'step' -> the per-stage restored buffer (1, n_seg, k_off, ...).
+            stage_id: (1,) int32, stage-sharded iota — the stage's own
+            index. Passed in rather than jax.lax.axis_index(ax): in a
+            partial-auto shard_map old XLA lowers axis_index to a
+            PartitionId op its SPMD partitioner rejects."""
+            d = stage_id[0]
             pos = glob["pos"]
             pos_ids = glob.get("pos_ids")
             slot = jnp.int32(0)
@@ -489,7 +534,7 @@ class InterleavedEngine:
             x0 = jnp.zeros((mb, 1, cfg.d_model), jnp.bfloat16)
             logits0 = jnp.zeros((n_mb, mb, PV), jnp.float32)
             fetched0 = None if step_mode else \
-                fetch_chunk_weights(offload, jnp.int32(0))
+                fetch_chunk_weights(offload, jnp.int32(0), d)
 
             def slot_body(carry, tau):
                 x, logits_buf, cache_l, fetched = carry
@@ -508,10 +553,10 @@ class InterleavedEngine:
                         lambda w: jax.lax.dynamic_index_in_dim(
                             w[0], s_d, 0, False), offload)
                 else:
-                    nxt = fetch_chunk_weights(offload, tau + 1) if prefetch \
-                        else None
+                    nxt = fetch_chunk_weights(offload, tau + 1, d) \
+                        if prefetch else None
                     cur = fetched if prefetch else \
-                        fetch_chunk_weights(offload, tau)
+                        fetch_chunk_weights(offload, tau, d)
 
                 # entering micro-batches embed their token at chunk 0
                 tok_m = jnp.take(tokens, jnp.clip(m_d, 0, n_mb - 1), axis=0)
@@ -569,9 +614,7 @@ class InterleavedEngine:
                     logits_buf)
 
                 # hand activation to the next stage (ring)
-                x_next = jax.lax.ppermute(
-                    x_out, ax, [(i, (i + 1) % n_stage)
-                                for i in range(n_stage)])
+                x_next = ring_shift(x_out, d)
                 dbg = (jnp.abs(x_out.astype(jnp.float32)).sum(),
                        c_d, valid.astype(jnp.int32))
                 return (x_next, logits_buf, cache_l,
@@ -603,7 +646,7 @@ class InterleavedEngine:
                     jax.tree.map(lambda _: P(), self._shared_proto()),
                     {kk: P(None, ax) for kk in self._cache_keys()},
                     {kk: P() for kk in self._glob_keys()},
-                    P())
+                    P(), P(ax))
         out_specs = (P(), {kk: P(None, ax) for kk in self._cache_keys()},
                      {kk: P() for kk in self._glob_keys()}, P(ax))
         fn = shard_map(step_fn, mesh=self.mesh, in_specs=in_specs,
@@ -634,37 +677,66 @@ class InterleavedEngine:
         out["glob"] = glob
         return out
 
+    def _defer_model_sharding(self, fetched):
+        """Old-XLA compat: a fetched buffer whose leaves mix the manual
+        stage dim with at-rest 'model' auto shardings trips the partitioner
+        inside the step (hlo_sharding_util manual-subgroup assert, SSM
+        leaves). Reshard to stage-only between the two programs — an ICI
+        all-gather of the streamed layers' model dims, old JAX only."""
+        if PARTIAL_AUTO_COLLECTIVES_OK:
+            return fetched
+        sh = NamedSharding(self.mesh, P(self.axis))
+        return jax.device_put(fetched, jax.tree.map(lambda _: sh, fetched))
+
     # -- public API ---------------------------------------------------------------
     def decode_step(self, state, tokens):
         """tokens: (n_mb * mb, 1) int32 -> (logits (n_mb*mb, PV), state)."""
         t = tokens.reshape(self.n_mb, self.mb, 1)
         off = state["offload"]
         if self.fetch_mode == "step":
-            off = self._fetch(off)
+            off = self._defer_model_sharding(self._fetch(off))
         logits, cache, glob, dbg = self._step(
             state["resident"], off, state["shared"],
-            state["cache"], state["glob"], t)
+            state["cache"], state["glob"], t, self._stage_ids)
         new_state = dict(state)
         new_state["cache"] = cache
         new_state["glob"] = glob
         self.last_debug = dbg       # (n_stage, n_slots, [xnorm, chunk, valid])
         return logits.reshape(self.n_mb * self.mb, -1), new_state
 
+    def decode_requests(self, state, tokens, active):
+        """Serving entry point (DESIGN.md §9): one decode step for a batch
+        of slot-resident requests where only some slots are live.
+
+        tokens: (n_mb*mb, 1) int32; active: (n_mb*mb,) bool. Inactive slots
+        ride the pipeline as padding — their tokens are zeroed so the step
+        stays deterministic regardless of stale slot contents, their cache
+        writes land in slots the scheduler has already released, and their
+        logits must be ignored by the caller. This keeps one compiled step
+        for every occupancy level (recompiling per occupancy would defeat
+        continuous batching).
+        """
+        active = jnp.asarray(active, bool)
+        toks = jnp.where(active[:, None], tokens.astype(jnp.int32), 0)
+        return self.decode_step(state, toks)
+
     def lower_step(self):
         """For the dry-run: lower the full serve_step (restore + pipeline)
         without materializing state."""
         shapes = self._abstract_state()
         t = jax.ShapeDtypeStruct((self.n_mb, self.mb, 1), jnp.int32)
+        sid = jax.ShapeDtypeStruct((self.plan.n_stage,), jnp.int32)
         if self.fetch_mode == "step":
-            def full(res, off, shared, cache, glob, tokens):
+            def full(res, off, shared, cache, glob, tokens, stage_id):
                 w = self._fetch(off)
-                return self._step(res, w, shared, cache, glob, tokens)
+                return self._step(res, w, shared, cache, glob, tokens,
+                                  stage_id)
             return jax.jit(full, donate_argnums=(3,)).lower(
                 shapes["resident"], shapes["offload"], shapes["shared"],
-                shapes["cache"], shapes["glob"], t)
+                shapes["cache"], shapes["glob"], t, sid)
         return self._step.lower(
             shapes["resident"], shapes["offload"], shapes["shared"],
-            shapes["cache"], shapes["glob"], t)
+            shapes["cache"], shapes["glob"], t, sid)
 
     def _abstract_state(self):
         cfg, plan = self.cfg, self.plan

@@ -86,6 +86,12 @@ class InterleavedPipelineSim:
         # per-device rolling loader state: when next segment's weights land
         self._loader_free = [0.0] * self.D
         self._load_done = [[0.0] * (self.n_seg + 1) for _ in range(self.D)]
+        # arrival-driven stepping state (LIME-Serve, DESIGN.md §9): the
+        # virtual clock, the autoregressive step counter, and the current
+        # network bandwidth. run() and step_once() share these.
+        self.now = 0.0
+        self._tok_count = 0
+        self._bw = env.bw_net
 
     # -- per-device per-segment quantities -------------------------------------
     def _layers_seg(self, i: int) -> float:
@@ -148,30 +154,67 @@ class InterleavedPipelineSim:
                     self._load_done[i][(s + 1) % S] = ld_end
         return max(max(dev_free), max(ready)), stall, comm
 
+    # -- arrival-driven stepping (LIME-Serve) ------------------------------------
+    def reset_clock(self) -> None:
+        """Restore the t=0 state run() historically assumed. The clock,
+        token counter, bandwidth, and loader timeline persist across
+        run()/step_once() calls (arrival-driven serving needs that); call
+        this before reusing one sim instance for an independent run."""
+        self.now = 0.0
+        self._tok_count = 0
+        self._bw = self.env.bw_net
+        self._loader_free = [0.0] * self.D
+        self._load_done = [[0.0] * (self.n_seg + 1) for _ in range(self.D)]
+
+    def advance_to(self, t: float) -> None:
+        """Idle the fleet until virtual time `t` (waiting for an arrival)."""
+        self.now = max(self.now, t)
+
+    def step_once(self, *, ctx: Optional[int] = None, n_micro: int = 1,
+                  kv_tokens: Optional[int] = None) -> StepTrace:
+        """One autoregressive step at the current virtual clock.
+
+        ctx: KV read span this step (default: prompt + steps taken, the
+        fixed-loop behaviour). n_micro: micro-batches in flight *this step*
+        — the serving layer passes the live slot count, so a half-full
+        pipeline is priced as one. kv_tokens: effective per-stream token
+        count for the OnlinePlanner's TS thresholds (default ctx); the
+        serving layer passes Σ_active ctx_i / n_micro_env so admission-level
+        KV accounting is what walks the ladder (paper Eq. 5).
+        """
+        tok = self._tok_count
+        if ctx is None:
+            ctx = self.prompt + tok
+        if self.bw_schedule:
+            new_bw = self.bw_schedule(tok)
+            if new_bw != self._bw:
+                if self.kv:
+                    self.kv.on_bandwidth(new_bw, ctx * n_micro)
+                self._bw = new_bw
+        fired = False
+        if self.planner:
+            if self.kv:
+                self.kv.refresh(ctx)
+            offsets = [self.kv.transferred_tokens(i)
+                       for i in range(self.D)] if self.kv else None
+            eff = ctx if kv_tokens is None else kv_tokens
+            fired = bool(self.planner.on_token(eff, offsets))
+        t_end, stall, comm = self._step(self.now, ctx, self._bw, n_micro)
+        trace = StepTrace(tok, t_end - self.now, stall, comm, fired)
+        self.now = t_end
+        self._tok_count += 1
+        return trace
+
     # -- main loop ---------------------------------------------------------------
     def run(self, n_tokens: int, *, n_micro: int = 1,
             oot_s_per_token: Optional[float] = None) -> SimResult:
+        """Fixed token loop from t=0 (resets the clock — the historical
+        contract; arrival-driven serving drives step_once() directly and
+        never calls this)."""
+        self.reset_clock()
         traces: List[StepTrace] = []
-        t = 0.0
-        bw = self.env.bw_net
-        for tok in range(n_tokens):
-            ctx = self.prompt + tok
-            if self.bw_schedule:
-                new_bw = self.bw_schedule(tok)
-                if new_bw != bw:
-                    if self.kv:
-                        self.kv.on_bandwidth(new_bw, ctx * n_micro)
-                    bw = new_bw
-            fired = False
-            if self.planner:
-                if self.kv:
-                    self.kv.refresh(ctx)
-                offsets = [self.kv.transferred_tokens(i)
-                           for i in range(self.D)] if self.kv else None
-                fired = bool(self.planner.on_token(ctx, offsets))
-            t_end, stall, comm = self._step(t, ctx, bw, n_micro)
-            traces.append(StepTrace(tok, t_end - t, stall, comm, fired))
-            t = t_end
+        for _ in range(n_tokens):
+            traces.append(self.step_once(n_micro=n_micro))
             if oot_s_per_token and traces[-1].latency > oot_s_per_token:
                 return SimResult(traces, oot=True,
                                  reason=f"{traces[-1].latency:.1f}s/token")

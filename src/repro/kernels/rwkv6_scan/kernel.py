@@ -51,8 +51,10 @@ def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,   # in
         w_t = jax.lax.dynamic_slice_in_dim(w, t, 1, 0)
         a = k_t.T * v_t                                      # (dh, dh)
         o = r_t @ (S + u[:, None] * a)                       # (1, dh)
-        pl.store(o_ref, (0, 0, pl.ds(t, 1), slice(None)),
-                 o.astype(o_ref.dtype))
+        # int dims spelled as ds(0, 1): bare python ints in a store index
+        # tuple break old Pallas (NDIndexer expects Slice/array indices)
+        pl.store(o_ref, (pl.ds(0, 1), pl.ds(0, 1), pl.ds(t, 1), slice(None)),
+                 o[None, None].astype(o_ref.dtype))
         return w_t.T * S + a
 
     S = jax.lax.fori_loop(0, block_t, step, state_ref[...])

@@ -48,8 +48,10 @@ def _ssm_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, s0_ref,   # in
         decay = jnp.exp(a[0] * dt_t[0, 0])
         h = decay * h + (dt_t[0, 0] * b_t.T) * x_t            # (N, dh)
         y = c_t @ h                                           # (1, dh)
-        pl.store(y_ref, (0, 0, pl.ds(t, 1), slice(None)),
-                 y.astype(y_ref.dtype))
+        # int dims spelled as ds(0, 1): bare python ints in a store index
+        # tuple break old Pallas (NDIndexer expects Slice/array indices)
+        pl.store(y_ref, (pl.ds(0, 1), pl.ds(0, 1), pl.ds(t, 1), slice(None)),
+                 y[None, None].astype(y_ref.dtype))
         return h
 
     h = jax.lax.fori_loop(0, block_t, step, state_ref[...])

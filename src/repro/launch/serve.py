@@ -1,15 +1,19 @@
-"""Serving launcher: LIME interleaved-pipeline inference.
+"""Serving launcher: LIME-Serve over the interleaved pipeline (DESIGN.md §9).
 
-  # CPU demo (4 virtual stages):
+  # CPU demo (4 virtual stages), bursty traffic:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --smoke \
       --stages 4 --pattern bursty --requests 4 --max-new 16
+
+  # Poisson arrivals at 2 req/s through the same engine:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --smoke \
+      --stages 4 --pattern poisson --rate-rps 2 --requests 8
 """
 from __future__ import annotations
 
 import argparse
-
-import numpy as np
+import json
 
 
 def main(argv=None):
@@ -18,11 +22,18 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--stages", type=int, default=4)
     ap.add_argument("--tp", type=int, default=1)
-    ap.add_argument("--pattern", choices=("sporadic", "bursty"),
+    ap.add_argument("--pattern",
+                    choices=("sporadic", "bursty", "poisson", "trace"),
                     default="sporadic")
     ap.add_argument("--requests", type=int, default=2)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gap-s", type=float, default=2.0)
+    ap.add_argument("--rate-rps", type=float, default=1.0)
+    ap.add_argument("--trace", default=None,
+                    help="JSON arrival trace for --pattern trace")
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args(argv)
 
@@ -30,7 +41,9 @@ def main(argv=None):
     from repro.configs.registry import get_config, get_smoke_config
     from repro.core.engine import InterleavedEngine, UniformPlan
     from repro.models import model as M
-    from repro.serving import LimeServer, SamplerConfig
+    from repro.serving import (ContinuousBatchingScheduler, LimeServer,
+                               SamplerConfig, SchedulerConfig, cli_arrivals,
+                               requests_from_arrivals, summarize)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     n_dev = len(jax.devices())
@@ -46,7 +59,7 @@ def main(argv=None):
         k = math.ceil(cfg.n_layers / (n_seg * args.stages))
         plan = UniformPlan(args.stages, n_seg, max(k - 1, 0),
                            1 if k >= 1 else 0)
-        n_mb = args.stages if args.pattern == "bursty" else 1
+        n_mb = args.stages if args.pattern != "sporadic" else 1
         engine = InterleavedEngine(cfg, mesh, plan, n_mb=n_mb, mb=1,
                                    max_len=args.max_len)
         print(f"engine: {args.stages} stages x tp{args.tp}, "
@@ -55,16 +68,26 @@ def main(argv=None):
         print("single-device fallback (no engine)")
 
     srv = LimeServer(cfg, params, engine=engine, max_len=args.max_len,
-                     pattern=args.pattern,
+                     pattern="sporadic" if args.pattern == "sporadic"
+                     else "bursty",
                      sampler=SamplerConfig(temperature=args.temperature))
-    rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        srv.queue.submit(rng.integers(1, cfg.vocab_size, size=8),
-                         max_new_tokens=args.max_new)
-    done = srv.serve_all()
-    for r in done:
-        print(f"req {r.rid}: first-token {r.first_token_s:.2f}s "
-              f"total {r.finish_s:.2f}s out[:8]={r.output[:8]}")
+
+    arrivals = cli_arrivals(args.pattern, args.requests, seed=args.seed,
+                            prompt_len=args.prompt_len,
+                            max_new_tokens=args.max_new, gap_s=args.gap_s,
+                            burst_size=srv.slots, rate_rps=args.rate_rps,
+                            trace=args.trace)
+
+    sched = ContinuousBatchingScheduler(srv.make_backend(), SchedulerConfig())
+    done = sched.serve(requests_from_arrivals(arrivals))
+    for r in sorted(done, key=lambda r: r.rid):
+        status = "REJECTED" if r.rejected else \
+            f"ttft {r.ttft_s:.2f}s total {r.latency_s:.2f}s " \
+            f"out[:8]={r.output[:8]}"
+        print(f"req {r.rid}: {status}")
+    report = summarize(done, pattern=args.pattern,
+                       backend="engine" if engine else "fallback")
+    print(json.dumps(report.to_dict(), indent=2))
     return 0
 
 

@@ -86,6 +86,16 @@ def wkv_scan_ref(r, k, v, w, u, state):
     rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
     uf = u.astype(jnp.float32)
 
+    if r.shape[1] == 1:
+        # single decode token: unrolled. A length-1 scan is pure overhead,
+        # and a nested lax.scan inside a partial-auto shard_map (the LIME
+        # engine's slot loop) fatally asserts in old XLA's partitioner.
+        r1, k1, v1, w1 = rf[:, 0], kf[:, 0], vf[:, 0], w[:, 0]
+        a = k1[..., :, None] * v1[..., None, :]
+        o = jnp.einsum("bhk,bhkd->bhd", r1,
+                       state + uf[None, :, :, None] * a)
+        return o[:, None], w1[..., :, None] * state + a
+
     def step(S, inp):
         r_t, k_t, v_t, w_t = inp                     # (B,H,dh)
         a = k_t[..., :, None] * v_t[..., None, :]    # (B,H,dh,dh)

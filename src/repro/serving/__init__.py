@@ -1,2 +1,17 @@
-from repro.serving.server import LimeServer, Request, RequestQueue, \
-    SamplerConfig, sample  # noqa: F401
+"""LIME-Serve: request serving over the interleaved pipeline (DESIGN.md §9).
+
+Layers, front to back: traffic (arrival generation) -> scheduler
+(admission, queueing, continuous batching) -> backend (engine or
+discrete-event simulator behind one protocol) -> metrics (TTFT /
+latency / throughput reports).
+"""
+from repro.serving.backend import EngineBackend, SimBackend  # noqa: F401
+from repro.serving.metrics import (ServingReport, percentile,  # noqa: F401
+                                   summarize)
+from repro.serving.sampling import SamplerConfig, sample  # noqa: F401
+from repro.serving.scheduler import (ContinuousBatchingScheduler,  # noqa: F401
+                                     Request, SchedulerConfig,
+                                     requests_from_arrivals)
+from repro.serving.server import LimeServer, RequestQueue  # noqa: F401
+from repro.serving.traffic import (PATTERNS, ArrivalEvent,  # noqa: F401
+                                   cli_arrivals, make_arrivals)

@@ -1,0 +1,285 @@
+"""Execution backends for LIME-Serve (DESIGN.md §9).
+
+One protocol, two substrates:
+
+  EngineBackend  the real thing — prefill on GSPMD params, cache adoption
+                 into the InterleavedEngine layout, real sampled tokens,
+                 wall-clock time. Batch membership is fixed once the caches
+                 are seeded (`can_join_running = False`): the scheduler
+                 runs it in epochs.
+  SimBackend     the discrete-event InterleavedPipelineSim on a CostEnv —
+                 virtual time, per-step micro-batch occupancy, planner/KV
+                 protocol effects. Slots are bookkeeping
+                 (`can_join_running = True`): continuous batching.
+
+The protocol (duck-typed; SimBackend and EngineBackend are the reference
+implementations):
+
+  n_slots            micro-batch slots the substrate co-schedules
+  can_join_running   may the scheduler refill freed slots mid-flight?
+  now()              current time (wall or virtual, seconds)
+  advance_to(t)      idle until t (arrival wait)
+  kv_budget_tokens() fleet KV capacity in tokens, or None (unbounded)
+  start_batch(reqs)  admit an idle-state batch; returns first token per
+                     request (None where the substrate has no real tokens)
+  decode_active(slots) one decode step; {slot: token-or-None} per live slot
+  join(slot, req)    mid-flight admission (only if can_join_running)
+  release(slot)      slot freed by the scheduler
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.cost_model import CostEnv
+from repro.core.pipeline_sim import InterleavedPipelineSim
+
+
+# ============================================================================
+# Simulator backend
+# ============================================================================
+class SimBackend:
+    """Discrete-event substrate: prices each decode step by live occupancy.
+
+    Per-request KV accounting feeds the OnlinePlanner: every step passes
+    kv_tokens = ceil(Σ_active ctx_i / n_micro_env), the effective
+    per-stream token count under the Workload's n_micro scaling — so the
+    TS thresholds (paper Eq. 5) fire exactly when the *admitted* KV load
+    says they should, not on a fixed token loop.
+    """
+
+    can_join_running = True
+
+    def __init__(self, env: CostEnv, plan=None, *, n_slots: int = 0,
+                 use_planner: bool = True, use_kv_transfer: bool = True,
+                 prompt_tokens: int = 64):
+        if plan is None:
+            from repro.core.offline_scheduler import allocate
+            r = allocate(env, env.work.cfg.n_layers,
+                         n_emp=max(prompt_tokens, 1))
+            if not r.feasible:
+                raise ValueError(f"infeasible allocation: {r.reason}")
+            plan = r.plan
+        self.env = env
+        self.plan = plan
+        self.n_slots = n_slots or max(env.work.n_micro, 1)
+        self.sim = InterleavedPipelineSim(
+            env, plan, use_planner=use_planner,
+            use_kv_transfer=use_kv_transfer, prompt_tokens=prompt_tokens)
+        self._ctx: Dict[int, int] = {}        # slot -> prompt + generated
+
+    # -- clock -------------------------------------------------------------------
+    def now(self) -> float:
+        return self.sim.now
+
+    def advance_to(self, t: float) -> None:
+        self.sim.advance_to(t)
+
+    # -- capacity ----------------------------------------------------------------
+    def kv_budget_tokens(self) -> Optional[int]:
+        """Fleet KV capacity in per-request tokens: aggregate memory left
+        after weights, divided by the per-token-per-sequence KV rate
+        (kv_bytes_per_token_layer covers the whole mb × n_micro set)."""
+        cfg = self.env.work.cfg
+        w = self.env.work
+        per_seq = w.kv_bytes_per_token_layer() \
+            / (max(w.mb, 1) * max(w.n_micro, 1))
+        rate = cfg.n_layers * per_seq
+        if rate <= 0:
+            return None                       # attention-free: KV is not a budget
+        agg = sum(d.mem_bytes for d in self.env.devices)
+        budget = max(agg - cfg.total_params() * 2, agg * 0.03)
+        return int(budget // rate)
+
+    # -- serving hooks -----------------------------------------------------------
+    def start_batch(self, reqs: Sequence) -> List[Optional[int]]:
+        out: List[Optional[int]] = []
+        for slot, r in enumerate(reqs):
+            self._ctx[slot] = r.prompt_len
+        # prefill priced as one pipeline pass at the longest prompt
+        self.sim.step_once(ctx=max((r.prompt_len for r in reqs), default=1),
+                           n_micro=max(len(reqs), 1),
+                           kv_tokens=self._planner_tokens())
+        for slot, r in enumerate(reqs):
+            self._ctx[slot] += 1
+            out.append(None)                  # sim has no real token ids
+        return out
+
+    def join(self, slot: int, req) -> Optional[int]:
+        # mid-flight admission: the joiner's prefill rides one step at its
+        # own prompt span before it starts decoding with the others
+        self._ctx[slot] = req.prompt_len
+        self.sim.step_once(ctx=max(req.prompt_len, 1), n_micro=1,
+                           kv_tokens=self._planner_tokens())
+        self._ctx[slot] += 1
+        return None
+
+    def decode_active(self, slots: Sequence[int]) -> Dict[int, Optional[int]]:
+        if not slots:
+            return {}
+        ctx = max(self._ctx[s] for s in slots)
+        self.sim.step_once(ctx=ctx, n_micro=len(slots),
+                           kv_tokens=self._planner_tokens())
+        for s in slots:
+            self._ctx[s] += 1
+        return {s: None for s in slots}
+
+    def release(self, slot: int) -> None:
+        self._ctx.pop(slot, None)
+
+    def _planner_tokens(self) -> int:
+        total = sum(self._ctx.values())
+        n_micro_env = max(self.env.work.n_micro, 1)
+        return -(-total // n_micro_env)       # ceil-div
+
+
+# ============================================================================
+# Engine backend (real execution; single-device fallback without an engine)
+# ============================================================================
+class EngineBackend:
+    """Wall-clock substrate over the InterleavedEngine (or the plain
+    single-host decode path when engine is None — 1-device smoke runs).
+
+    Epoch batching: cache seeding fixes batch membership, so freed slots
+    pad the pipeline until the epoch drains (can_join_running = False).
+    Arrival waits don't sleep — advance_to() skews the clock, so a trace
+    with long idle gaps benches in real compute time while latency math
+    still sees the gaps.
+    """
+
+    can_join_running = False
+
+    def __init__(self, cfg, params, *, engine=None, n_slots: int = 0,
+                 max_len: int = 512, sampler=None, prompt_seed: int = 0):
+        import jax
+
+        from repro.models import model as M
+        from repro.serving.sampling import SamplerConfig
+
+        self.cfg = cfg
+        self.params = params
+        self.engine = engine
+        self.max_len = max_len
+        self.sampler = sampler if sampler is not None else SamplerConfig()
+        # batch_width: what the compiled step expects (fixed); n_slots:
+        # what the scheduler may co-schedule (sporadic serves 1 through a
+        # wide engine — the spare slots ride as padding)
+        self.batch_width = (engine.n_mb * engine.mb) if engine is not None \
+            else max(n_slots or 1, 1)
+        self.n_slots = min(n_slots, self.batch_width) if n_slots \
+            else self.batch_width
+        self._key = jax.random.PRNGKey(self.sampler.seed)
+        self._prompt_rng_seed = prompt_seed
+        self._prefill = jax.jit(functools.partial(M.prefill, cfg))
+        self._decode = jax.jit(functools.partial(M.decode_step, cfg)) \
+            if engine is None else None
+        self._t0 = time.monotonic()
+        self._skew = 0.0
+        self._state = None
+        self._cur = None                      # (batch_width, 1) last tokens
+
+    # -- clock -------------------------------------------------------------------
+    def now(self) -> float:
+        return (time.monotonic() - self._t0) + self._skew
+
+    def advance_to(self, t: float) -> None:
+        cur = self.now()
+        if t > cur:
+            self._skew += t - cur
+
+    # -- capacity ----------------------------------------------------------------
+    def kv_budget_tokens(self) -> Optional[int]:
+        # the engine's cache is statically shaped: max_len per slot
+        return self.n_slots * self.max_len
+
+    def max_request_tokens(self) -> Optional[int]:
+        """Per-slot ceiling: a single request's prompt + max_new must fit
+        the statically-shaped cache, regardless of pooled headroom."""
+        return self.max_len
+
+    def fits_batch(self, batch: Sequence, req) -> bool:
+        """Epoch-composition constraint: prompts are LEFT-padded to the
+        batch max, so every co-scheduled request decodes from position
+        max(prompt_len) — each one's max_prompt + own max_new must fit
+        max_len or its cache writes clamp at the last row (silent
+        corruption)."""
+        cand = list(batch) + [req]
+        mp = max(r.prompt_len for r in cand)
+        return all(mp + r.max_new_tokens <= self.max_len for r in cand)
+
+    # -- helpers -----------------------------------------------------------------
+    def _materialize_prompt(self, r) -> np.ndarray:
+        if r.prompt is not None:
+            return np.asarray(r.prompt, np.int32)
+        rng = np.random.default_rng(self._prompt_rng_seed + r.rid)
+        n = max(r.prompt_len, 1)
+        return rng.integers(1, self.cfg.vocab_size, size=n).astype(np.int32)
+
+    def _pad_prompts(self, prompts: List[np.ndarray]):
+        import jax.numpy as jnp
+        S = max(len(p) for p in prompts)
+        toks = np.zeros((len(prompts), S), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, S - len(p):] = p          # left-pad
+        return jnp.asarray(toks)
+
+    def _sample(self, logits):
+        import jax
+
+        from repro.serving.sampling import sample
+        self._key, k = jax.random.split(self._key)
+        return sample(logits, self.sampler, k, self.cfg.vocab_size)
+
+    # -- serving hooks -----------------------------------------------------------
+    def start_batch(self, reqs: Sequence) -> List[Optional[int]]:
+        import jax.numpy as jnp
+
+        from repro.models import model as M
+
+        prompts = [self._materialize_prompt(r) for r in reqs]
+        toks = self._pad_prompts(prompts)
+        if toks.shape[0] < self.batch_width:  # pad batch with replicas
+            toks = jnp.concatenate(
+                [toks, jnp.tile(toks[-1:], (self.batch_width - toks.shape[0],
+                                            1))], 0)
+        cache = M.init_cache(self.cfg, toks.shape[0], self.max_len)
+        logits, cache = self._prefill(self.params, toks, cache)
+        if self.engine is not None:
+            state = self.engine.init_state(self.params)
+            self._state = self.engine.seed_cache(state, cache)
+        else:
+            self._state = cache
+        tok = self._sample(logits[:, -1])
+        self._cur = tok[:, None]
+        return [int(tok[slot]) for slot in range(len(reqs))]
+
+    def decode_active(self, slots: Sequence[int]) -> Dict[int, Optional[int]]:
+        import jax.numpy as jnp
+        active = np.zeros(self.batch_width, bool)
+        for s in slots:
+            active[s] = True
+        if self.engine is not None:
+            lg, self._state = self.engine.decode_requests(
+                self._state, self._cur, jnp.asarray(active))
+        else:
+            lg, self._state = self._decode(self.params, self._state,
+                                           self._cur)
+            if lg.ndim == 3:
+                lg = lg[:, 0]
+        tok = self._sample(lg)
+        # freed slots keep replaying their last token as pipeline padding
+        self._cur = jnp.where(jnp.asarray(active)[:, None], tok[:, None],
+                              self._cur)
+        return {s: int(tok[s]) for s in slots}
+
+    def join(self, slot: int, req) -> Optional[int]:
+        raise NotImplementedError(
+            "engine batches are fixed at cache-seed time")
+
+    def release(self, slot: int) -> None:
+        # nothing to free: the slot keeps padding the fixed batch until
+        # the epoch drains (see decode_active)
+        pass

@@ -1,0 +1,81 @@
+"""Serving metrics (EXPERIMENTS.md §Serving).
+
+Latency accounting follows the serving-benchmark conventions: everything is
+measured from *arrival* (a queued request is already costing its user time):
+
+  TTFT     first_token_s − arrival_s    (queueing + prefill + first decode)
+  latency  finish_s − arrival_s         (end-to-end per request)
+  ms/token span_s / total generated tokens × 1e3 (fleet-level pace)
+
+Percentiles use the nearest-rank method — exact for the small request
+counts benchmarks run, no interpolation surprises.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Dict, List, Optional, Sequence
+
+
+def percentile(values: Sequence[float], p: float) -> float:
+    """Nearest-rank percentile; NaN for empty input."""
+    if not values:
+        return float("nan")
+    xs = sorted(values)
+    k = max(math.ceil(p / 100.0 * len(xs)) - 1, 0)
+    return xs[min(k, len(xs) - 1)]
+
+
+@dataclasses.dataclass
+class ServingReport:
+    pattern: str
+    backend: str
+    n_requests: int
+    n_rejected: int
+    total_tokens: int
+    span_s: float                  # first arrival -> last completion
+    ms_per_token: float
+    throughput_tok_s: float
+    throughput_req_s: float
+    ttft_p50_s: float
+    ttft_p99_s: float
+    latency_p50_s: float
+    latency_p99_s: float
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    def to_json(self, indent: Optional[int] = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+
+def summarize(requests: List, *, pattern: str = "",
+              backend: str = "") -> ServingReport:
+    """Build a ServingReport from served request records (anything with
+    arrival_s / first_token_s / finish_s / output / rejected attributes)."""
+    served = [r for r in requests if not getattr(r, "rejected", False)
+              and r.finish_s is not None]
+    rejected = [r for r in requests if getattr(r, "rejected", False)]
+    total_tokens = sum(getattr(r, "generated", 0) or len(r.output)
+                      for r in served)
+    if served:
+        t0 = min(r.arrival_s for r in served)
+        t1 = max(r.finish_s for r in served)
+        span = max(t1 - t0, 1e-12)
+    else:
+        span = 0.0
+    ttfts = [r.first_token_s - r.arrival_s for r in served
+             if r.first_token_s is not None]
+    lats = [r.finish_s - r.arrival_s for r in served]
+    return ServingReport(
+        pattern=pattern, backend=backend,
+        n_requests=len(served), n_rejected=len(rejected),
+        total_tokens=total_tokens, span_s=span,
+        ms_per_token=(1e3 * span / total_tokens if total_tokens
+                      else float("nan")),
+        throughput_tok_s=(total_tokens / span if span else 0.0),
+        throughput_req_s=(len(served) / span if span else 0.0),
+        ttft_p50_s=percentile(ttfts, 50), ttft_p99_s=percentile(ttfts, 99),
+        latency_p50_s=percentile(lats, 50),
+        latency_p99_s=percentile(lats, 99))

@@ -1,0 +1,28 @@
+"""Token sampling (shared by every serving backend)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0        # 0 => greedy
+    top_k: int = 0                  # 0 => full softmax
+    seed: int = 0
+
+
+def sample(logits, cfg: SamplerConfig, key, real_vocab: int):
+    """logits: (B, PV) -> (B,) int32."""
+    lv = logits[:, :real_vocab]
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(lv, axis=-1).astype(jnp.int32)
+    lv = lv / cfg.temperature
+    if cfg.top_k:
+        vals, idx = jax.lax.top_k(lv, cfg.top_k)
+        choice = jax.random.categorical(key, vals)
+        return jnp.take_along_axis(idx, choice[:, None], 1)[:, 0] \
+            .astype(jnp.int32)
+    return jax.random.categorical(key, lv).astype(jnp.int32)

@@ -1,0 +1,218 @@
+"""Continuous-batching scheduler for LIME-Serve (DESIGN.md §9).
+
+One scheduler in front of both execution substrates (engine and simulator,
+behind the InferenceBackend protocol in `serving/backend.py`):
+
+  admission   a request is admitted only when the fleet's KV budget can
+              hold its worst case (prompt + max_new tokens) alongside every
+              co-resident request — the same per-request accounting whose
+              token totals drive the OnlinePlanner's TS thresholds inside
+              the simulator backend (paper Eq. 5).
+  queueing    FIFO past the admission gate; arrivals beyond `max_queue`
+              are rejected (shed) rather than queued forever.
+  batching    up to `backend.n_slots` requests ride the pipeline's
+              micro-batch slots. Backends that support it
+              (`can_join_running`) refill freed slots mid-flight —
+              continuous batching; epoch backends (the real engine, whose
+              batch membership is fixed at cache-seed time) drain a batch,
+              then form the next.
+
+The loop is clock-agnostic: `backend.now()` is wall time for the engine
+and virtual time for the simulator, so the same scheduler produces both
+real measurements and discrete-event predictions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request, from arrival to completion."""
+    rid: int
+    prompt: Optional[np.ndarray]    # (S,) int32 token ids; None -> length-only
+    max_new_tokens: int
+    arrival_s: float = 0.0
+    prompt_len: int = 0
+    output: List[int] = dataclasses.field(default_factory=list)
+    generated: int = 0              # tokens emitted (simulated backends
+                                    # emit steps without real token ids)
+    done: bool = False
+    rejected: bool = False
+    first_token_s: Optional[float] = None
+    finish_s: Optional[float] = None
+
+    def __post_init__(self):
+        if self.prompt is not None:
+            self.prompt = np.asarray(self.prompt, np.int32)
+            self.prompt_len = len(self.prompt)
+        self.max_new_tokens = max(int(self.max_new_tokens), 1)
+
+    @property
+    def kv_tokens(self) -> int:
+        """Worst-case KV footprint in tokens (admission currency)."""
+        return self.prompt_len + self.max_new_tokens
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        return None if self.first_token_s is None \
+            else self.first_token_s - self.arrival_s
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        return None if self.finish_s is None \
+            else self.finish_s - self.arrival_s
+
+
+def requests_from_arrivals(arrivals, *, start_rid: int = 0) -> List[Request]:
+    """ArrivalEvents (traffic.py) -> length-only Requests."""
+    return [Request(start_rid + i, None, ev.max_new_tokens,
+                    arrival_s=ev.time_s, prompt_len=ev.prompt_len)
+            for i, ev in enumerate(arrivals)]
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    max_queue: int = 4096                    # beyond this: shed (rejected)
+    kv_budget_tokens: Optional[int] = None   # None -> ask the backend
+
+
+class ContinuousBatchingScheduler:
+    """Drives an InferenceBackend through an arrival stream."""
+
+    def __init__(self, backend, config: SchedulerConfig = SchedulerConfig()):
+        self.backend = backend
+        self.config = config
+        self._kv_in_use = 0
+        budget = config.kv_budget_tokens
+        if budget is None:
+            budget = backend.kv_budget_tokens()
+        self.kv_budget = budget               # None -> unbounded
+        # per-request ceiling (e.g. the engine's statically-shaped per-slot
+        # cache): pooled headroom must not admit an over-long request
+        cap_fn = getattr(backend, "max_request_tokens", None)
+        self.max_request = cap_fn() if cap_fn else None
+        # optional batch-composition constraint (engine: left-padding
+        # makes co-scheduled requests share position space)
+        self._fits_batch = getattr(backend, "fits_batch", None)
+
+    # -- admission -------------------------------------------------------------
+    def _admits(self, req: Request) -> bool:
+        if self.kv_budget is None:
+            return True
+        return self._kv_in_use + req.kv_tokens <= self.kv_budget
+
+    def _oversized(self, req: Request) -> bool:
+        """Can never be served, even on an idle fleet."""
+        if self.max_request is not None and req.kv_tokens > self.max_request:
+            return True
+        return self.kv_budget is not None and req.kv_tokens > self.kv_budget
+
+    # -- main loop ---------------------------------------------------------------
+    def serve(self, requests: List[Request]) -> List[Request]:
+        """Run every request to completion (or rejection); returns them all,
+        completion order first, then rejected."""
+        pending: Deque[Request] = deque(
+            sorted(requests, key=lambda r: r.arrival_s))
+        queue: Deque[Request] = deque()
+        active: Dict[int, Request] = {}       # slot -> request
+        done: List[Request] = []
+        shed: List[Request] = []
+
+        def intake(now: float):
+            while pending and pending[0].arrival_s <= now:
+                r = pending.popleft()
+                if self._oversized(r) or len(queue) >= self.config.max_queue:
+                    r.rejected = True
+                    shed.append(r)
+                else:
+                    queue.append(r)
+
+        while pending or queue or active:
+            intake(self.backend.now())
+
+            if not active:
+                if not queue:
+                    if not pending:   # intake shed the last arrivals
+                        break
+                    # idle: jump to the next arrival
+                    self.backend.advance_to(pending[0].arrival_s)
+                    intake(self.backend.now())
+                    continue
+                batch, slots = [], list(range(self.backend.n_slots))
+                while queue and len(batch) < len(slots) \
+                        and self._admits(queue[0]) \
+                        and (self._fits_batch is None or not batch
+                             or self._fits_batch(batch, queue[0])):
+                    r = queue.popleft()
+                    self._kv_in_use += r.kv_tokens
+                    batch.append(r)
+                if not batch:
+                    # head-of-line blocked on KV budget with nothing in
+                    # flight: impossible unless budget < kv_tokens, which
+                    # _oversized() already shed — defensive guard
+                    r = queue.popleft()
+                    r.rejected = True
+                    shed.append(r)
+                    continue
+                first = self.backend.start_batch(batch)
+                t = self.backend.now()
+                for slot, (r, tok) in enumerate(zip(batch, first)):
+                    active[slot] = r
+                    r.first_token_s = t
+                    r.generated += 1
+                    if tok is not None:
+                        r.output.append(tok)
+                    if r.generated >= r.max_new_tokens:  # max_new == 1
+                        self._finish(r, slot, active, done, t)
+                continue
+
+            # one decode step for every live slot
+            emitted = self.backend.decode_active(sorted(active))
+            t = self.backend.now()
+            for slot, tok in emitted.items():
+                r = active[slot]
+                r.generated += 1
+                if tok is not None:
+                    r.output.append(tok)
+                if r.generated >= r.max_new_tokens:
+                    self._finish(r, slot, active, done, t)
+
+            # continuous batching: refill freed slots mid-flight
+            if self.backend.can_join_running and active:
+                intake(self.backend.now())
+                free = [s for s in range(self.backend.n_slots)
+                        if s not in active]
+                for slot in free:
+                    if not queue or not self._admits(queue[0]):
+                        break
+                    if self._fits_batch is not None and not \
+                            self._fits_batch(list(active.values()),
+                                             queue[0]):
+                        break
+                    r = queue.popleft()
+                    self._kv_in_use += r.kv_tokens
+                    active[slot] = r
+                    tok = self.backend.join(slot, r)
+                    r.first_token_s = self.backend.now()
+                    r.generated += 1
+                    if tok is not None:
+                        r.output.append(tok)
+                    if r.generated >= r.max_new_tokens:  # max_new == 1
+                        self._finish(r, slot, active, done,
+                                     self.backend.now())
+
+        return done + shed
+
+    def _finish(self, r: Request, slot: int, active: Dict[int, Request],
+                done: List[Request], t: float) -> None:
+        r.done = True
+        r.finish_s = t
+        self._kv_in_use -= r.kv_tokens
+        done.append(r)
+        del active[slot]
+        self.backend.release(slot)

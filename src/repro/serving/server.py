@@ -1,74 +1,38 @@
-"""Serving layer: request queue, batch scheduler, sampler.
+"""LimeServer: the serving front door (DESIGN.md §9).
 
-Maps the paper's two request patterns onto the engine:
-  sporadic — requests arrive singly; the engine runs with n_mb = 1 and the
-             pipeline drains between requests (paper Fig. 3).
-  bursty   — up to n_mb = n_stage requests are co-scheduled as micro-batches
-             filling the interleaved pipeline (paper Fig. 4).
+Composes the LIME-Serve pieces — a RequestQueue clients submit to, an
+execution backend (engine or single-device fallback), and the
+continuous-batching scheduler — behind the one-call API the examples and
+launchers use:
 
-The scheduler is deliberately simple (FIFO + fixed micro-batch slots): the
-paper's contribution is *below* this layer; anything fancier (continuous
-batching) would obscure the reproduction. Prefill runs through the plain
-model path on replicated/GSPMD-sharded params, then the caches are adopted
-into the engine layout (`engine.seed_cache`).
+    srv = LimeServer(cfg, params, engine=engine, pattern="bursty")
+    srv.queue.submit(prompt, max_new_tokens=32)
+    finished = srv.serve_all()
+
+The paper's request patterns map to slot counts: sporadic serves one
+request at a time (n_mb = 1, the pipeline drains between requests); bursty
+fills every micro-batch slot (n_mb = n_stage). Richer arrival processes
+(Poisson, trace replay) live in `serving/traffic.py` and run through the
+same scheduler — see `benchmarks/bench_serving.py`.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-import time
 from collections import deque
-from typing import Any, Callable, Dict, List, Optional
+from typing import List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import model as M
 from repro.core.engine import InterleavedEngine
-
-
-# ----------------------------------------------------------------------------
-# Sampler
-# ----------------------------------------------------------------------------
-@dataclasses.dataclass(frozen=True)
-class SamplerConfig:
-    temperature: float = 0.0        # 0 => greedy
-    top_k: int = 0                  # 0 => full softmax
-    seed: int = 0
-
-
-def sample(logits, cfg: SamplerConfig, key, real_vocab: int):
-    """logits: (B, PV) -> (B,) int32."""
-    lv = logits[:, :real_vocab]
-    if cfg.temperature <= 0.0:
-        return jnp.argmax(lv, axis=-1).astype(jnp.int32)
-    lv = lv / cfg.temperature
-    if cfg.top_k:
-        vals, idx = jax.lax.top_k(lv, cfg.top_k)
-        choice = jax.random.categorical(key, vals)
-        return jnp.take_along_axis(idx, choice[:, None], 1)[:, 0] \
-            .astype(jnp.int32)
-    return jax.random.categorical(key, lv).astype(jnp.int32)
-
-
-# ----------------------------------------------------------------------------
-# Requests
-# ----------------------------------------------------------------------------
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray              # (S,) int32
-    max_new_tokens: int
-    arrival_s: float = 0.0
-    output: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-    first_token_s: Optional[float] = None
-    finish_s: Optional[float] = None
+from repro.serving.backend import EngineBackend
+from repro.serving.sampling import SamplerConfig, sample  # noqa: F401
+from repro.serving.scheduler import (ContinuousBatchingScheduler, Request,
+                                     SchedulerConfig)
 
 
 class RequestQueue:
+    """Client-facing submission queue (rid assignment + FIFO order)."""
+
     def __init__(self):
         self._q: deque[Request] = deque()
         self._next = 0
@@ -86,16 +50,18 @@ class RequestQueue:
             out.append(self._q.popleft())
         return out
 
+    def drain(self) -> List[Request]:
+        out = list(self._q)
+        self._q.clear()
+        return out
+
     def __len__(self):
         return len(self._q)
 
 
-# ----------------------------------------------------------------------------
-# Server
-# ----------------------------------------------------------------------------
 class LimeServer:
-    """Batch scheduler over an InterleavedEngine (or a plain single-host
-    decode fallback when engine is None — used by quickstart on 1 device)."""
+    """Pattern-aware serving over an InterleavedEngine (or a plain
+    single-host decode fallback when engine is None — 1-device runs)."""
 
     def __init__(self, cfg: ModelConfig, params, *,
                  engine: Optional[InterleavedEngine] = None,
@@ -108,10 +74,7 @@ class LimeServer:
         self.sampler = sampler
         self.pattern = pattern
         self.queue = RequestQueue()
-        self._key = jax.random.PRNGKey(sampler.seed)
-        self._prefill = jax.jit(functools.partial(M.prefill, cfg))
-        self._decode = jax.jit(functools.partial(M.decode_step, cfg)) \
-            if engine is None else None
+        self._backend: Optional[EngineBackend] = None
 
     @property
     def slots(self) -> int:
@@ -119,67 +82,31 @@ class LimeServer:
             return 1 if self.pattern == "sporadic" else 4
         return 1 if self.pattern == "sporadic" else self.engine.n_mb
 
-    def _pad_prompts(self, reqs: List[Request]):
-        S = max(len(r.prompt) for r in reqs)
-        toks = np.zeros((len(reqs), S), np.int32)
-        for i, r in enumerate(reqs):
-            toks[i, S - len(r.prompt):] = r.prompt     # left-pad
-        return jnp.asarray(toks)
-
-    def step_batch(self, reqs: List[Request]) -> List[Request]:
-        """Run one co-scheduled batch of requests to completion."""
-        B_needed = self.engine.n_mb * self.engine.mb if self.engine else \
-            len(reqs)
-        reqs = list(reqs)
-        real = len(reqs)
-        toks = self._pad_prompts(reqs)
-        if toks.shape[0] < B_needed:               # pad batch with replicas
-            toks = jnp.concatenate(
-                [toks, jnp.tile(toks[-1:], (B_needed - real, 1))], 0)
-
-        cache = M.init_cache(self.cfg, toks.shape[0], self.max_len)
-        logits, cache = self._prefill(self.params, toks, cache)
-        t0 = time.time()
-
-        if self.engine is not None:
-            state = self.engine.init_state(self.params)
-            state = self.engine.seed_cache(state, cache)
-            step = lambda st, t: self.engine.decode_step(st, t)
-        else:
-            state = cache
-            step = lambda st, t: _swap(self._decode(self.params, st, t))
-
-        max_new = max(r.max_new_tokens for r in reqs)
-        self._key, k = jax.random.split(self._key)
-        tok = sample(logits[:, -1], self.sampler, k, self.cfg.vocab_size)
-        for i, r in enumerate(reqs):
-            r.output.append(int(tok[i]))
-            r.first_token_s = time.time() - t0
-        cur = tok[:, None]
-        for n in range(1, max_new):
-            lg, state = step(state, cur)
-            if lg.ndim == 3:
-                lg = lg[:, 0]
-            self._key, k = jax.random.split(self._key)
-            tok = sample(lg, self.sampler, k, self.cfg.vocab_size)
-            cur = tok[:, None]
-            for i, r in enumerate(reqs):
-                if len(r.output) < r.max_new_tokens:
-                    r.output.append(int(tok[i]))
-        for r in reqs:
-            r.done = True
-            r.finish_s = time.time() - t0
-        return reqs
+    def make_backend(self) -> EngineBackend:
+        # cached: a fresh backend would re-jit prefill/decode (new
+        # functools.partial objects miss jax's jit cache) on every
+        # serve_all() call
+        if self._backend is None:
+            self._backend = EngineBackend(self.cfg, self.params,
+                                          engine=self.engine,
+                                          n_slots=self.slots,
+                                          max_len=self.max_len,
+                                          sampler=self.sampler)
+        return self._backend
 
     def serve_all(self) -> List[Request]:
-        """Drain the queue according to the request pattern."""
-        finished = []
-        while len(self.queue):
-            batch = self.queue.pop_up_to(self.slots)
-            finished.extend(self.step_batch(batch))
-        return finished
-
-
-def _swap(pair):
-    logits, state = pair
-    return logits[:, 0], state
+        """Drain the queue through the continuous-batching scheduler
+        according to the request pattern. Submitted arrival times are
+        relative to this call: the cached backend's clock keeps running
+        across serve_all() calls, so requests are re-based onto it (else
+        a second batch would report the first batch's elapsed time as
+        queueing latency)."""
+        reqs = self.queue.drain()
+        if not reqs:
+            return []
+        backend = self.make_backend()
+        base = backend.now()
+        for r in reqs:
+            r.arrival_s += base
+        sched = ContinuousBatchingScheduler(backend, SchedulerConfig())
+        return sched.serve(reqs)

@@ -1,0 +1,78 @@
+"""Deterministic fallback for the hypothesis API subset this suite uses.
+
+hypothesis is a dev extra (pyproject `[dev]`); CI installs it and gets real
+shrinking + example databases. In environments without it, conftest.py
+installs this module under the name ``hypothesis`` so the property tests
+still run — each ``@given`` body executes ``max_examples`` times over a
+fixed pseudo-random stream (seeded per example index, so failures are
+reproducible and runs are order-independent).
+
+Only the surface the tests touch is implemented: ``given``, ``settings``,
+and ``strategies.{integers, floats, sampled_from, lists, composite}``.
+"""
+from __future__ import annotations
+
+
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda r: r.choice(elements))
+
+
+def lists(elements, min_size=0, max_size=10):
+    return _Strategy(lambda r: [elements._draw(r)
+                                for _ in range(r.randint(min_size,
+                                                         max_size))])
+
+
+def composite(fn):
+    def build(*args, **kwargs):
+        def draw_one(r):
+            return fn(lambda strat: strat._draw(r), *args, **kwargs)
+        return _Strategy(draw_one)
+    return build
+
+
+def given(*strategies_):
+    def deco(fn):
+        # zero-arg wrapper, and no functools.wraps/__wrapped__: pytest
+        # must not see the property's drawn parameters as fixtures
+        def run():
+            n = getattr(run, "_max_examples",
+                        getattr(fn, "_max_examples", 25))
+            for i in range(n):
+                r = random.Random(0x11ED * (i + 1))
+                fn(*[s._draw(r) for s in strategies_])
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        run.__module__ = fn.__module__
+        return run
+    return deco
+
+
+def settings(max_examples=25, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+strategies = types.SimpleNamespace(
+    integers=integers, floats=floats, sampled_from=sampled_from,
+    lists=lists, composite=composite)

@@ -1,6 +1,22 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
 see the real (1-device) CPU; distributed engine tests re-exec themselves in
 a subprocess with a forced device count (see test_engine.py)."""
+import importlib.util
+import pathlib
+import sys
+
+try:
+    import hypothesis                                    # noqa: F401
+except ModuleNotFoundError:
+    # dev extra not installed: register the deterministic stub under the
+    # real name so `from hypothesis import given, ...` keeps working
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        pathlib.Path(__file__).parent / "_hypothesis_stub.py")
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod
+
 import jax
 import jax.numpy as jnp
 import pytest
