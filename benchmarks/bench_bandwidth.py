@@ -2,7 +2,7 @@
 re-drawn every ~50 tokens) on Qwen3-32B."""
 import random
 
-from benchmarks.common import ENVS, run_scenario, speedup_table
+from benchmarks.common import run_scenario, speedup_table
 from repro.configs.registry import get_config
 from repro.core.profiles import env_E2, mbps
 

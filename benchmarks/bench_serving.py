@@ -95,9 +95,12 @@ def run_pattern(args, pattern: str) -> dict:
 
     backend = build_sim_backend(args, slots) if args.backend == "sim" \
         else build_engine_backend(args, slots)
-    sched = ContinuousBatchingScheduler(backend, SchedulerConfig())
+    sched = ContinuousBatchingScheduler(
+        backend, SchedulerConfig(kv_policy=args.kv_policy,
+                                 page_size=args.page_size))
     served = sched.serve(requests_from_arrivals(arrivals))
-    report = summarize(served, pattern=pattern, backend=args.backend)
+    report = summarize(served, pattern=pattern, backend=args.backend,
+                       stats=sched.stats)
     return report.to_dict()
 
 
@@ -119,6 +122,11 @@ def main(argv=None) -> int:
     ap.add_argument("--gap-s", type=float, default=4.0)
     ap.add_argument("--rate-rps", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kv-policy", choices=("reserve", "paged"),
+                    default="reserve",
+                    help="admission accounting: worst-case reservation or "
+                         "page-granular (bench_kvcache.py compares both)")
+    ap.add_argument("--page-size", type=int, default=64)
     ap.add_argument("--trace", default=None,
                     help="JSON arrival trace for --pattern trace")
     ap.add_argument("--out", default=None, help="also write JSON here")

@@ -9,15 +9,13 @@ through the run.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 from repro.configs.base import ModelConfig
-from repro.configs.registry import get_config
 from repro.core.baselines import BASELINES
 from repro.core.cost_model import CostEnv, Workload
 from repro.core.pipeline_sim import SimResult, simulate_lime
-from repro.core.profiles import (DeviceProfile, env_E1, env_E2, env_E3,
-                                 env_lowmem, mbps)
+from repro.core.profiles import DeviceProfile, env_E1, env_E2, env_E3, mbps
 
 N_TOKENS = 300          # generated tokens per measured run
 

@@ -15,7 +15,6 @@ import os
 os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=512")
 import argparse
-import json
 
 import numpy as np
 

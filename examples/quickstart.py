@@ -10,7 +10,6 @@
 """
 import tempfile
 
-import jax
 import numpy as np
 
 from repro.checkpoint import save

@@ -7,7 +7,6 @@ reporting. This is the train_4k shape's code path at laptop scale.
 import argparse
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import restore, save

@@ -6,6 +6,7 @@ mesh (the dry-run environment) and degrades gracefully to plain arrays.
 """
 from __future__ import annotations
 
+import glob
 import json
 import os
 from typing import Any, Dict, Optional
@@ -39,6 +40,9 @@ def _unflatten(flat: Dict[str, Any]):
 
 
 def save(path: str, tree, step: Optional[int] = None) -> None:
+    """Write this host's shard (`shard<process_index>.npz`) plus the
+    manifest. Multi-host runs call save() on every process; each writes
+    its own shard file and process 0's manifest wins (identical keys)."""
     os.makedirs(path, exist_ok=True)
     flat = _flatten(tree)
     arrays = {}
@@ -51,22 +55,38 @@ def save(path: str, tree, step: Optional[int] = None) -> None:
             arr = arr.astype(np.float32)
         arrays[safe] = arr
         manifest["keys"][k] = {"shape": list(arr.shape), "dtype": dtype}
-    np.savez(os.path.join(path, "shard0.npz"), **arrays)
-    with open(os.path.join(path, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
+    np.savez(os.path.join(path, f"shard{jax.process_index()}.npz"),
+             **arrays)
+    if jax.process_index() == 0:
+        with open(os.path.join(path, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
 
 
 def restore(path: str, shardings=None):
+    """Merge every `shard*.npz` under `path` (first occurrence of a key
+    wins — hosts write identical replicated keys) and re-shard onto the
+    current mesh when `shardings` is given."""
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
-    data = np.load(os.path.join(path, "shard0.npz"))
+    shards = sorted(glob.glob(os.path.join(path, "shard*.npz")))
+    if not shards:
+        raise FileNotFoundError(f"no shard*.npz under {path}")
     flat = {}
-    for k, meta in manifest["keys"].items():
-        arr = data[k.replace("/", "__")]
-        if meta["dtype"] == "bfloat16":
-            import ml_dtypes
-            arr = arr.astype(ml_dtypes.bfloat16)
-        flat[k] = arr
+    for shard in shards:
+        data = np.load(shard)
+        for k, meta in manifest["keys"].items():
+            safe = k.replace("/", "__")
+            if k in flat or safe not in data:
+                continue
+            arr = data[safe]
+            if meta["dtype"] == "bfloat16":
+                import ml_dtypes
+                arr = arr.astype(ml_dtypes.bfloat16)
+            flat[k] = arr
+    missing = set(manifest["keys"]) - set(flat)
+    if missing:
+        raise KeyError(f"manifest keys missing from shards: "
+                       f"{sorted(missing)[:5]}...")
     tree = _unflatten(flat)
     if shardings is not None:
         tree = jax.device_put(tree, shardings)

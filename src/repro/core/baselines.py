@@ -26,11 +26,9 @@ adds a growing per-step compute term once the cache no longer fits.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence
 
-from repro.core.cost_model import CostEnv, Workload
+from repro.core.cost_model import CostEnv
 from repro.core.pipeline_sim import SimResult, StepTrace
 
 INF = float("inf")

@@ -36,9 +36,8 @@ Losslessness is the contract: engine output ≡ single-device decode_step
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +47,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import PARTIAL_AUTO_COLLECTIVES_OK, shard_map
 
 from repro.configs.base import Family, ModelConfig
+from repro.kvcache import BlockTable, PagePool, PagedKVConfig
 from repro.models import model as M
 from repro.models import spec as pspec
 
@@ -172,7 +172,8 @@ class InterleavedEngine:
                  stage_axis: str = "data", n_mb: int = 1, mb: int = 1,
                  max_len: int = 256, long_mode: bool = False,
                  prefetch: bool = True, impl: str = "ref",
-                 enc_len: int = 0, fetch_mode: str = "step"):
+                 enc_len: int = 0, fetch_mode: str = "step",
+                 paged: bool = False, page_size: int = 64):
         """fetch_mode:
         'slot' — paper-literal per-segment streaming: an all_to_all inside
                  every pipeline slot re-fetches the active chunk's layers.
@@ -204,6 +205,24 @@ class InterleavedEngine:
             # lossless there, so fall back (new JAX keeps 'step').
             self.fetch_mode = "slot"
         self.S_c = M.kv_cache_len(cfg, max_len, long_mode)
+        # paged KV accounting (DESIGN.md §10): the statically-shaped
+        # per-slot cache is carved into page_size-token pages owned by a
+        # PagePool; slots hold block tables instead of implicit worst-case
+        # reservations, so the serving layer sees page-granular occupancy
+        # and seed_cache adoption moves real pages (see seed_cache).
+        self.paged = paged and self.S_c > 0 and cfg.n_kv_heads > 0
+        self.page_size = page_size
+        if self.paged:
+            self.pages_per_slot = -(-self.S_c // page_size)
+            page_bytes = (2 * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim
+                          * page_size * 2.0)            # k+v, bf16
+            self.page_pool = PagePool(PagedKVConfig(
+                page_size=page_size,
+                device_pages=(n_mb * mb) * self.pages_per_slot,
+                page_bytes=page_bytes))
+            self.slot_tables = [BlockTable(page_size)
+                                for _ in range(n_mb * mb)]
+            self._paged_pos = 0        # host mirror of glob["pos"]
         self._stage_ids = jnp.arange(plan.n_stage, dtype=jnp.int32)
         self._fetch = self._build_fetch() if self.fetch_mode == "step" \
             else None
@@ -656,14 +675,69 @@ class InterleavedEngine:
         # would otherwise double-buffer them (kimi-k2: +4.2 GB/chip peak)
         return jax.jit(fn, donate_argnums=(3,))
 
+    # -- paged slot accounting (DESIGN.md §10) -----------------------------------
+    def _paged_seed_slots(self, ctx: int) -> None:
+        """(Re)build every slot's block table to hold `ctx` tokens."""
+        for t in self.slot_tables:
+            self.page_pool.release_table(t)
+        for t in self.slot_tables:
+            self.page_pool.extend_table(t, min(ctx, self.S_c))
+
+    def _through_pages(self, x: np.ndarray, ctx: int) -> np.ndarray:
+        """Round-trip a model-layout (L, B, S_c, ...) K or V stack through
+        the page pool: scatter each slot's first `ctx` rows into its block
+        table's pages, then gather them back. Page placement is whatever
+        the free list handed out (LIFO — non-contiguous after any realloc),
+        so adoption actually exercises the table indirection; the result is
+        bit-identical by construction (pure data movement)."""
+        from repro.kvcache.layout import gather_from_pages, scatter_to_pages
+        x = np.asarray(x)
+        ctx = min(ctx, self.S_c)
+        pool_shape = (x.shape[0], self.page_pool.alloc.n_pages,
+                      self.page_size) + x.shape[3:]
+        pool_buf = scatter_to_pages(np.zeros(pool_shape, x.dtype), x,
+                                    self.slot_tables, ctx)
+        return gather_from_pages(x.copy(), pool_buf, self.slot_tables, ctx)
+
+    def extend_slot(self, slot: int, n_tokens: Optional[int] = None) -> None:
+        """Page-granular growth for one slot (serving calls this per
+        decode step for live slots). Raises OutOfPages when the pool is
+        dry — cannot happen while every slot's table is capped at
+        pages_per_slot, which extend_to guarantees via S_c clamping."""
+        t = self.slot_tables[slot]
+        target = t.tokens + 1 if n_tokens is None else n_tokens
+        self.page_pool.extend_table(t, min(target, self.S_c))
+
+    def free_slot(self, slot: int) -> None:
+        """Release a completed request's pages (serving release hook)."""
+        self.page_pool.release_table(self.slot_tables[slot])
+
+    def paged_stats(self) -> Dict[str, int]:
+        return {"pages_in_use": self.page_pool.pages_in_use(),
+                "page_size": self.page_size,
+                "slot_tokens": [t.tokens for t in self.slot_tables]}
+
     def seed_cache(self, state, cache) -> Dict[str, Any]:
         """Adopt a model-layout cache (e.g. produced by M.prefill on
-        replicated params) into the engine's per-stage layout."""
+        replicated params) into the engine's per-stage layout.
+
+        Paged mode: adoption is rewritten over block tables — each slot's
+        K/V tokens are scattered into its table's pool pages and gathered
+        back before the per-stage reshape, so the table indirection (not a
+        contiguous memcpy) is what carries the bytes, and slot occupancy
+        is page-granular from the first decode step."""
         plan = self.plan
+        paged_ctx = int(cache["pos"]) if self.paged else 0
+        if self.paged:
+            self._paged_pos = paged_ctx
+            self._paged_seed_slots(paged_ctx)
         new_cache = {}
         glob = dict(state["glob"])
         for kk, v in cache.items():
             if kk in PER_LAYER_CACHE_KEYS:
+                if self.paged and kk in ("k", "v"):
+                    v = jnp.asarray(self._through_pages(v, paged_ctx),
+                                    v.dtype)
                 x = _pad_layers(v, plan.n_layers)
                 shp = x.shape[1:]
                 x = x.reshape(plan.n_seg, plan.n_stage, plan.k,
@@ -716,6 +790,16 @@ class InterleavedEngine:
         for every occupancy level (recompiling per occupancy would defeat
         continuous batching).
         """
+        if self.paged:
+            # page-granular occupancy: live slots grow one token (a new
+            # page every page_size steps); released slots hold nothing.
+            # pos is tracked host-side (seeded in seed_cache, +1 per
+            # step) — a device_get here would sync the async dispatch
+            # pipeline every decode step.
+            self._paged_pos += 1
+            for slot, live in enumerate(np.asarray(active, bool)):
+                if live:
+                    self.extend_slot(slot, self._paged_pos)
         active = jnp.asarray(active, bool)
         toks = jnp.where(active[:, None], tokens.astype(jnp.int32), 0)
         return self.decode_step(state, toks)

@@ -151,3 +151,31 @@ class KVTransferProtocol:
     def effective_kv_tokens(self, i: int, total_tokens: int) -> int:
         """KV tokens resident on device i after delegation (n - n_i^trans)."""
         return max(total_tokens - self.states[i].n_trans, 0)
+
+    # -- Eq. 8 volumes as page movement (DESIGN.md §10) --------------------------
+    def delegated_pages(self, page_size: int) -> int:
+        """Fleet-wide delegated volume in whole pages (floor — a page only
+        moves when every slot in it is delegated)."""
+        total = sum(st.n_trans for st in self.states if st.target is not None)
+        return total // max(page_size, 1)
+
+    def sync_pool(self, pool) -> float:
+        """Reconcile an attached PagePool's host tier with the current
+        Eq. 8 volumes: delegated tokens -> pages resident on the host
+        ("delegated") tier. Called by the simulator every step after
+        refresh()/on_bandwidth(); returns bytes moved so the caller can
+        price the wire (the volume is sized to ride idle network time, so
+        it adds traffic, not latency). Best-effort: clamped to the pages
+        actually in use and the host tier's capacity."""
+        from repro.kvcache.pool import HOST, DEVICE
+        target = self.delegated_pages(pool.page_size)
+        # can't delegate KV that doesn't exist: Eq. 8 sums per-device
+        # volumes over the fleet, the pool holds the admitted streams
+        total = pool.pages_in_use(HOST) + pool.pages_in_use(DEVICE)
+        target = min(target, total)
+        cur = pool.pages_in_use(HOST)
+        if target > cur:
+            return pool.migrate_any(target - cur, HOST)
+        if target < cur:                    # bandwidth drop shrank Eq. 8
+            return pool.migrate_any(cur - target, DEVICE)
+        return 0.0

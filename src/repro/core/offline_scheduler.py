@@ -25,9 +25,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Tuple
 
-from repro.core.cost_model import CostEnv, DeviceAlloc, Plan, Workload
+from repro.core.cost_model import CostEnv, DeviceAlloc, Plan
 
 INF = float("inf")
 

@@ -21,7 +21,7 @@ import dataclasses
 import math
 from typing import List, Optional, Tuple
 
-from repro.core.cost_model import CostEnv, DeviceAlloc, Plan, Workload
+from repro.core.cost_model import CostEnv, Plan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,6 +149,15 @@ class OnlinePlanner:
                 st.plan_idx += 1
                 fired.append((st.dev_idx, step))
         return fired
+
+    def on_pages(self, pages_in_use: int, page_size: int,
+                 transferred: Optional[List[int]] = None
+                 ) -> List[Tuple[int, OffloadPlanStep]]:
+        """Page-granular entry (DESIGN.md §10): walk the TS ladder on
+        *allocated* KV occupancy — pages_in_use × page_size tokens — so
+        thresholds fire on what the paged admission actually holds,
+        including page-rounding slack, rather than a nominal token loop."""
+        return self.on_token(pages_in_use * page_size, transferred)
 
     def extra_load_bytes_seg(self, i: int) -> float:
         st = self.states[i]

@@ -20,9 +20,9 @@ bursty = |D| micro-batches.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Tuple
 
-from repro.core.cost_model import CostEnv, DeviceAlloc, Plan, Workload
+from repro.core.cost_model import CostEnv, Plan
 from repro.core.online_planner import OnlinePlanner
 from repro.core.kv_transfer import KVTransferProtocol
 
@@ -34,6 +34,8 @@ class StepTrace:
     load_stall: float          # time any stage waited on weights
     comm_time: float
     planner_fired: bool = False
+    kv_moved_bytes: float = 0.0  # Eq. 8 page migrations this step (wire
+                                 # volume; rides idle network, not latency)
 
 
 @dataclasses.dataclass
@@ -92,6 +94,25 @@ class InterleavedPipelineSim:
         self.now = 0.0
         self._tok_count = 0
         self._bw = env.bw_net
+        # paged KV accounting (DESIGN.md §10): when a PagePool is attached
+        # the KV-transfer protocol's Eq. 8 volumes are reconciled against
+        # it every step (delegated tokens -> host-tier pages) and
+        # scheduler-driven spill/fetch traffic is priced via
+        # charge_transfer().
+        self.page_pool = None
+        self.kv_moved_bytes = 0.0
+
+    def attach_page_pool(self, pool) -> None:
+        self.page_pool = pool
+
+    def charge_transfer(self, nbytes: float) -> float:
+        """Price scheduler-driven page movement (preemption spill/fetch)
+        at the current network bandwidth; advances the virtual clock —
+        unlike Eq. 8 delegation, a forced swap is on the critical path."""
+        dt = nbytes / max(self._bw, 1e-9)
+        self.now += dt
+        self.kv_moved_bytes += nbytes
+        return dt
 
     # -- per-device per-segment quantities -------------------------------------
     def _layers_seg(self, i: int) -> float:
@@ -163,6 +184,7 @@ class InterleavedPipelineSim:
         self.now = 0.0
         self._tok_count = 0
         self._bw = self.env.bw_net
+        self.kv_moved_bytes = 0.0
         self._loader_free = [0.0] * self.D
         self._load_done = [[0.0] * (self.n_seg + 1) for _ in range(self.D)]
 
@@ -192,15 +214,23 @@ class InterleavedPipelineSim:
                     self.kv.on_bandwidth(new_bw, ctx * n_micro)
                 self._bw = new_bw
         fired = False
+        moved = 0.0
         if self.planner:
             if self.kv:
                 self.kv.refresh(ctx)
+                if self.page_pool is not None:
+                    # Eq. 8 volumes become page migrations on the attached
+                    # pool; sized to ride idle network, so wire volume is
+                    # recorded but adds no step latency
+                    moved = self.kv.sync_pool(self.page_pool)
+                    self.kv_moved_bytes += moved
             offsets = [self.kv.transferred_tokens(i)
                        for i in range(self.D)] if self.kv else None
             eff = ctx if kv_tokens is None else kv_tokens
             fired = bool(self.planner.on_token(eff, offsets))
         t_end, stall, comm = self._step(self.now, ctx, self._bw, n_micro)
-        trace = StepTrace(tok, t_end - self.now, stall, comm, fired)
+        trace = StepTrace(tok, t_end - self.now, stall, comm, fired,
+                          kv_moved_bytes=moved)
         self.now = t_end
         self._tok_count += 1
         return trace

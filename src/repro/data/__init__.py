@@ -1,2 +1,2 @@
-from repro.data.pipeline import SyntheticCorpus, PackedBatches, \
-    make_batches  # noqa: F401
+from repro.data.pipeline import (SyntheticCorpus,  # noqa: F401
+                                 PackedBatches, make_batches)  # noqa: F401

@@ -8,7 +8,7 @@ demonstrate the training stack end-to-end without shipping a dataset.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

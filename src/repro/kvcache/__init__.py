@@ -1,0 +1,15 @@
+"""Paged KV-cache subsystem (DESIGN.md §10).
+
+Layers, bottom to top: allocator (free-list pages + block tables) ->
+pool (two-tier residency: device / host-"delegated", migration byte
+accounting) -> manager (per-request admission, extension, preemption
+spill/recompute, Eq. 8 delegation as page movement). The paged decode
+path (gather through block tables) lives in kernels/decode_attention/
+paged.py and kvcache/paged_decode.py.
+"""
+from repro.kvcache.allocator import (BlockTable, OutOfPages,  # noqa: F401
+                                     PageAllocator)
+from repro.kvcache.manager import (RECOMPUTE, SPILL,  # noqa: F401
+                                   PagedKVManager)
+from repro.kvcache.pool import (DEVICE, HOST, PagedKVConfig,  # noqa: F401
+                                PagePool)

@@ -1,0 +1,46 @@
+"""Host-side page-layout movement (DESIGN.md §10).
+
+One pair of loops owns the dense <-> paged byte movement so the engine's
+seed_cache adoption (core/engine._through_pages) and the single-device
+paged decode's seeding (kvcache/paged_decode.PagedDecodeCache.seed) can
+never diverge on partial-last-page arithmetic:
+
+  dense  (L, B, S, *rest)          per-slot contiguous token rows
+  pool   (L, P, page_size, *rest)  physical pages, any owner
+
+Both operate in place on numpy buffers and copy only the first `ctx`
+tokens of each slot — the tail past ctx holds no tokens (its pages are
+unallocated), garbage there is masked positionally by every consumer.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.kvcache.allocator import BlockTable
+
+
+def scatter_to_pages(pool_buf: np.ndarray, dense: np.ndarray,
+                     tables: Sequence[BlockTable], ctx: int) -> np.ndarray:
+    """dense[:, b, :ctx] -> pool_buf pages named by tables[b]."""
+    ps = pool_buf.shape[2]
+    for b, t in enumerate(tables):
+        for j, pid in enumerate(t.pages):
+            fill = min(ctx - j * ps, ps)
+            if fill > 0:
+                pool_buf[:, pid, :fill] = dense[:, b, j * ps:j * ps + fill]
+    return pool_buf
+
+
+def gather_from_pages(dense_out: np.ndarray, pool_buf: np.ndarray,
+                      tables: Sequence[BlockTable], ctx: int) -> np.ndarray:
+    """Inverse of scatter_to_pages: pool pages -> dense_out[:, b, :ctx]."""
+    ps = pool_buf.shape[2]
+    for b, t in enumerate(tables):
+        for j, pid in enumerate(t.pages):
+            fill = min(ctx - j * ps, ps)
+            if fill > 0:
+                dense_out[:, b, j * ps:j * ps + fill] = \
+                    pool_buf[:, pid, :fill]
+    return dense_out

@@ -1,0 +1,162 @@
+"""Page-granular KV admission: the scheduler-facing facade (DESIGN.md §10).
+
+Worst-case reservation admits a request only if `prompt + max_new` tokens
+fit the budget for its whole lifetime. Page-granular admission allocates
+ceil((prompt+1)/page_size) pages up front and one page per `page_size`
+generated tokens after that, so co-residency is bounded by *actual*
+occupancy — the 3.7× bursty-concurrency regime the paper targets. The
+price is that the pool can run dry mid-generation; the manager exposes the
+two standard outs:
+
+  spill      preempt a victim by migrating its whole table to the host
+             tier (kept warm; resume = fetch back, priced in bytes)
+  recompute  drop the victim's pages entirely; resume re-prefills
+             prompt + generated-so-far (priced in compute by the backend)
+
+Victim choice is the caller's policy (the scheduler preempts the
+latest-admitted request, vLLM-style); the manager keeps the bookkeeping
+honest: a request is either resident (all pages DEVICE), suspended (all
+pages HOST or none), or released.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.kvcache.allocator import BlockTable, OutOfPages
+from repro.kvcache.pool import DEVICE, HOST, PagePool
+
+SPILL = "spill"
+RECOMPUTE = "recompute"
+
+
+class PagedKVManager:
+    def __init__(self, pool: PagePool):
+        self.pool = pool
+        self._tables: Dict[int, BlockTable] = {}
+        self._suspended: Dict[int, bool] = {}
+
+    # -- introspection -----------------------------------------------------------
+    @property
+    def page_size(self) -> int:
+        return self.pool.page_size
+
+    def table(self, rid: int) -> BlockTable:
+        return self._tables[rid]
+
+    def tokens_of(self, rid: int) -> int:
+        return self._tables[rid].tokens
+
+    def pages_of(self, rid: int) -> int:
+        return len(self._tables[rid].pages)
+
+    def device_pages_in_use(self) -> int:
+        return self.pool.pages_in_use(DEVICE)
+
+    def is_suspended(self, rid: int) -> bool:
+        return self._suspended.get(rid, False)
+
+    # -- admission ---------------------------------------------------------------
+    def can_admit(self, n_tokens: int, headroom_pages: int = 0) -> bool:
+        """`headroom_pages`: free device pages that must remain *after*
+        the allocation (admission watermark — each already-resident
+        request will want another page within page_size steps, so
+        admitting into the last free pages guarantees preemption churn)."""
+        need = self.pool.pages_for(n_tokens) + max(headroom_pages, 0)
+        return self.pool.can_alloc(need, DEVICE)
+
+    def admit(self, rid: int, n_tokens: int) -> bool:
+        """Allocate a fresh table holding `n_tokens` (prompt + first token).
+        False (and no side effects) when the device tier can't hold it."""
+        if rid in self._tables:
+            raise ValueError(f"request {rid} already admitted")
+        if not self.can_admit(n_tokens):
+            return False
+        t = BlockTable(self.pool.page_size)
+        self.pool.extend_table(t, n_tokens, DEVICE)
+        self._tables[rid] = t
+        self._suspended[rid] = False
+        return True
+
+    def extend(self, rid: int, n_tokens: Optional[int] = None) -> bool:
+        """Grow `rid` to `n_tokens` (default: +1 token). False on a dry
+        pool — the caller preempts someone and retries."""
+        t = self._tables[rid]
+        target = t.tokens + 1 if n_tokens is None else n_tokens
+        try:
+            self.pool.extend_table(t, target, DEVICE)
+            return True
+        except OutOfPages:
+            return False
+
+    def release(self, rid: int) -> None:
+        t = self._tables.pop(rid)
+        self._suspended.pop(rid, None)
+        self.pool.release_table(t)
+
+    # -- preemption / resumption -------------------------------------------------
+    def preempt(self, rid: int, mode: str = SPILL) -> float:
+        """Suspend `rid`; returns bytes moved (0 for recompute — its cost
+        is compute, charged by the backend at resume). A spill that finds
+        the host tier full (e.g. Eq. 8 delegation occupying it) degrades
+        to recompute — the victim's pages are dropped, not leaked; callers
+        detect the fallback via an empty table (pages == [])."""
+        t = self._tables[rid]
+        self._suspended[rid] = True
+        if mode == SPILL:
+            try:
+                return self.pool.spill_table(t)
+            except OutOfPages:
+                mode = RECOMPUTE
+        if mode != RECOMPUTE:
+            raise ValueError(f"unknown preemption mode {mode!r}")
+        tokens = t.tokens
+        self.pool.release_table(t)
+        t.tokens = tokens               # remember how much to re-prefill
+        return 0.0
+
+    def can_resume(self, rid: int, headroom_pages: int = 0) -> bool:
+        t = self._tables[rid]
+        if t.pages:                     # spilled: fetch back
+            need = len(t.pages) - self.pool.device_pages_of(t) \
+                + max(headroom_pages, 0)
+            return self.pool.free_pages(DEVICE) >= need
+        # recompute: fresh allocation
+        return self.can_admit(t.tokens, headroom_pages)
+
+    def resume(self, rid: int) -> Optional[float]:
+        """Back to resident; returns bytes fetched (0.0 for recompute
+        re-allocation) or None when the device tier still can't hold it."""
+        t = self._tables[rid]
+        if not self.can_resume(rid):
+            return None
+        self._suspended[rid] = False
+        if t.pages:
+            return self.pool.fetch_table(t)
+        tokens, t.tokens = t.tokens, 0
+        self.pool.extend_table(t, tokens, DEVICE)
+        return 0.0
+
+    # -- Eq. 8 mapping: token volumes -> page migrations -------------------------
+    def delegate_tail(self, rid: int, n_tokens: int) -> float:
+        """Migrate the pages backing `rid`'s trailing `n_tokens` to the
+        host tier — the paper's KV-transfer volume (Eq. 8) expressed as
+        actual page movement. Partial pages round *down* (a page migrates
+        only when every slot in it is delegated); returns bytes moved."""
+        t = self._tables[rid]
+        n_pages = min(n_tokens // self.pool.page_size, len(t.pages))
+        if n_pages <= 0:
+            return 0.0
+        return self.pool.migrate(t.pages[-n_pages:], HOST)
+
+    def resident_tokens(self, rid: int) -> int:
+        """Tokens whose pages are on-device (delegated tail excluded)."""
+        t = self._tables[rid]
+        if not t.pages:
+            return 0
+        dev = self.pool.device_pages_of(t)
+        if dev == len(t.pages):
+            return t.tokens
+        return min(dev * self.pool.page_size, t.tokens)
+
+    def active_requests(self) -> List[int]:
+        return [rid for rid, s in self._suspended.items() if not s]

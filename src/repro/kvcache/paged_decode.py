@@ -1,0 +1,165 @@
+"""Single-device decode over a paged KV cache (DESIGN.md §10).
+
+The dense decode path (models/model.decode_step) owns a contiguous
+(L, B, S_c, KV, dh) cache per batch. This module is the same decode with
+the cache paged: K/V live in a shared physical pool (L, P, page_size, KV,
+dh), each sequence names its pages through a block table, and attention
+gathers through the table (kernels/decode_attention/paged.py). Pages are
+allocated from a PagePool as generation crosses page boundaries and
+released when the sequence completes — the engine-tier half of the
+losslessness contract: paged decode must equal decode_step (test_kvcache
+asserts logits parity).
+
+Supported families: standard-attention stacks (DENSE incl. parallel-block
+and local:global/sliding windows). SSM/MoE/hybrid state is not paged —
+their recurrent state is O(1) per sequence, there is nothing to page.
+
+Host/device split: BlockTable + PagePool bookkeeping is host-side python
+(one int per page); the jitted step consumes a device copy of the tables.
+`PagedDecodeCache.step` bridges the two — extend tables for the incoming
+token, then run the compiled step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import Family, ModelConfig
+from repro.kvcache.allocator import BlockTable
+from repro.kvcache.pool import PagedKVConfig, PagePool
+from repro.models import model as M
+from repro.models.attention import paged_attn_decode
+
+
+def _check_family(cfg: ModelConfig) -> None:
+    if cfg.family != Family.DENSE:
+        raise NotImplementedError(
+            f"paged decode supports standard-attention stacks, not "
+            f"{cfg.family} (recurrent state is O(1)/sequence — nothing to "
+            f"page)")
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "impl"),
+                   donate_argnums=(2, 3))
+def _paged_decode_step(cfg: ModelConfig, params, k_pool, v_pool,
+                       block_tables, pos, token, impl: str = "ref"):
+    """One token for the whole batch. k/v_pool: (L, P, ps, KV, dh);
+    block_tables: (B, max_pages); pos: scalar int32 (shared — prompts are
+    left-padded, the decode_step convention); token: (B, 1) int32.
+    Returns (logits (B, 1, PV), k_pool, v_pool)."""
+    B = token.shape[0]
+    ps = k_pool.shape[2]
+    x = M.embed(params, token).astype(jnp.bfloat16)
+
+    page_idx = pos // ps
+    slot = pos % ps
+    page_ids = jnp.take(block_tables, page_idx, axis=1)       # (B,)
+    ctx = jnp.full((B,), pos + 1, jnp.int32)
+
+    def body(carry, xs):
+        x, = carry
+        p = xs["p"]
+        xn = M.rms_norm(x, p["ln1"], cfg.norm_eps)
+        a_out, ck, cv = paged_attn_decode(
+            p["attn"], xn, xs["k"], xs["v"], page_ids, slot, block_tables,
+            ctx, pos, rope_theta=cfg.rope_theta, window=xs["window"],
+            impl=impl)
+        if cfg.parallel_block:
+            x = x + a_out + M.mlp(p["mlp"], xn)
+        else:
+            x = x + a_out
+            x = x + M.mlp(p["mlp"], M.rms_norm(x, p["ln2"], cfg.norm_eps))
+        return (x,), {"k": ck, "v": cv}
+
+    xs = {"p": params["layers"],
+          "window": M.layer_windows(cfg, cfg.n_layers),
+          "k": k_pool, "v": v_pool}
+    (x,), ys = jax.lax.scan(body, (x,), xs)
+    x = M.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return M.unembed(params, x), ys["k"], ys["v"]
+
+
+class PagedDecodeCache:
+    """Owns the pools + tables for one decode batch."""
+
+    def __init__(self, cfg: ModelConfig, batch: int, max_len: int, *,
+                 page_size: int = 64, pool: Optional[PagePool] = None,
+                 impl: str = "ref"):
+        _check_family(cfg)
+        self.cfg = cfg
+        self.batch = batch
+        self.max_len = max_len
+        self.impl = impl
+        self.max_pages = -(-max_len // page_size)
+        if pool is None:
+            pool = PagePool(PagedKVConfig(
+                page_size=page_size,
+                device_pages=batch * self.max_pages))
+        assert pool.page_size == page_size
+        self.pool = pool
+        self.tables: List[BlockTable] = [BlockTable(page_size)
+                                         for _ in range(batch)]
+        P = pool.alloc.n_pages
+        shp = (cfg.n_layers, P, page_size, cfg.n_kv_heads, cfg.head_dim)
+        self.k_pool = jnp.zeros(shp, jnp.bfloat16)
+        self.v_pool = jnp.zeros(shp, jnp.bfloat16)
+        self.pos = 0
+        self._bt_dev = None
+
+    # -- table <-> device bridge -------------------------------------------------
+    def _device_tables(self):
+        if self._bt_dev is None:
+            bt = np.full((self.batch, self.max_pages), -1, np.int32)
+            for b, t in enumerate(self.tables):
+                bt[b, :len(t.pages)] = t.pages
+            self._bt_dev = jnp.asarray(bt)
+        return self._bt_dev
+
+    def _extend_all(self, n_tokens: int) -> None:
+        for t in self.tables:
+            if self.pool.extend_table(t, n_tokens):
+                self._bt_dev = None      # table grew: refresh device copy
+
+    # -- seeding from a dense prefill cache --------------------------------------
+    def seed(self, cache: Dict) -> None:
+        """Adopt a model-layout cache (M.prefill output): scatter its K/V
+        through freshly allocated block tables into the pools."""
+        from repro.kvcache.layout import scatter_to_pages
+        pos = int(cache["pos"])
+        self._extend_all(pos)
+        kp = scatter_to_pages(np.zeros(self.k_pool.shape, np.float32),
+                              np.asarray(cache["k"][:, :self.batch],
+                                         np.float32), self.tables, pos)
+        vp = scatter_to_pages(np.zeros(self.v_pool.shape, np.float32),
+                              np.asarray(cache["v"][:, :self.batch],
+                                         np.float32), self.tables, pos)
+        self.k_pool = jnp.asarray(kp, self.k_pool.dtype)
+        self.v_pool = jnp.asarray(vp, self.v_pool.dtype)
+        self.pos = pos
+
+    # -- one decode step ---------------------------------------------------------
+    def step(self, params, token):
+        """token: (B, 1) int32 -> logits (B, 1, PV). Allocates the next
+        page for every sequence when `pos` crosses a page boundary."""
+        if self.pos >= self.max_len:
+            raise ValueError(f"decode past max_len ({self.max_len})")
+        self._extend_all(self.pos + 1)
+        logits, self.k_pool, self.v_pool = _paged_decode_step(
+            self.cfg, params, self.k_pool, self.v_pool,
+            self._device_tables(), jnp.int32(self.pos),
+            jnp.asarray(token, jnp.int32), self.impl)
+        self.pos += 1
+        return logits
+
+    def release(self) -> None:
+        for t in self.tables:
+            self.pool.release_table(t)
+        self._bt_dev = None
+
+    @property
+    def pages_in_use(self) -> int:
+        return sum(len(t.pages) for t in self.tables)

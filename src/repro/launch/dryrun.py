@@ -20,12 +20,10 @@ Usage:
   python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
 """
 import argparse
-import functools
 import json
 import math
-import re
 import sys
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -33,8 +31,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import Family, InputShape, ModelConfig
-from repro.configs.registry import (ASSIGNED_ARCHS, INPUT_SHAPES, get_config,
-                                    dryrun_pairs)
+from repro.configs.registry import INPUT_SHAPES, get_config, dryrun_pairs
 from repro.core.engine import InterleavedEngine, UniformPlan
 from repro.launch.mesh import make_production_mesh
 from repro.models import model as M

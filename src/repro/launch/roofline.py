@@ -21,9 +21,9 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
-from repro.configs.base import AttnKind, Family, InputShape, ModelConfig
+from repro.configs.base import AttnKind, InputShape, ModelConfig
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9

@@ -10,8 +10,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
-import jax.numpy as jnp
 
 from repro.configs.registry import get_config, get_smoke_config
 from repro.data import make_batches

@@ -15,8 +15,6 @@ per-layer window array.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -160,6 +158,38 @@ def attn_decode(params, x, cache_k, cache_v, pos_ids, pos, slot, *, rope_theta,
         out = da_ops.decode_attention(q, ck, cv, pos_ids, pos, window=window)
     else:
         out = decode_attention_ref(q, ck, cv, pos_ids, pos, window=window)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, ck, cv
+
+
+def paged_attn_decode(params, x, k_pool, v_pool, page_ids, slot,
+                      block_tables, ctx_lens, pos, *, rope_theta,
+                      window=None, impl: str = "ref"):
+    """Single-token decode against a *paged* KV pool (DESIGN.md §10).
+
+    x: (B, 1, D); k_pool/v_pool: (P, page_size, KV, dh) shared physical
+    pages; page_ids: (B,) physical page receiving this token; slot: scalar
+    offset inside that page (all sequences share `pos`, so it is uniform);
+    block_tables: (B, max_pages) int32 (-1 pads); ctx_lens: (B,) tokens
+    live *including* this one. Returns (out, new_k_pool, new_v_pool)."""
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    posb = jnp.full((B, 1), pos)
+    q = apply_rope(q, posb, rope_theta)
+    k = apply_rope(k, posb, rope_theta)
+    ck = k_pool.at[page_ids, slot].set(k[:, 0].astype(k_pool.dtype))
+    cv = v_pool.at[page_ids, slot].set(v[:, 0].astype(v_pool.dtype))
+    if impl == "pallas":
+        from repro.kernels.decode_attention import paged as pg
+        out = pg.paged_decode_attention(q, ck, cv, block_tables, ctx_lens,
+                                        window=window)
+    else:
+        from repro.kernels.decode_attention.paged import \
+            paged_decode_attention_ref
+        out = paged_decode_attention_ref(q, ck, cv, block_tables, ctx_lens,
+                                         window=window)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
     return y, ck, cv
 

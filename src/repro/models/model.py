@@ -16,8 +16,7 @@ array fed to one homogeneous scan body.
 from __future__ import annotations
 
 import contextlib
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -28,8 +27,9 @@ from repro.models import spec as pspec
 from repro.models.attention import (attention_specs, attn_forward, attn_decode,
                                     cross_attn_decode)
 from repro.models.modules import (embed, embed_specs, mlp, mlp_specs, rms_norm,
-                                  rms_norm_spec, round_up, unembed,
-                                  cross_entropy_loss)
+                                  rms_norm_spec, unembed,
+                                  round_up,  # noqa: F401  (M.* namespace API)
+                                  cross_entropy_loss)  # noqa: F401
 from repro.models.moe import moe_specs, moe_forward
 from repro.models.ssm import (rwkv_timemix_specs, rwkv_channelmix_specs,
                               rwkv_timemix, rwkv_channelmix,

@@ -15,7 +15,6 @@ becomes an attention/expert split (DESIGN.md §4).
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ only the O(dh^2)-per-step recurrence runs under ``lax.scan``. The Pallas kernel
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,2 +1,3 @@
-from repro.optim.adamw import AdamW, AdamWState, cosine_schedule, \
-    constant_schedule, global_norm  # noqa: F401
+from repro.optim.adamw import (AdamW, AdamWState,  # noqa: F401
+                               cosine_schedule,  # noqa: F401
+                               constant_schedule, global_norm)  # noqa: F401

@@ -70,6 +70,7 @@ class SimBackend:
             env, plan, use_planner=use_planner,
             use_kv_transfer=use_kv_transfer, prompt_tokens=prompt_tokens)
         self._ctx: Dict[int, int] = {}        # slot -> prompt + generated
+        self._kv_pages = None                 # (pages_in_use, page_size)
 
     # -- clock -------------------------------------------------------------------
     def now(self) -> float:
@@ -94,13 +95,43 @@ class SimBackend:
         budget = max(agg - cfg.total_params() * 2, agg * 0.03)
         return int(budget // rate)
 
+    def kv_bytes_per_token(self) -> float:
+        """Fleet KV bytes one context token costs one sequence (page
+        pricing for the paged scheduler's spill/fetch accounting)."""
+        cfg = self.env.work.cfg
+        w = self.env.work
+        return cfg.n_layers * w.kv_bytes_per_token_layer() \
+            / (max(w.mb, 1) * max(w.n_micro, 1))
+
+    # -- paged-KV hooks (DESIGN.md §10) ------------------------------------------
+    def note_kv_pages(self, pages_in_use: int, page_size: int) -> None:
+        """Scheduler callback: current page-granular occupancy. Attaches
+        the planner/KV-transfer accounting to *allocated* pages, so the TS
+        ladder (paper Eq. 5) fires on what admission actually holds."""
+        self._kv_pages = (pages_in_use, page_size)
+
+    def attach_page_pool(self, pool) -> None:
+        """Expose a PagePool to the simulator so Eq. 8 volumes move real
+        pages (core/kv_transfer.sync_pool) every step."""
+        self.sim.attach_page_pool(pool)
+
+    def charge_transfer(self, nbytes: float) -> None:
+        """Preemption spill/fetch traffic: advances the virtual clock."""
+        self.sim.charge_transfer(nbytes)
+
     # -- serving hooks -----------------------------------------------------------
+    @staticmethod
+    def _prefill_span(req) -> int:
+        # a recompute-resumed request re-prefills prompt + generated
+        return getattr(req, "prefill_tokens", None) or req.prompt_len
+
     def start_batch(self, reqs: Sequence) -> List[Optional[int]]:
         out: List[Optional[int]] = []
         for slot, r in enumerate(reqs):
-            self._ctx[slot] = r.prompt_len
+            self._ctx[slot] = self._prefill_span(r)
         # prefill priced as one pipeline pass at the longest prompt
-        self.sim.step_once(ctx=max((r.prompt_len for r in reqs), default=1),
+        self.sim.step_once(ctx=max((self._prefill_span(r) for r in reqs),
+                                   default=1),
                            n_micro=max(len(reqs), 1),
                            kv_tokens=self._planner_tokens())
         for slot, r in enumerate(reqs):
@@ -111,8 +142,9 @@ class SimBackend:
     def join(self, slot: int, req) -> Optional[int]:
         # mid-flight admission: the joiner's prefill rides one step at its
         # own prompt span before it starts decoding with the others
-        self._ctx[slot] = req.prompt_len
-        self.sim.step_once(ctx=max(req.prompt_len, 1), n_micro=1,
+        span = self._prefill_span(req)
+        self._ctx[slot] = span
+        self.sim.step_once(ctx=max(span, 1), n_micro=1,
                            kv_tokens=self._planner_tokens())
         self._ctx[slot] += 1
         return None
@@ -131,8 +163,11 @@ class SimBackend:
         self._ctx.pop(slot, None)
 
     def _planner_tokens(self) -> int:
-        total = sum(self._ctx.values())
         n_micro_env = max(self.env.work.n_micro, 1)
+        if self._kv_pages is not None:
+            pages, ps = self._kv_pages        # real page occupancy
+            return -(-(pages * ps) // n_micro_env)
+        total = sum(self._ctx.values())
         return -(-total // n_micro_env)       # ceil-div
 
 
@@ -153,7 +188,8 @@ class EngineBackend:
     can_join_running = False
 
     def __init__(self, cfg, params, *, engine=None, n_slots: int = 0,
-                 max_len: int = 512, sampler=None, prompt_seed: int = 0):
+                 max_len: int = 512, sampler=None, prompt_seed: int = 0,
+                 paged: bool = False, page_size: int = 64):
         import jax
 
         from repro.models import model as M
@@ -163,6 +199,13 @@ class EngineBackend:
         self.params = params
         self.engine = engine
         self.max_len = max_len
+        # paged=True routes the single-device path through the paged
+        # decode (block-table gather attention, kvcache/paged_decode);
+        # with an engine, pass paged=True to the engine itself instead
+        # (slot-level page accounting + paged seed_cache adoption).
+        self.paged = paged and engine is None
+        self.page_size = page_size
+        self._paged_cache = None
         self.sampler = sampler if sampler is not None else SamplerConfig()
         # batch_width: what the compiled step expects (fixed); n_slots:
         # what the scheduler may co-schedule (sporadic serves 1 through a
@@ -194,6 +237,10 @@ class EngineBackend:
     def kv_budget_tokens(self) -> Optional[int]:
         # the engine's cache is statically shaped: max_len per slot
         return self.n_slots * self.max_len
+
+    def kv_bytes_per_token(self) -> float:
+        return 2.0 * self.cfg.n_layers * self.cfg.n_kv_heads \
+            * self.cfg.head_dim * 2.0         # k+v, bf16
 
     def max_request_tokens(self) -> Optional[int]:
         """Per-slot ceiling: a single request's prompt + max_new must fit
@@ -250,6 +297,15 @@ class EngineBackend:
         if self.engine is not None:
             state = self.engine.init_state(self.params)
             self._state = self.engine.seed_cache(state, cache)
+        elif self.paged:
+            from repro.kvcache.paged_decode import PagedDecodeCache
+            if self._paged_cache is not None:
+                self._paged_cache.release()
+            self._paged_cache = PagedDecodeCache(
+                self.cfg, toks.shape[0], self.max_len,
+                page_size=self.page_size)
+            self._paged_cache.seed(cache)
+            self._state = None
         else:
             self._state = cache
         tok = self._sample(logits[:, -1])
@@ -264,6 +320,8 @@ class EngineBackend:
         if self.engine is not None:
             lg, self._state = self.engine.decode_requests(
                 self._state, self._cur, jnp.asarray(active))
+        elif self.paged:
+            lg = self._paged_cache.step(self.params, self._cur)[:, 0]
         else:
             lg, self._state = self._decode(self.params, self._state,
                                            self._cur)
@@ -280,6 +338,7 @@ class EngineBackend:
             "engine batches are fixed at cache-seed time")
 
     def release(self, slot: int) -> None:
-        # nothing to free: the slot keeps padding the fixed batch until
-        # the epoch drains (see decode_active)
-        pass
+        # the slot keeps padding the fixed batch until the epoch drains
+        # (see decode_active); with a paged engine its pages are freed now
+        if self.engine is not None and getattr(self.engine, "paged", False):
+            self.engine.free_slot(slot)

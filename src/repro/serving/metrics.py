@@ -32,7 +32,7 @@ class ServingReport:
     pattern: str
     backend: str
     n_requests: int
-    n_rejected: int
+    n_rejected: int                # shed at intake (queue/KV oversize)
     total_tokens: int
     span_s: float                  # first arrival -> last completion
     ms_per_token: float
@@ -42,6 +42,13 @@ class ServingReport:
     ttft_p99_s: float
     latency_p50_s: float
     latency_p99_s: float
+    # paged-KV accounting (DESIGN.md §10; zero under reservation policy)
+    n_preempted: int = 0           # preemption events (spill or recompute)
+    peak_active: int = 0           # max co-resident requests
+    peak_kv_pages: int = 0         # max device-tier pages in use
+    kv_pages_spilled: int = 0
+    kv_pages_fetched: int = 0
+    kv_migrated_bytes: float = 0.0
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -50,13 +57,15 @@ class ServingReport:
         return json.dumps(self.to_dict(), indent=indent)
 
 
-def summarize(requests: List, *, pattern: str = "",
-              backend: str = "") -> ServingReport:
+def summarize(requests: List, *, pattern: str = "", backend: str = "",
+              stats: Optional[Dict] = None) -> ServingReport:
     """Build a ServingReport from served request records (anything with
-    arrival_s / first_token_s / finish_s / output / rejected attributes)."""
+    arrival_s / first_token_s / finish_s / output / rejected attributes).
+    `stats`: the scheduler's counter dict (peak occupancy, page traffic)."""
     served = [r for r in requests if not getattr(r, "rejected", False)
               and r.finish_s is not None]
     rejected = [r for r in requests if getattr(r, "rejected", False)]
+    stats = stats or {}
     total_tokens = sum(getattr(r, "generated", 0) or len(r.output)
                       for r in served)
     if served:
@@ -78,4 +87,10 @@ def summarize(requests: List, *, pattern: str = "",
         throughput_req_s=(len(served) / span if span else 0.0),
         ttft_p50_s=percentile(ttfts, 50), ttft_p99_s=percentile(ttfts, 99),
         latency_p50_s=percentile(lats, 50),
-        latency_p99_s=percentile(lats, 99))
+        latency_p99_s=percentile(lats, 99),
+        n_preempted=sum(getattr(r, "preempted", 0) for r in requests),
+        peak_active=int(stats.get("peak_active", 0)),
+        peak_kv_pages=int(stats.get("peak_kv_pages", 0)),
+        kv_pages_spilled=int(stats.get("kv_pages_spilled", 0)),
+        kv_pages_fetched=int(stats.get("kv_pages_fetched", 0)),
+        kv_migrated_bytes=float(stats.get("kv_migrated_bytes", 0.0)))

@@ -1,15 +1,23 @@
-"""Continuous-batching scheduler for LIME-Serve (DESIGN.md §9).
+"""Continuous-batching scheduler for LIME-Serve (DESIGN.md §9, §10).
 
 One scheduler in front of both execution substrates (engine and simulator,
 behind the InferenceBackend protocol in `serving/backend.py`):
 
-  admission   a request is admitted only when the fleet's KV budget can
-              hold its worst case (prompt + max_new tokens) alongside every
-              co-resident request — the same per-request accounting whose
-              token totals drive the OnlinePlanner's TS thresholds inside
-              the simulator backend (paper Eq. 5).
+  admission   two policies (SchedulerConfig.kv_policy):
+              "reserve" — a request is admitted only when the fleet's KV
+              budget can hold its worst case (prompt + max_new tokens)
+              alongside every co-resident request (paper Eq. 5 accounting).
+              "paged"   — page-granular (DESIGN.md §10): admission
+              allocates ceil((prompt+1)/page_size) pages from a two-tier
+              PagePool and one page per page_size generated tokens after
+              that, so co-residency is bounded by actual occupancy, not
+              the worst case. When the pool runs dry mid-generation the
+              latest-admitted request is preempted: its pages spill to
+              the host tier (swap, fetched back on resume) or are dropped
+              for recompute (resume re-prefills prompt + generated).
   queueing    FIFO past the admission gate; arrivals beyond `max_queue`
-              are rejected (shed) rather than queued forever.
+              are rejected (shed) rather than queued forever. Preempted
+              requests resume ahead of fresh admissions.
   batching    up to `backend.n_slots` requests ride the pipeline's
               micro-batch slots. Backends that support it
               (`can_join_running`) refill freed slots mid-flight —
@@ -29,6 +37,8 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
+from repro.kvcache import PagedKVConfig, PagedKVManager, PagePool
+
 
 @dataclasses.dataclass
 class Request:
@@ -43,6 +53,8 @@ class Request:
                                     # emit steps without real token ids)
     done: bool = False
     rejected: bool = False
+    preempted: int = 0              # times evicted mid-generation
+    restart_tokens: int = 0         # recompute-resume: context to re-prefill
     first_token_s: Optional[float] = None
     finish_s: Optional[float] = None
 
@@ -54,8 +66,21 @@ class Request:
 
     @property
     def kv_tokens(self) -> int:
-        """Worst-case KV footprint in tokens (admission currency)."""
+        """Worst-case KV footprint in tokens (reservation currency)."""
         return self.prompt_len + self.max_new_tokens
+
+    @property
+    def kv_tokens_now(self) -> int:
+        """Actual KV occupancy in tokens (page-admission currency)."""
+        return self.prompt_len + self.generated
+
+    @property
+    def prefill_tokens(self) -> int:
+        """Context span the backend sees at (re-)admission: the prompt for
+        a fresh request, prompt + generated for a resumed one (spill kept
+        the KV — the re-entry step runs at the full context; recompute
+        re-prefills the same span, its restart_tokens equals it)."""
+        return self.prompt_len + self.generated
 
     @property
     def ttft_s(self) -> Optional[float]:
@@ -79,6 +104,11 @@ def requests_from_arrivals(arrivals, *, start_rid: int = 0) -> List[Request]:
 class SchedulerConfig:
     max_queue: int = 4096                    # beyond this: shed (rejected)
     kv_budget_tokens: Optional[int] = None   # None -> ask the backend
+    kv_policy: str = "reserve"               # "reserve" | "paged"
+    page_size: int = 64                      # paged: tokens per page
+    preempt: str = "spill"                   # paged: "spill" | "recompute"
+    host_kv_budget_tokens: Optional[int] = None  # paged: spill-tier size
+                                                 # (None -> device budget)
 
 
 class ContinuousBatchingScheduler:
@@ -99,27 +129,141 @@ class ContinuousBatchingScheduler:
         # optional batch-composition constraint (engine: left-padding
         # makes co-scheduled requests share position space)
         self._fits_batch = getattr(backend, "fits_batch", None)
+        # page-granular admission state (DESIGN.md §10)
+        assert config.kv_policy in ("reserve", "paged"), config.kv_policy
+        self.paged = config.kv_policy == "paged" and budget is not None
+        self.mgr: Optional[PagedKVManager] = None
+        if self.paged:
+            host = config.host_kv_budget_tokens
+            host = budget if host is None else host
+            self.mgr = PagedKVManager(PagePool(PagedKVConfig(
+                page_size=config.page_size,
+                device_pages=budget // config.page_size,
+                host_pages=host // config.page_size,
+                page_bytes=self._page_bytes())))
+            # let the simulator move Eq. 8 volumes on this pool (see
+            # core/kv_transfer.sync_pool; no-op for wall-clock backends)
+            attach = getattr(backend, "attach_page_pool", None)
+            if attach:
+                attach(self.mgr.pool)
+        # preemption events are counted on the Request records themselves
+        # (summarize sums Request.preempted — single source of truth)
+        self.stats: Dict[str, float] = {
+            "peak_active": 0, "peak_kv_pages": 0,
+            "kv_pages_spilled": 0, "kv_pages_fetched": 0,
+            "kv_migrated_bytes": 0.0}
+
+    def _page_bytes(self) -> float:
+        fn = getattr(self.backend, "kv_bytes_per_token", None)
+        return (fn() if fn else 0.0) * self.config.page_size
 
     # -- admission -------------------------------------------------------------
-    def _admits(self, req: Request) -> bool:
+    def _admits(self, req: Request, active_count: int = 0) -> bool:
         if self.kv_budget is None:
             return True
+        if self.paged:
+            # watermark: keep one free page per already-resident request
+            # (they each want another page within page_size steps) —
+            # admitting into the last pages guarantees preemption churn
+            return self.mgr.can_admit(req.prefill_tokens + 1,
+                                      headroom_pages=active_count)
         return self._kv_in_use + req.kv_tokens <= self.kv_budget
 
+    def _on_admit(self, req: Request) -> None:
+        if self.paged:
+            self.mgr.admit(req.rid, req.prefill_tokens + 1)
+        else:
+            self._kv_in_use += req.kv_tokens
+
+    def _on_finish(self, req: Request) -> None:
+        if self.paged:
+            self.mgr.release(req.rid)
+        else:
+            self._kv_in_use -= req.kv_tokens
+
     def _oversized(self, req: Request) -> bool:
-        """Can never be served, even on an idle fleet."""
+        """Can never be served, even on an idle fleet (both policies cap
+        a lone request at the device KV budget — paged mode never spills
+        a request's own working set). Paged capacity is page-rounded:
+        floor(budget/page_size) whole pages, less than the token budget —
+        a request that fits the tokens but not the pages would otherwise
+        self-preempt on every token past the last page boundary."""
         if self.max_request is not None and req.kv_tokens > self.max_request:
             return True
-        return self.kv_budget is not None and req.kv_tokens > self.kv_budget
+        if self.kv_budget is None:
+            return False
+        if self.paged:
+            return self.mgr.pool.pages_for(req.kv_tokens) \
+                > self.mgr.pool.cfg.device_pages
+        return req.kv_tokens > self.kv_budget
+
+    def _note_occupancy(self, active_count: int) -> None:
+        self.stats["peak_active"] = max(self.stats["peak_active"],
+                                        active_count)
+        if self.paged:
+            pages = self.mgr.device_pages_in_use()
+            self.stats["peak_kv_pages"] = max(self.stats["peak_kv_pages"],
+                                              pages)
+            note = getattr(self.backend, "note_kv_pages", None)
+            if note:
+                note(pages, self.config.page_size)
+
+    def _charge(self, nbytes: float) -> None:
+        if nbytes:
+            fn = getattr(self.backend, "charge_transfer", None)
+            if fn:
+                fn(nbytes)
+
+    # -- paged growth + preemption ----------------------------------------------
+    def _grow_active(self, active: Dict[int, Request],
+                     order: List[int], suspended: Deque[Request]) -> None:
+        """Before a decode step every live request needs room for one more
+        token. On a dry pool, preempt latest-admitted victims (vLLM-style)
+        until the extension fits; a request that cannot even self-extend
+        after evicting everyone else suspends itself (can't happen while
+        _oversized() gates admission, kept as a defensive terminal)."""
+        for slot in list(sorted(active, key=lambda s: order.index(s))):
+            r = active.get(slot)
+            if r is None:
+                continue
+            while not self.mgr.extend(r.rid, r.kv_tokens_now + 1):
+                victims = [s for s in sorted(active,
+                                             key=lambda s: order.index(s),
+                                             reverse=True) if s != slot]
+                victim = victims[0] if victims else slot
+                self._preempt(victim, active, suspended)
+                if victim == slot:
+                    break
+
+    def _preempt(self, slot: int, active: Dict[int, Request],
+                 suspended: Deque[Request]) -> None:
+        r = active.pop(slot)
+        r.preempted += 1
+        moved = self.mgr.preempt(r.rid, self.config.preempt)
+        self._charge(moved)
+        if not self.mgr.table(r.rid).pages:   # recompute (or spill fallback)
+            r.restart_tokens = r.kv_tokens_now
+        suspended.append(r)
+        self.backend.release(slot)
+
+    def _try_resume(self, req: Request) -> bool:
+        moved = self.mgr.resume(req.rid)
+        if moved is None:
+            return False
+        self._charge(moved)
+        req.restart_tokens = 0        # resumed: no pending recompute span
+        return True
 
     # -- main loop ---------------------------------------------------------------
     def serve(self, requests: List[Request]) -> List[Request]:
-        """Run every request to completion (or rejection); returns them all,
-        completion order first, then rejected."""
+        """Run every request to completion (or rejection); returns them
+        all, completion order first, then rejected."""
         pending: Deque[Request] = deque(
             sorted(requests, key=lambda r: r.arrival_s))
         queue: Deque[Request] = deque()
+        suspended: Deque[Request] = deque()   # preempted, resume first
         active: Dict[int, Request] = {}       # slot -> request
+        order: List[int] = []                 # admission order of slots
         done: List[Request] = []
         shed: List[Request] = []
 
@@ -132,11 +276,53 @@ class ContinuousBatchingScheduler:
                 else:
                     queue.append(r)
 
-        while pending or queue or active:
+        def next_candidate(batch):
+            """Head-of-line pick: suspended (resume) before fresh."""
+            n_resident = len(active) + len(batch)
+            if suspended:
+                r = suspended[0]
+                if not self.mgr.can_resume(r.rid,
+                                           headroom_pages=n_resident):
+                    return None
+                if self._fits_batch is not None and batch \
+                        and not self._fits_batch(batch, r):
+                    return None
+                return "suspended"
+            if queue:
+                r = queue[0]
+                if not self._admits(r, n_resident):
+                    return None
+                if self._fits_batch is not None and batch \
+                        and not self._fits_batch(batch, r):
+                    return None
+                return "queue"
+            return None
+
+        def pop_candidate(kind) -> Request:
+            if kind == "suspended":
+                r = suspended.popleft()
+                self._try_resume(r)
+                # the re-entry step emits a token; make room for its KV
+                # (best effort — _grow_active preempts if this lost a race)
+                self.mgr.extend(r.rid, r.kv_tokens_now + 1)
+                return r
+            r = queue.popleft()
+            self._on_admit(r)
+            return r
+
+        def finish(r: Request, slot: int, t: float):
+            r.done = True
+            r.finish_s = t
+            self._on_finish(r)
+            done.append(r)
+            del active[slot]
+            self.backend.release(slot)
+
+        while pending or queue or suspended or active:
             intake(self.backend.now())
 
             if not active:
-                if not queue:
+                if not queue and not suspended:
                     if not pending:   # intake shed the last arrivals
                         break
                     # idle: jump to the next arrival
@@ -144,43 +330,55 @@ class ContinuousBatchingScheduler:
                     intake(self.backend.now())
                     continue
                 batch, slots = [], list(range(self.backend.n_slots))
-                while queue and len(batch) < len(slots) \
-                        and self._admits(queue[0]) \
-                        and (self._fits_batch is None or not batch
-                             or self._fits_batch(batch, queue[0])):
-                    r = queue.popleft()
-                    self._kv_in_use += r.kv_tokens
-                    batch.append(r)
+                while len(batch) < len(slots):
+                    kind = next_candidate(batch)
+                    if kind is None:
+                        break
+                    batch.append(pop_candidate(kind))
                 if not batch:
-                    # head-of-line blocked on KV budget with nothing in
-                    # flight: impossible unless budget < kv_tokens, which
+                    # head-of-line blocked with nothing in flight: only
+                    # reachable when budget < kv_tokens, which
                     # _oversized() already shed — defensive guard
-                    r = queue.popleft()
+                    if suspended:
+                        r = suspended.popleft()
+                        self.mgr.release(r.rid)   # don't leak its pages
+                    else:
+                        r = queue.popleft()
                     r.rejected = True
                     shed.append(r)
                     continue
                 first = self.backend.start_batch(batch)
                 t = self.backend.now()
+                order = list(range(len(batch)))
                 for slot, (r, tok) in enumerate(zip(batch, first)):
                     active[slot] = r
-                    r.first_token_s = t
+                    if r.first_token_s is None:
+                        r.first_token_s = t
                     r.generated += 1
                     if tok is not None:
                         r.output.append(tok)
                     if r.generated >= r.max_new_tokens:  # max_new == 1
-                        self._finish(r, slot, active, done, t)
+                        finish(r, slot, t)
+                self._note_occupancy(len(batch))
                 continue
 
             # one decode step for every live slot
+            if self.paged:
+                self._grow_active(active, order, suspended)
+                self._note_occupancy(len(active))
+                if not active:
+                    continue          # everyone preempted (defensive)
             emitted = self.backend.decode_active(sorted(active))
             t = self.backend.now()
             for slot, tok in emitted.items():
-                r = active[slot]
+                r = active.get(slot)
+                if r is None:         # preempted out of this step
+                    continue
                 r.generated += 1
                 if tok is not None:
                     r.output.append(tok)
                 if r.generated >= r.max_new_tokens:
-                    self._finish(r, slot, active, done, t)
+                    finish(r, slot, t)
 
             # continuous batching: refill freed slots mid-flight
             if self.backend.can_join_running and active:
@@ -188,31 +386,27 @@ class ContinuousBatchingScheduler:
                 free = [s for s in range(self.backend.n_slots)
                         if s not in active]
                 for slot in free:
-                    if not queue or not self._admits(queue[0]):
+                    kind = next_candidate(list(active.values()))
+                    if kind is None:
                         break
-                    if self._fits_batch is not None and not \
-                            self._fits_batch(list(active.values()),
-                                             queue[0]):
-                        break
-                    r = queue.popleft()
-                    self._kv_in_use += r.kv_tokens
+                    r = pop_candidate(kind)
                     active[slot] = r
+                    if slot in order:
+                        order.remove(slot)
+                    order.append(slot)
                     tok = self.backend.join(slot, r)
-                    r.first_token_s = self.backend.now()
+                    if r.first_token_s is None:
+                        r.first_token_s = self.backend.now()
                     r.generated += 1
                     if tok is not None:
                         r.output.append(tok)
                     if r.generated >= r.max_new_tokens:  # max_new == 1
-                        self._finish(r, slot, active, done,
-                                     self.backend.now())
+                        finish(r, slot, self.backend.now())
+                self._note_occupancy(len(active))
 
+        if self.paged:
+            pool = self.mgr.pool
+            self.stats["kv_pages_spilled"] = pool.spilled_pages
+            self.stats["kv_pages_fetched"] = pool.fetched_pages
+            self.stats["kv_migrated_bytes"] = pool.migrated_bytes
         return done + shed
-
-    def _finish(self, r: Request, slot: int, active: Dict[int, Request],
-                done: List[Request], t: float) -> None:
-        r.done = True
-        r.finish_s = t
-        self._kv_in_use -= r.kv_tokens
-        done.append(r)
-        del active[slot]
-        self.backend.release(slot)

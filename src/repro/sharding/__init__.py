@@ -1,2 +1,3 @@
-from repro.sharding.rules import RULES, spec_for, shardings, \
-    partition_specs, activation_sharding  # noqa: F401
+from repro.sharding.rules import (RULES, spec_for,  # noqa: F401
+                                  shardings, partition_specs,  # noqa: F401
+                                  activation_sharding)  # noqa: F401

@@ -1,2 +1,3 @@
-from repro.training.trainer import Trainer, make_train_step, \
-    zero1_sharding  # noqa: F401
+from repro.training.trainer import (Trainer,  # noqa: F401
+                                    make_train_step,  # noqa: F401
+                                    zero1_sharding)  # noqa: F401

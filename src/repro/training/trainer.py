@@ -8,18 +8,15 @@ mesh that divides optimizer memory by 256.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Any, Callable, Dict, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
-from repro.models import spec as pspec
 from repro.optim.adamw import AdamW, AdamWState, cosine_schedule
 from repro.sharding import rules
 

@@ -197,6 +197,75 @@ sys.exit(0 if worst < 5e-4 else 1)
 """
 
 
+PAGED_WORKER = r"""
+import jax, jax.numpy as jnp, functools, sys
+import numpy as np
+jnp.bfloat16 = jnp.float32
+import repro.core.engine as E
+from repro.configs.base import ModelConfig, Family
+from repro.models import model as M
+
+# paged KV accounting (DESIGN.md §10): seed_cache adoption routed through
+# block-table pages must stay lossless, and slot occupancy must be
+# page-granular (alloc on seed, extend per decode step, free on release)
+cfg = ModelConfig(name="d", family=Family.DENSE, n_layers=8, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                  head_dim=16)
+key = jax.random.PRNGKey(0)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+params = jax.tree.map(
+    lambda a: a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a,
+    M.init_params(cfg, key))
+ref_step = jax.jit(functools.partial(M.decode_step, cfg))
+n_mb, mb, max_len, ps = 4, 2, 32, 8
+eng = E.InterleavedEngine(cfg, mesh, E.UniformPlan(4, 2, 0, 1), n_mb=n_mb,
+                          mb=mb, max_len=max_len, paged=True, page_size=ps)
+state = eng.init_state(params)
+B = n_mb * mb
+toks = jax.random.randint(key, (B, 10), 1, cfg.vocab_size)
+cache = jax.tree.map(
+    lambda a: a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a,
+    M.init_cache(cfg, B, max_len))
+logits, cache = jax.jit(functools.partial(M.prefill, cfg))(params, toks,
+                                                           cache)
+state = eng.seed_cache(state, cache)
+st = eng.paged_stats()
+assert st["slot_tokens"] == [10] * B, st              # prompt adopted
+assert st["pages_in_use"] == B * 2, st                # ceil(10/8) pages
+tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+worst = 0.0
+active = np.ones(B, bool)
+for step in range(6):
+    rl, cache = ref_step(params, cache, tok)
+    lg, state = eng.decode_requests(state, tok, active)
+    worst = max(worst, float(jnp.abs(lg - rl[:, 0].astype(jnp.float32))
+                             .max()))
+    tok = jnp.argmax(rl[:, 0].astype(jnp.float32), -1)[:, None] \
+        .astype(jnp.int32)
+st = eng.paged_stats()
+assert st["slot_tokens"] == [16] * B, st              # extended per step
+assert st["pages_in_use"] == B * 2, st                # 16 tok = 2 pages
+eng.free_slot(0)
+assert eng.paged_stats()["pages_in_use"] == B * 2 - 2
+print(f"paged worst={worst:.2e}")
+sys.exit(0 if worst < 5e-4 else 1)
+"""
+
+
+@pytest.mark.slow
+def test_engine_paged_kv_lossless_and_accounted():
+    """Paged engine contract: block-table adoption is lossless and slot
+    page counts track seed / extend / free exactly."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", PAGED_WORKER], env=env,
+                       capture_output=True, text=True, timeout=900)
+    sys.stdout.write(r.stdout)
+    sys.stderr.write(r.stderr[-2000:])
+    assert r.returncode == 0
+
+
 @pytest.mark.slow
 def test_engine_lossless_ring_buffer_long_mode():
     env = dict(os.environ)

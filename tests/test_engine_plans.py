@@ -4,7 +4,6 @@ The chunking invariant behind losslessness: splitting the layer stack into
 (resident, offloaded) per the UniformPlan and reassembling chunk-by-chunk
 in pipeline order must reproduce the original layers exactly.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

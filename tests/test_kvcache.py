@@ -1,0 +1,466 @@
+"""Paged KV-cache subsystem (DESIGN.md §10): allocator/pool/manager
+invariants, the paged decode-attention bit-wise contract, paged decode
+losslessness, and page-granular scheduler admission with preemption."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.kvcache import (BlockTable, OutOfPages, PageAllocator,
+                           PagedKVConfig, PagedKVManager, PagePool)
+from repro.kvcache.pool import DEVICE, HOST
+
+
+# ----------------------------------------------------------------------------
+# allocator + block tables
+# ----------------------------------------------------------------------------
+def test_allocator_lifo_reuse_and_refcounts():
+    a = PageAllocator(4, page_size=8)
+    p0, p1 = a.alloc(), a.alloc()
+    assert (p0, p1) == (0, 1) and a.used_pages == 2
+    a.incref(p0)
+    a.decref(p0)
+    assert a.refcount(p0) == 1          # still held
+    a.decref(p0)
+    assert a.free_pages == 3
+    assert a.alloc() == p0              # LIFO: freshest page comes back
+
+    with pytest.raises(ValueError):
+        a.decref(3)                     # never allocated
+
+
+def test_allocator_all_or_nothing():
+    a = PageAllocator(3, page_size=8)
+    a.alloc()
+    with pytest.raises(OutOfPages):
+        a.alloc_many(3)
+    assert a.free_pages == 2            # nothing was partially grabbed
+    assert a.pages_for(17) == 3 and a.pages_for(16) == 2 and \
+        a.pages_for(0) == 0
+
+
+def test_block_table_growth_and_partial_last_page():
+    a = PageAllocator(8, page_size=4)
+    t = BlockTable(4)
+    assert t.extend_to(6, a) == [0, 1]  # 6 tokens -> 2 pages
+    assert t.tokens == 6 and t.capacity_tokens == 8
+    assert t.append_token(a) is None    # slot 7 fits the last page
+    assert t.append_token(a) is None
+    assert t.append_token(a) == 2       # token 9 crosses the boundary
+    assert t.slot_of(5) == (1, 1)
+    with pytest.raises(ValueError):
+        t.extend_to(3, a)               # tables never shrink
+    t.release(a)
+    assert a.free_pages == 8
+
+
+def test_block_table_fork_shares_pages():
+    a = PageAllocator(4, page_size=4)
+    t = BlockTable(4)
+    t.extend_to(8, a)
+    f = t.fork(a)
+    assert f.pages == t.pages and a.refcount(t.pages[0]) == 2
+    t.release(a)
+    assert a.used_pages == 2            # fork still holds them
+    f.release(a)
+    assert a.free_pages == 4
+
+
+# ----------------------------------------------------------------------------
+# two-tier pool
+# ----------------------------------------------------------------------------
+def test_pool_tier_capacity_and_migration_bytes():
+    pool = PagePool(PagedKVConfig(page_size=4, device_pages=3, host_pages=2,
+                                  page_bytes=100.0))
+    t = BlockTable(4)
+    pool.extend_table(t, 12)            # 3 pages: device tier full
+    with pytest.raises(OutOfPages):
+        pool.alloc_pages(1, DEVICE)
+    moved = pool.migrate(t.pages[:2], HOST)
+    assert moved == 200.0 and pool.pages_in_use(HOST) == 2
+    assert pool.pages_in_use(DEVICE) == 1 and pool.free_pages(DEVICE) == 2
+    assert pool.migrate(t.pages[:2], HOST) == 0.0      # already there
+    with pytest.raises(OutOfPages):                    # host tier full
+        pool.migrate([t.pages[2]], HOST)
+    assert pool.fetch_table(t) == 200.0                # all back on device
+    assert pool.spilled_pages == 2 and pool.fetched_pages == 2
+    pool.release_table(t)
+    assert pool.pages_in_use(DEVICE) == 0
+
+
+def test_pool_migrate_any_clamps():
+    pool = PagePool(PagedKVConfig(page_size=4, device_pages=4, host_pages=1,
+                                  page_bytes=10.0))
+    t = BlockTable(4)
+    pool.extend_table(t, 16)
+    assert pool.migrate_any(3, HOST) == 10.0    # host capacity clamps to 1
+    assert pool.migrate_any(5, DEVICE) == 10.0  # source supply clamps to 1
+
+
+# ----------------------------------------------------------------------------
+# manager: admission, preemption, resumption, Eq. 8 delegation
+# ----------------------------------------------------------------------------
+def _mgr(dev=6, host=6, ps=4, page_bytes=8.0):
+    return PagedKVManager(PagePool(PagedKVConfig(
+        page_size=ps, device_pages=dev, host_pages=host,
+        page_bytes=page_bytes)))
+
+
+def test_manager_admit_extend_release():
+    m = _mgr()
+    assert m.admit(1, 5)                # 2 pages
+    assert m.admit(2, 9)                # 3 pages
+    assert not m.admit(3, 9)            # would need 3, only 1 free
+    assert m.device_pages_in_use() == 5
+    assert m.extend(1, 8)               # still 2 pages
+    assert not m.extend(1, 13)          # needs 2 more, only 1 free
+    assert m.pages_of(1) == 2           # failed extend left no residue
+    m.release(2)
+    assert m.extend(1, 13)
+    m.release(1)
+    assert m.device_pages_in_use() == 0
+
+
+def test_manager_headroom_watermark():
+    m = _mgr(dev=4)
+    assert m.can_admit(4, headroom_pages=3)
+    assert not m.can_admit(4, headroom_pages=4)
+
+
+def test_manager_spill_preempt_and_resume():
+    m = _mgr(dev=4, host=4)
+    m.admit(1, 8)                       # 2 pages
+    m.admit(2, 8)                       # 2 pages, device full
+    moved = m.preempt(2, "spill")
+    assert moved == 16.0 and m.is_suspended(2)
+    assert m.pool.pages_in_use(HOST) == 2
+    assert m.extend(1, 16)              # freed device room
+    assert not m.can_resume(2)          # device full again
+    m.release(1)
+    assert m.resume(2) == 16.0          # fetched back, priced
+    assert not m.is_suspended(2) and m.tokens_of(2) == 8
+
+
+def test_manager_recompute_preempt_and_resume():
+    m = _mgr(dev=4, host=0)
+    m.admit(1, 8)
+    m.admit(2, 8)
+    assert m.preempt(2, "recompute") == 0.0
+    assert m.pages_of(2) == 0 and m.tokens_of(2) == 8   # span remembered
+    m.release(1)
+    assert m.resume(2) == 0.0
+    assert m.pages_of(2) == 2 and m.tokens_of(2) == 8
+
+
+def test_manager_spill_falls_back_to_recompute_when_host_full():
+    m = _mgr(dev=4, host=1)
+    m.admit(1, 8)                       # 2 pages > 1 host page
+    assert m.preempt(1, "spill") == 0.0
+    assert m.pages_of(1) == 0           # dropped, not leaked
+    assert m.pool.pages_in_use(HOST) == 0
+    assert m.resume(1) == 0.0 and m.pages_of(1) == 2
+
+
+def test_manager_delegate_tail_partial_page_rounds_down():
+    m = _mgr(dev=6, host=6, ps=4)
+    m.admit(1, 10)                      # 3 pages, last holds 2 tokens
+    assert m.delegate_tail(1, 3) == 0.0         # < 1 whole page
+    assert m.delegate_tail(1, 9) == 16.0        # 2 whole pages move
+    assert m.pool.pages_in_use(HOST) == 2
+    assert m.resident_tokens(1) == 4            # 1 device page remains
+
+
+# ----------------------------------------------------------------------------
+# paged decode attention: bit-wise contracts
+# ----------------------------------------------------------------------------
+def _random_paged_case(rng, B, KV, G, dh, ps, maxp, dtype):
+    import jax.numpy as jnp
+    P = B * maxp + 2
+    q = jnp.asarray(rng.standard_normal((B, 1, KV * G, dh)), dtype)
+    kp = jnp.asarray(rng.standard_normal((P, ps, KV, dh)), dtype)
+    vp = jnp.asarray(rng.standard_normal((P, ps, KV, dh)), dtype)
+    ctx = np.array([int(rng.integers(1, maxp * ps + 1)) for _ in range(B)])
+    bt = -np.ones((B, maxp), np.int32)
+    used = set()
+    for b in range(B):                  # non-contiguous, interleaved pages
+        for j in range(-(-int(ctx[b]) // ps)):
+            p = int(rng.choice([x for x in range(P) if x not in used]))
+            used.add(p)
+            bt[b, j] = p
+    return q, kp, vp, jnp.asarray(bt), jnp.asarray(ctx, np.int32)
+
+
+@pytest.mark.parametrize("window", [None, 11])
+def test_paged_kernel_bitwise_vs_jnp_ref_bf16(window):
+    """The kernel must equal the blocked jnp reference bit-for-bit at the
+    model's cache dtype, for random non-contiguous block tables with
+    partially-filled last pages."""
+    import jax.numpy as jnp
+
+    from repro.kernels.decode_attention.paged import (
+        paged_decode_attention, paged_decode_attention_ref)
+
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        B = int(rng.integers(1, 4))
+        KV = int(rng.choice([1, 2]))
+        G = int(rng.choice([1, 2, 4]))
+        dh = int(rng.choice([16, 32, 64]))
+        ps = int(rng.choice([8, 16]))
+        maxp = int(rng.integers(1, 5))
+        q, kp, vp, bt, ctx = _random_paged_case(rng, B, KV, G, dh, ps,
+                                                maxp, jnp.bfloat16)
+        out_k = paged_decode_attention(q, kp, vp, bt, ctx, window=window)
+        out_r = paged_decode_attention_ref(q, kp, vp, bt, ctx,
+                                           window=window)
+        assert bool(jnp.all(out_k == out_r)), \
+            (B, KV, G, dh, ps, maxp, window)
+
+
+def test_paged_kernel_bitwise_vs_contiguous_kernel():
+    """Gather losslessness at any dtype: the paged kernel on the pool ==
+    the existing contiguous kernel on the gathered cache, bit-for-bit
+    (same block walk, so the only difference is the table indirection)."""
+    import jax.numpy as jnp
+
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.decode_attention.paged import (
+        gather_page_row, paged_decode_attention)
+
+    rng = np.random.default_rng(1)
+    for dtype in (jnp.float32, jnp.bfloat16):
+        B, KV, G, dh, ps, maxp = 3, 2, 2, 32, 8, 3
+        q, kp, vp, bt, ctx = _random_paged_case(rng, B, KV, G, dh, ps,
+                                                maxp, dtype)
+        out_p = paged_decode_attention(q, kp, vp, bt, ctx)
+        for b in range(B):
+            kc = gather_page_row(kp, bt[b])[None]
+            vc = gather_page_row(vp, bt[b])[None]
+            ids = np.arange(maxp * ps)
+            pos_ids = jnp.asarray(np.where(ids < int(ctx[b]), ids, -1),
+                                  np.int32)
+            o = decode_attention(q[b:b + 1], kc, vc, pos_ids,
+                                 jnp.int32(int(ctx[b]) - 1), block_k=ps)
+            assert bool(jnp.all(o == out_p[b:b + 1])), (dtype, b)
+
+
+def test_paged_ref_matches_full_softmax_oracle():
+    """Semantics: the blocked walk == the model's full-softmax decode
+    reference on the gathered cache (float tolerance — different
+    algorithm, same math)."""
+    import jax.numpy as jnp
+
+    from repro.kernels.decode_attention.paged import (
+        gather_page_row, paged_decode_attention_ref)
+    from repro.models.attention import decode_attention_ref
+
+    rng = np.random.default_rng(2)
+    B, KV, G, dh, ps, maxp = 2, 2, 2, 32, 8, 3
+    q, kp, vp, bt, ctx = _random_paged_case(rng, B, KV, G, dh, ps, maxp,
+                                            jnp.float32)
+    out = paged_decode_attention_ref(q, kp, vp, bt, ctx)
+    for b in range(B):
+        kc = gather_page_row(kp, bt[b])[None]
+        vc = gather_page_row(vp, bt[b])[None]
+        ids = np.arange(maxp * ps)
+        pos_ids = jnp.asarray(np.where(ids < int(ctx[b]), ids, -1),
+                              np.int32)
+        o = decode_attention_ref(q[b:b + 1], kc, vc, pos_ids,
+                                 jnp.int32(int(ctx[b]) - 1), window=None)
+        np.testing.assert_allclose(np.asarray(o, np.float32),
+                                   np.asarray(out[b:b + 1], np.float32),
+                                   atol=1e-5, rtol=1e-5)
+
+
+# ----------------------------------------------------------------------------
+# paged single-device decode: lossless vs decode_step
+# ----------------------------------------------------------------------------
+PAGED_DECODE_WORKER = r"""
+import functools, sys
+import jax, jax.numpy as jnp
+jnp.bfloat16 = jnp.float32      # fp32 => losslessness must be (near-)exact
+from repro.configs.registry import get_smoke_config
+from repro.models import model as M
+from repro.kvcache.paged_decode import PagedDecodeCache
+
+fails = []
+for arch in ("gemma3-1b", "internlm2-1.8b"):
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    cast = lambda t: jax.tree.map(
+        lambda a: a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a, t)
+    params = cast(M.init_params(cfg, key))
+    B, S, max_len, ps = 2, 12, 32, 8
+    toks = jax.random.randint(key, (B, S), 1, cfg.vocab_size)
+    cache = cast(M.init_cache(cfg, B, max_len))
+    logits, cache = jax.jit(functools.partial(M.prefill, cfg))(
+        params, toks, cache)
+    dec = jax.jit(functools.partial(M.decode_step, cfg))
+    pc = PagedDecodeCache(cfg, B, max_len, page_size=ps)
+    pc.seed(cache)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    worst = 0.0
+    for step in range(14):              # crosses page boundaries
+        rl, cache = dec(params, cache, tok)
+        pl_ = pc.step(params, tok)
+        worst = max(worst, float(jnp.abs(
+            rl.astype(jnp.float32) - pl_.astype(jnp.float32)).max()))
+        tok = jnp.argmax(rl[:, 0].astype(jnp.float32), -1)[:, None] \
+            .astype(jnp.int32)
+    used = pc.pool.pages_in_use()
+    pc.release()
+    ok = worst < 5e-4 and used == B * -(-(S + 14) // ps) \
+        and pc.pool.pages_in_use() == 0
+    print(f"{arch}: worst={worst:.2e} pages={used} {'OK' if ok else 'FAIL'}")
+    if not ok:
+        fails.append(arch)
+sys.exit(1 if fails else 0)
+"""
+
+
+@pytest.mark.slow
+def test_paged_decode_lossless_vs_decode_step():
+    """Engine-tier losslessness: paged decode (pool + block tables +
+    paged attention) == the dense decode_step, with page accounting."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", PAGED_DECODE_WORKER], env=env,
+                       capture_output=True, text=True, timeout=900)
+    sys.stdout.write(r.stdout)
+    sys.stderr.write(r.stderr[-2000:])
+    assert r.returncode == 0
+
+
+# ----------------------------------------------------------------------------
+# scheduler: page-granular admission + preemption over the simulator
+# ----------------------------------------------------------------------------
+def _sim_backend(slots: int, prompt: int = 64):
+    from repro.configs.registry import get_config
+    from repro.core.cost_model import CostEnv, Workload
+    from repro.core.profiles import env_E3, mbps
+    from repro.serving import SimBackend
+
+    cfg = get_config("llama2-13b")
+    w = Workload(cfg, mb=1, ctx=prompt, n_micro=slots)
+    return SimBackend(CostEnv(env_E3(), mbps(200), w), n_slots=slots,
+                      prompt_tokens=prompt)
+
+
+def _serve(policy, preempt="spill", budget=None, slots=8, n_req=8,
+           prompt=64, max_new=64):
+    from repro.serving import (ContinuousBatchingScheduler, SchedulerConfig,
+                               requests_from_arrivals, summarize)
+    from repro.serving.traffic import bursty
+
+    arr = bursty(n_req, burst_size=n_req, gap_s=0.0, prompt_len=prompt,
+                 max_new_tokens=max_new, seed=0)
+    if budget is None:
+        budget = 3 * (prompt + max_new)       # reservation fits 3
+    sched = ContinuousBatchingScheduler(_sim_backend(slots), SchedulerConfig(
+        kv_budget_tokens=budget, kv_policy=policy, page_size=16,
+        preempt=preempt))
+    done = sched.serve(requests_from_arrivals(arr))
+    rep = summarize(done, pattern="bursty", backend="sim", stats=sched.stats)
+    return done, rep
+
+
+@pytest.mark.parametrize("preempt", ["spill", "recompute"])
+def test_paged_admission_beats_reservation_and_completes(preempt):
+    """The bench_kvcache acceptance invariant: same budget, same bursty
+    stream — paged admission holds strictly more co-resident requests,
+    every request still completes with its exact token count, and the
+    preemption/page counters surface in the report."""
+    done_r, rep_r = _serve("reserve")
+    done_p, rep_p = _serve("paged", preempt)
+    for done in (done_r, done_p):
+        assert all(not r.rejected and r.done and
+                   r.generated == r.max_new_tokens for r in done)
+    assert rep_p.peak_active > rep_r.peak_active
+    assert rep_p.n_preempted > 0
+    assert rep_r.n_preempted == 0 and rep_r.kv_pages_spilled == 0
+    if preempt == "spill":
+        assert rep_p.kv_pages_spilled > 0
+        assert rep_p.kv_migrated_bytes > 0
+    assert rep_p.peak_kv_pages <= (3 * 128) // 16   # device tier respected
+
+
+def test_paged_preempted_requests_keep_latency_accounting():
+    """A preempted request's TTFT is its *first* emission; finish time
+    reflects the preemption detour, it completes with its full count,
+    and the recompute span is consumed (cleared) by the resume."""
+    done, rep = _serve("paged", "recompute")
+    pre = [r for r in done if r.preempted]
+    assert pre, "tight budget must preempt someone"
+    for r in pre:
+        assert r.first_token_s is not None and r.finish_s is not None
+        assert r.finish_s >= r.first_token_s
+        assert r.generated == r.max_new_tokens
+        assert r.restart_tokens == 0        # cleared on resume
+
+
+def test_paged_oversized_gate_is_page_rounded():
+    """A request whose worst case fits the token budget but not the
+    page-floored pool is shed at intake, not admitted into per-token
+    self-preemption churn."""
+    from repro.serving import (ContinuousBatchingScheduler, Request,
+                               SchedulerConfig)
+
+    be = _sim_backend(1)
+    # budget 100 tokens, page 16 -> 6 pages = 96 usable tokens
+    sched = ContinuousBatchingScheduler(be, SchedulerConfig(
+        kv_budget_tokens=100, kv_policy="paged", page_size=16))
+    done = sched.serve([Request(0, None, max_new_tokens=36, prompt_len=64),
+                        Request(1, None, max_new_tokens=32, prompt_len=64)])
+    by = {r.rid: r for r in done}
+    assert by[0].rejected                   # 100 tokens > 96-token pool
+    assert by[1].done and by[1].generated == 32   # 96 tokens fits exactly
+
+
+def test_planner_sees_page_occupancy():
+    """SimBackend note_kv_pages feeds the OnlinePlanner page-rounded
+    occupancy (on_pages pathway): planner tokens == pages * page_size."""
+    be = _sim_backend(2)
+    be._ctx = {0: 100, 1: 50}
+    base = be._planner_tokens()
+    be.note_kv_pages(pages_in_use=20, page_size=16)
+    n_micro_env = max(be.env.work.n_micro, 1)
+    assert be._planner_tokens() == -(-(20 * 16) // n_micro_env)
+    assert be._planner_tokens() != base
+
+
+def test_online_planner_on_pages_hook():
+    from repro.core.online_planner import OnlinePlanner
+
+    be = _sim_backend(1)
+    planner = OnlinePlanner(be.env, be.plan, horizon_tokens=2 ** 20)
+    probe = OnlinePlanner(be.env, be.plan, horizon_tokens=2 ** 20)
+    ts = min((lad[0].threshold_tokens for lad in probe.ladders if lad),
+             default=None)
+    if ts is None:
+        pytest.skip("no thresholds for this fleet/arch")
+    fired = planner.on_pages(ts // 16 + 1, 16)
+    assert fired and all(isinstance(i, int) for i, _ in fired)
+
+
+def test_kv_transfer_sync_pool_moves_and_clamps():
+    """Eq. 8 volumes -> host-tier pages on the attached pool, clamped to
+    the KV that actually exists; a volume drop migrates pages back."""
+    be = _sim_backend(1, prompt=512)
+    kv = be.sim.kv
+    if kv is None or all(st.target is None for st in kv.states):
+        pytest.skip("no delegating devices on this fleet")
+    pool = PagePool(PagedKVConfig(page_size=16, device_pages=64,
+                                  host_pages=64, page_bytes=4.0))
+    t = BlockTable(16)
+    pool.extend_table(t, 40 * 16)       # 40 device pages in use
+    kv.init_transfers(ctx_tokens=4096)
+    target = min(kv.delegated_pages(16), 40)
+    moved = kv.sync_pool(pool)
+    assert pool.pages_in_use(HOST) == target
+    assert moved == pytest.approx(target * 4.0)
+    for st in kv.states:                # volumes collapse -> pages return
+        st.n_trans = 0
+    kv.sync_pool(pool)
+    assert pool.pages_in_use(HOST) == 0

@@ -1,6 +1,5 @@
 """Discrete-event simulator behaviour: schedule shape, overlap, and the
 paper's qualitative claims (golden-trace style assertions)."""
-import pytest
 
 from repro.configs.registry import get_config
 from repro.core.baselines import BASELINES, simulate_pp_offload

@@ -10,8 +10,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.registry import get_config
-from repro.core.cost_model import CostEnv, DeviceAlloc, Plan, Workload
-from repro.core.offline_scheduler import allocate, _segment_dp
+from repro.core.cost_model import CostEnv, Workload
+from repro.core.offline_scheduler import allocate
 from repro.core.online_planner import OnlinePlanner, _min_load_plan
 from repro.core.kv_transfer import KVTransferProtocol
 from repro.core.profiles import (AGX_ORIN_32, AGX_ORIN_64, XAVIER_NX_16,

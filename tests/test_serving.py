@@ -2,6 +2,7 @@
 cases, metrics, and backend parity (DESIGN.md §9)."""
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.configs.registry import get_config, get_smoke_config
 from repro.core.cost_model import CostEnv, Workload
@@ -40,6 +41,56 @@ def test_traffic_shapes():
     po = poisson(64, rate_rps=2.0, seed=1)
     mean_gap = np.mean(np.diff([e.time_s for e in po]))
     assert 0.2 < mean_gap < 1.2         # ~1/rate with sampling noise
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(["sporadic", "bursty", "poisson"]),
+       st.integers(0, 2 ** 31 - 1), st.integers(1, 40),
+       st.integers(1, 256), st.integers(1, 128))
+def test_traffic_seeded_determinism_property(pattern, seed, n, plen, mnew):
+    """Any (pattern, seed, n, length ranges): identical seeds produce
+    identical streams, times are sorted and non-negative, lengths land in
+    the requested ranges."""
+    kw = dict(seed=seed, prompt_len=(1, plen), max_new_tokens=(1, mnew))
+    a = make_arrivals(pattern, n, **kw)
+    b = make_arrivals(pattern, n, **kw)
+    assert a == b
+    assert len(a) == n
+    times = [ev.time_s for ev in a]
+    assert times == sorted(times) and all(t >= 0.0 for t in times)
+    assert all(1 <= ev.prompt_len <= plen
+               and 1 <= ev.max_new_tokens <= mnew for ev in a)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1),
+       st.floats(0.5, 8.0), st.floats(0.0, 0.9))
+def test_sporadic_rate_property(seed, gap_s, jitter):
+    """Sporadic gaps stay inside gap_s * (1 ± jitter)."""
+    evs = sporadic(30, gap_s=gap_s, jitter=jitter, seed=seed)
+    gaps = np.diff([ev.time_s for ev in evs])
+    lo, hi = gap_s * (1.0 - jitter), gap_s * (1.0 + jitter)
+    assert np.all(gaps >= lo - 1e-9) and np.all(gaps <= hi + 1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 8), st.floats(0.5, 8.0))
+def test_bursty_rate_property(seed, burst, gap_s):
+    """Bursty arrivals come in exact groups of burst_size, gap_s apart."""
+    evs = bursty(4 * burst, burst_size=burst, gap_s=gap_s, seed=seed)
+    times = [ev.time_s for ev in evs]
+    for i, t in enumerate(times):
+        assert t == (i // burst) * gap_s
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.25, 8.0))
+def test_poisson_rate_property(seed, rate):
+    """Poisson mean inter-arrival ~ 1/rate (law of large numbers at
+    n=400: within 35% of the nominal rate is a 5-sigma-ish band)."""
+    evs = poisson(400, rate_rps=rate, seed=seed)
+    mean_gap = np.mean(np.diff([ev.time_s for ev in evs]))
+    assert 0.65 / rate < mean_gap < 1.35 / rate
 
 
 def test_trace_replay_sorts_rows():
@@ -274,3 +325,27 @@ def test_backend_parity_token_counts():
     for done in (sim_done, eng_done):
         assert all(r.done and r.finish_s >= r.first_token_s >= r.arrival_s
                    for r in done)
+
+
+def test_engine_backend_paged_decode_serves_tokens():
+    """The paged single-device decode path (block-table pools +
+    paged attention, kvcache/paged_decode) behind EngineBackend: same
+    request counts, real token ids, pages freed after the run."""
+    import jax
+
+    from repro.models import model as M
+    from repro.serving import EngineBackend
+
+    arr = make_arrivals("bursty", 4, seed=3, burst_size=2, gap_s=0.5,
+                        prompt_len=(4, 8), max_new_tokens=(2, 6))
+    cfg = get_smoke_config("gemma3-1b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    be = EngineBackend(cfg, params, n_slots=2, max_len=32, paged=True,
+                       page_size=8)
+    done = ContinuousBatchingScheduler(be, SchedulerConfig()).serve(
+        requests_from_arrivals(arr))
+    want = {i: ev.max_new_tokens for i, ev in enumerate(arr)}
+    assert {r.rid: r.generated for r in done} == want
+    assert all(len(r.output) == r.generated for r in done)
+    assert be._paged_cache is not None
+    assert be._paged_cache.pages_in_use > 0   # epoch pools live until next

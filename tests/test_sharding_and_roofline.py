@@ -1,15 +1,13 @@
 """Sharding rules + roofline parsers (pure host-side logic)."""
-import jax
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
-from repro.launch.roofline import (_shape_bytes, _split_computations,
-                                   collective_inventory, decode_terms,
-                                   train_terms, prefill_terms)
+from repro.launch.roofline import (_shape_bytes, collective_inventory,
+                                   decode_terms, train_terms, prefill_terms)
 from repro.configs.registry import INPUT_SHAPES, get_config
-from repro.sharding.rules import RULES, spec_for
+from repro.sharding.rules import spec_for
 
 
 class FakeMesh:

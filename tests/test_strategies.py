@@ -2,13 +2,11 @@
 machinery that keeps kimi-k2-scale configs inside HBM."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.optim.adafactor import Adafactor
 from repro.optim.adamw import constant_schedule
-from repro.sharding.rules import RULES, dp_rules, fsdp_rules, spec_for
+from repro.sharding.rules import dp_rules, fsdp_rules, spec_for
 
 
 class FakeMesh:

@@ -9,7 +9,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import restore, save
 from repro.configs.registry import get_smoke_config
-from repro.data import PackedBatches, SyntheticCorpus, make_batches
+from repro.data import SyntheticCorpus, make_batches
 from repro.models import model as M
 from repro.optim.adamw import AdamW, constant_schedule, cosine_schedule, \
     global_norm
@@ -111,6 +111,31 @@ def test_checkpoint_roundtrip_bf16():
         assert str(jnp.asarray(back["a"]["b"]).dtype) == "bfloat16"
         np.testing.assert_array_equal(np.asarray(back["c"]),
                                       np.arange(5, dtype=np.int32))
+
+
+def test_checkpoint_shard_named_by_process_and_multi_shard_restore():
+    """save() writes shard<process_index>.npz (shard0 single-host);
+    restore() globs and merges every shard — simulate a 2-host checkpoint
+    by splitting one save across two shard files."""
+    import os
+
+    tree = {"a": jnp.ones((2, 2), jnp.float32), "b": jnp.arange(3)}
+    with tempfile.TemporaryDirectory() as d:
+        save(d, tree, step=3)
+        assert os.path.exists(os.path.join(d, "shard0.npz"))
+        # split: move key "b" into a second host's shard
+        data = dict(np.load(os.path.join(d, "shard0.npz")))
+        np.savez(os.path.join(d, "shard0.npz"), a=data["a"])
+        np.savez(os.path.join(d, "shard1.npz"), b=data["b"])
+        back, step = restore(d)
+        assert step == 3
+        np.testing.assert_array_equal(np.asarray(back["a"]),
+                                      np.ones((2, 2), np.float32))
+        np.testing.assert_array_equal(np.asarray(back["b"]), np.arange(3))
+        # a key in no shard is an error, not a silent hole
+        np.savez(os.path.join(d, "shard1.npz"), unrelated=data["b"])
+        with pytest.raises(KeyError):
+            restore(d)
 
 
 # ----------------------------------------------------------------------------
