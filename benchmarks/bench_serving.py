@@ -33,6 +33,15 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
 PATTERN_CHOICES = ("sporadic", "bursty", "poisson", "trace", "all")
 
 
+def spec_config(args):
+    """--spec: speculative decoding on both substrates (DESIGN.md §11)."""
+    if not args.spec:
+        return None
+    from repro.specdec import SpecConfig
+    return SpecConfig(k=args.spec_k, draft=args.spec_draft,
+                      acceptance=args.spec_acceptance, seed=args.seed)
+
+
 def build_sim_backend(args, slots: int):
     from repro.configs.registry import get_config
     from repro.core.cost_model import CostEnv, Workload
@@ -47,7 +56,8 @@ def build_sim_backend(args, slots: int):
     cfg = get_config(args.arch)
     w = Workload(cfg, mb=1, ctx=args.prompt_len, n_micro=slots)
     env = CostEnv(devices, mbps(args.bw_mbps), w)
-    return SimBackend(env, n_slots=slots, prompt_tokens=args.prompt_len)
+    return SimBackend(env, n_slots=slots, prompt_tokens=args.prompt_len,
+                      spec=spec_config(args))
 
 
 def build_engine_backend(args, slots: int):
@@ -78,7 +88,7 @@ def build_engine_backend(args, slots: int):
         params = M.init_params(cfg, jax.random.PRNGKey(0))
     return EngineBackend(cfg, params, engine=engine, n_slots=slots,
                          max_len=args.prompt_len + args.max_new + 8,
-                         sampler=SamplerConfig())
+                         sampler=SamplerConfig(), spec=spec_config(args))
 
 
 def run_pattern(args, pattern: str) -> dict:
@@ -122,6 +132,14 @@ def main(argv=None) -> int:
     ap.add_argument("--gap-s", type=float, default=4.0)
     ap.add_argument("--rate-rps", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative decoding (DESIGN.md §11): k-token "
+                         "draft + one multi-token verify round per step")
+    ap.add_argument("--spec-k", type=int, default=4)
+    ap.add_argument("--spec-draft", default="ngram",
+                    choices=("ngram", "model"))
+    ap.add_argument("--spec-acceptance", type=float, default=0.6,
+                    help="sim acceptance model (engine verifies for real)")
     ap.add_argument("--kv-policy", choices=("reserve", "paged"),
                     default="reserve",
                     help="admission accounting: worst-case reservation or "

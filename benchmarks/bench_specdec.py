@@ -1,0 +1,172 @@
+"""Speculative decoding vs. autoregressive decode (EXPERIMENTS.md
+§SpecDecode).
+
+Same fleet, same arrival stream, two decode disciplines through the
+continuous-batching scheduler over the discrete-event substrate:
+
+  autoregressive  one pipeline round per token (the pre-§11 decode)
+  speculative     one round verifies k drafted tokens: compute scales
+                  with k+1 query positions, but the round's streamed
+                  weight bytes — the term that dominates offloaded edge
+                  decode — are paid once and amortized over every
+                  accepted token (DESIGN.md §11)
+
+The headline claim: at realistic acceptance rates (>= 0.6 per drafted
+token) and k = 4, simulated tokens/s with speculation strictly beats the
+autoregressive baseline on the paper's default 4-device heterogeneous
+fleet (E3). The run exits non-zero if that invariant fails.
+
+  python benchmarks/bench_specdec.py
+  python benchmarks/bench_specdec.py --sweep          # k x acceptance grid
+  python benchmarks/bench_specdec.py --pattern bursty --k 8 \
+      --acceptance 0.8 --out /tmp/specdec.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+PATTERNS = ("sporadic", "bursty", "poisson")
+
+
+def build_backend(args, slots: int, spec):
+    from repro.configs.registry import get_config
+    from repro.core.cost_model import CostEnv, Workload
+    from repro.core.profiles import env_E1, env_E2, env_E3, mbps
+    from repro.serving import SimBackend
+
+    fleets = {"E1": env_E1, "E2": env_E2, "E3": env_E3}
+    cfg = get_config(args.arch)
+    w = Workload(cfg, mb=1, ctx=args.prompt_len, n_micro=slots)
+    env = CostEnv(fleets[args.fleet](), mbps(args.bw_mbps), w)
+    return SimBackend(env, n_slots=slots, prompt_tokens=args.prompt_len,
+                      spec=spec)
+
+
+def run_one(args, pattern: str, spec) -> dict:
+    from repro.serving import (ContinuousBatchingScheduler, SchedulerConfig,
+                               cli_arrivals, requests_from_arrivals,
+                               summarize)
+
+    slots = 1 if pattern == "sporadic" else args.slots
+    arrivals = cli_arrivals(pattern, args.n_requests, seed=args.seed,
+                            prompt_len=args.prompt_len,
+                            max_new_tokens=args.max_new, gap_s=args.gap_s,
+                            burst_size=args.slots, rate_rps=args.rate_rps)
+    backend = build_backend(args, slots, spec)
+    sched = ContinuousBatchingScheduler(backend, SchedulerConfig())
+    served = sched.serve(requests_from_arrivals(arrivals))
+    mode = "spec" if spec is not None else "autoregressive"
+    rep = summarize(served, pattern=pattern, backend=f"sim/{mode}",
+                    stats=sched.stats)
+    out = rep.to_dict()
+    out["mode"] = mode
+    if spec is not None:
+        out["k"] = spec.k
+        out["model_acceptance"] = spec.acceptance
+    return out
+
+
+def compare(args, pattern: str, k: int, acceptance: float) -> dict:
+    from repro.specdec import SpecConfig
+
+    base = run_one(args, pattern, None)
+    spec = run_one(args, pattern,
+                   SpecConfig(k=k, acceptance=acceptance, seed=args.seed))
+    return {
+        "pattern": pattern, "k": k, "acceptance": acceptance,
+        "throughput_ar_tok_s": base["throughput_tok_s"],
+        "throughput_spec_tok_s": spec["throughput_tok_s"],
+        "speedup": (spec["throughput_tok_s"]
+                    / max(base["throughput_tok_s"], 1e-12)),
+        "measured_acceptance_rate": spec["spec_acceptance_rate"],
+        "spec_rounds": spec["spec_rounds"],
+        "base": base, "spec": spec,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--pattern", choices=PATTERNS + ("all",),
+                    default="sporadic",
+                    help="sporadic is speculation's home regime: one "
+                         "stream, fully weight-streaming-bound")
+    ap.add_argument("--arch", default="llama2-13b")
+    ap.add_argument("--fleet", default="E3", choices=("E1", "E2", "E3"))
+    ap.add_argument("--bw-mbps", type=float, default=200.0)
+    ap.add_argument("--n-requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--max-new", type=int, default=48)
+    ap.add_argument("--gap-s", type=float, default=4.0)
+    ap.add_argument("--rate-rps", type=float, default=1.0)
+    ap.add_argument("--k", type=int, default=4, help="drafted tokens/round")
+    ap.add_argument("--acceptance", type=float, default=0.6,
+                    help="per-draft-token acceptance probability of the "
+                         "sim's acceptance model")
+    ap.add_argument("--sweep", action="store_true",
+                    help="k x acceptance grid (EXPERIMENTS.md §SpecDecode)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="also write JSON here")
+    args = ap.parse_args(argv)
+
+    patterns = list(PATTERNS) if args.pattern == "all" else [args.pattern]
+    results = []
+    for pattern in patterns:
+        if args.sweep:
+            for k in (2, 4, 8):
+                for acc in (0.3, 0.6, 0.8):
+                    results.append(compare(args, pattern, k, acc))
+        else:
+            results.append(compare(args, pattern, args.k, args.acceptance))
+    payload = {"config": {k: v for k, v in vars(args).items()},
+               "results": results}
+    text = json.dumps(payload, indent=2)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+
+    # acceptance gate: speculation must beat autoregressive at the
+    # headline operating point (k=4, acceptance 0.6 by default)
+    rc = 0
+    for r in results:
+        if r["k"] == args.k and r["acceptance"] == args.acceptance:
+            print(f"# {r['pattern']}: spec {r['throughput_spec_tok_s']:.2f} "
+                  f"vs AR {r['throughput_ar_tok_s']:.2f} tok/s "
+                  f"({r['speedup']:.2f}x) at k={r['k']} "
+                  f"acc={r['acceptance']}", file=sys.stderr)
+            if r["speedup"] <= 1.0:
+                print("# WARNING: speculation did not beat autoregressive "
+                      "— verify-round pricing or acceptance model broke",
+                      file=sys.stderr)
+                rc = 1
+    return rc
+
+
+def run():
+    """benchmarks.run harness hook: fast sim-only smoke, one row per
+    pattern comparison."""
+    class _Row:
+        def __init__(self, name, ms):
+            self.name, self.ms = name, ms
+
+        def csv(self):
+            return f"specdec,{self.name},{self.ms:.1f},ok"
+
+    rows = []
+    rc = main(["--pattern", "sporadic", "--n-requests", "4",
+               "--max-new", "24"])
+    rows.append(_Row("sporadic_k4_acc0.6", 0.0 if rc == 0 else 1.0))
+    if rc:
+        raise SystemExit("bench_specdec smoke failed")
+    return rows
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

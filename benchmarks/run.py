@@ -18,6 +18,7 @@ SUITES = {
     "varbw": ("benchmarks.bench_bandwidth", "Fig 18 varying bandwidth"),
     "ablation": ("benchmarks.bench_ablation", "Tab V ablation"),
     "kernels": ("benchmarks.bench_kernels", "kernel microbench"),
+    "specdec": ("benchmarks.bench_specdec", "speculative vs AR decode"),
 }
 
 

@@ -226,7 +226,11 @@ class InterleavedEngine:
         self._stage_ids = jnp.arange(plan.n_stage, dtype=jnp.int32)
         self._fetch = self._build_fetch() if self.fetch_mode == "step" \
             else None
-        self._step = self._build_step()
+        # compiled steps by query length: 1 = autoregressive decode,
+        # q_len > 1 = speculative-decoding verification (DESIGN.md §11),
+        # built lazily on first use
+        self._steps: Dict[int, Any] = {1: self._build_step(1)}
+        self._step = self._steps[1]
 
     # -- state construction ----------------------------------------------------
     def init_state(self, params) -> Dict[str, Any]:
@@ -434,7 +438,12 @@ class InterleavedEngine:
                                  check_vma=False))
 
     # -- the SPMD step -----------------------------------------------------------
-    def _build_step(self):
+    def _build_step(self, q_len: int = 1):
+        """q_len = 1: one autoregressive token (the historical step).
+        q_len > 1: a speculative verification round — every micro-batch
+        carries q_len query positions through the same slot schedule, so
+        one pipeline traversal (one weight-stream) scores all of them;
+        logits come back per position (DESIGN.md §11)."""
         cfg, plan = self.cfg, self.plan
         n_stage, n_seg, k, k_res, k_off = (plan.n_stage, plan.n_seg, plan.k,
                                            plan.k_res, plan.k_off)
@@ -544,14 +553,24 @@ class InterleavedEngine:
             pos = glob["pos"]
             pos_ids = glob.get("pos_ids")
             slot = jnp.int32(0)
+            q_slots = None
             if pos_ids is not None:
                 S_c = pos_ids.shape[0]
                 slot = pos % S_c
-                pos_ids = jax.lax.dynamic_update_slice(
-                    pos_ids, pos[None].astype(pos_ids.dtype), (slot,))
+                if q_len == 1:
+                    pos_ids = jax.lax.dynamic_update_slice(
+                        pos_ids, pos[None].astype(pos_ids.dtype), (slot,))
+                else:
+                    qpos = pos + jnp.arange(q_len)
+                    q_slots = qpos % S_c
+                    # contiguous update (no Scatter — old-XLA partial-auto
+                    # partitioner fatally asserts on it); the verify
+                    # window never wraps (backend caps pos + q_len)
+                    pos_ids = jax.lax.dynamic_update_slice(
+                        pos_ids, qpos.astype(pos_ids.dtype), (slot,))
 
-            x0 = jnp.zeros((mb, 1, cfg.d_model), jnp.bfloat16)
-            logits0 = jnp.zeros((n_mb, mb, PV), jnp.float32)
+            x0 = jnp.zeros((mb, q_len, cfg.d_model), jnp.bfloat16)
+            logits0 = jnp.zeros((n_mb, mb, q_len, PV), jnp.float32)
             fetched0 = None if step_mode else \
                 fetch_chunk_weights(offload, jnp.int32(0), d)
 
@@ -598,7 +617,7 @@ class InterleavedEngine:
                 body = M._decode_body(cfg, moe_mesh, impl,
                                       cfg.family == Family.MOE, pos, slot,
                                       pos_ids, enc_len=self.enc_len,
-                                      moe_mode="auto")
+                                      moe_mode="auto", q_slots=q_slots)
                 xs = {"p": p_chunk,
                       "window": M.layer_windows(cfg, k, self.long_mode,
                                                 layer_off)}
@@ -625,7 +644,7 @@ class InterleavedEngine:
                 # last chunk: unembed and stash logits
                 is_last = valid & (c_d == C - 1)
                 xn = M.rms_norm(x_out, shared["final_norm"], cfg.norm_eps)
-                lg = M.unembed(shared, xn)[:, 0].astype(jnp.float32)
+                lg = M.unembed(shared, xn).astype(jnp.float32)
                 logits_buf = jnp.where(
                     is_last,
                     jax.lax.dynamic_update_index_in_dim(
@@ -645,7 +664,7 @@ class InterleavedEngine:
 
             logits = jax.lax.psum(logits_buf, ax) / 1.0  # only last stage wrote
             new_glob = dict(glob)
-            new_glob["pos"] = pos + 1
+            new_glob["pos"] = pos + q_len
             if pos_ids is not None:
                 new_glob["pos_ids"] = pos_ids
             dbg_out = jnp.stack([dbg[0],
@@ -803,6 +822,71 @@ class InterleavedEngine:
         active = jnp.asarray(active, bool)
         toks = jnp.where(active[:, None], tokens.astype(jnp.int32), 0)
         return self.decode_step(state, toks)
+
+    # -- speculative verification (DESIGN.md §11) --------------------------------
+    def verify_step(self, state, tokens):
+        """Score q_len query positions per slot in ONE pipeline round —
+        one weight-stream validates q_len tokens. tokens: (n_mb*mb,
+        q_len) int32, column 0 the last committed token, the rest
+        drafted. Returns (logits (n_mb*mb, q_len, PV), state) with pos
+        advanced by q_len and all q_len K/V written; the caller commits
+        an accepted prefix via rollback() (stale entries carry pos_ids >
+        pos and are masked out of every later read)."""
+        if self.cfg.family not in (Family.DENSE, Family.MOE):
+            raise NotImplementedError(
+                f"speculative verification needs pure-KV per-layer state "
+                f"(DENSE/MOE), not {self.cfg.family}")
+        q_len = tokens.shape[1]
+        assert 1 <= q_len < max(self.S_c, 2), (q_len, self.S_c)
+        if q_len not in self._steps:
+            self._steps[q_len] = self._build_step(q_len)
+        t = tokens.reshape(self.n_mb, self.mb, q_len)
+        off = state["offload"]
+        if self.fetch_mode == "step":
+            off = self._defer_model_sharding(self._fetch(off))
+        logits, cache, glob, dbg = self._steps[q_len](
+            state["resident"], off, state["shared"],
+            state["cache"], state["glob"], t, self._stage_ids)
+        new_state = dict(state)
+        new_state["cache"] = cache
+        new_state["glob"] = glob
+        self.last_debug = dbg
+        return logits.reshape(self.n_mb * self.mb, q_len, -1), new_state
+
+    def verify_requests(self, state, tokens, active):
+        """Slot-masked verify_step (serving entry): inactive slots ride
+        as padding with zeroed tokens, their logits must be ignored.
+        Paged slot accounting is the caller's job (note_committed) —
+        unlike decode_requests, the tokens actually kept are only known
+        after acceptance."""
+        active = jnp.asarray(active, bool)
+        toks = jnp.where(active[:, None], tokens.astype(jnp.int32), 0)
+        return self.verify_step(state, toks)
+
+    def rollback(self, state, pos: int):
+        """Reset the decode position to `pos` (commit an accepted prefix
+        of a verify round, rejecting the suffix). Purely a pos reset:
+        rejected positions' cache entries hold pos_ids > pos, so they
+        are invisible to attention and overwritten when decode reaches
+        their position again."""
+        new_state = dict(state)
+        glob = dict(state["glob"])
+        glob["pos"] = jnp.asarray(pos, glob["pos"].dtype)
+        new_state["glob"] = glob
+        return new_state
+
+    def note_committed(self, pos: int, active) -> None:
+        """Paged bookkeeping after a spec round: live slots grow to the
+        committed context (several tokens per round, unlike the +1 of
+        decode_requests); rejected-candidate pages were never allocated
+        — the engine's dense per-slot cache only accounts committed
+        tokens."""
+        if not self.paged:
+            return
+        self._paged_pos = pos
+        for slot, live in enumerate(np.asarray(active, bool)):
+            if live:
+                self.extend_slot(slot, pos)
 
     def lower_step(self):
         """For the dry-run: lower the full serve_step (restore + pipeline)

@@ -119,9 +119,14 @@ class InterleavedPipelineSim:
         d = self.plan.devices[i]
         return d.resident_total / self.n_seg + d.off_layers_seg()
 
-    def _comp_seg_mb(self, i: int, ctx: int) -> float:
-        """One micro-batch's compute for device i's slice of one segment."""
-        w = dataclasses.replace(self.w, ctx=max(ctx, 1))
+    def _comp_seg_mb(self, i: int, ctx: int, q_len: int = 1) -> float:
+        """One micro-batch's compute for device i's slice of one segment.
+        q_len > 1 prices a speculative verify round (DESIGN.md §11): the
+        round scores q_len query positions, so FLOPs and KV reads scale
+        with q_len (mb -> mb*q_len in the roofline) while weight bytes —
+        the term that dominates offloaded decode — are read once."""
+        w = dataclasses.replace(self.w, ctx=max(ctx, 1),
+                                mb=self.w.mb * max(q_len, 1))
         return self._layers_seg(i) * w.comp_layer(self.env.devices[i])
 
     def _load_bytes_seg(self, i: int) -> float:
@@ -137,15 +142,17 @@ class InterleavedPipelineSim:
             total = max(total - self.kv.load_reduction_bytes_seg(i), 0.0)
         return total
 
-    def _hop_time(self, bw: float) -> float:
-        return self.w.h_size / bw + self.env.net_latency
+    def _hop_time(self, bw: float, q_len: int = 1) -> float:
+        """q_len positions hop together in a verify round — the ring
+        hands q_len activations per micro-batch."""
+        return max(q_len, 1) * self.w.h_size / bw + self.env.net_latency
 
     # -- one auto-regressive step ----------------------------------------------
-    def _step(self, t0: float, ctx: int, bw: float, n_micro: int
-              ) -> Tuple[float, float, float]:
+    def _step(self, t0: float, ctx: int, bw: float, n_micro: int,
+              q_len: int = 1) -> Tuple[float, float, float]:
         """Returns (t_end, load_stall, comm_time)."""
         D, S = self.D, self.n_seg
-        hop = self._hop_time(bw)
+        hop = self._hop_time(bw, q_len)
         dev_free = [t0] * D
         stall = 0.0
         comm = 0.0
@@ -158,7 +165,7 @@ class InterleavedPipelineSim:
                 for m in range(n_micro):
                     start = max(ready[m], dev_free[i], w_ready)
                     stall += max(w_ready - max(ready[m], dev_free[i]), 0.0)
-                    end = start + self._comp_seg_mb(i, ctx)
+                    end = start + self._comp_seg_mb(i, ctx, q_len)
                     dev_free[i] = end
                     ready[m] = end + hop
                     comm += hop
@@ -193,7 +200,8 @@ class InterleavedPipelineSim:
         self.now = max(self.now, t)
 
     def step_once(self, *, ctx: Optional[int] = None, n_micro: int = 1,
-                  kv_tokens: Optional[int] = None) -> StepTrace:
+                  kv_tokens: Optional[int] = None,
+                  q_len: int = 1) -> StepTrace:
         """One autoregressive step at the current virtual clock.
 
         ctx: KV read span this step (default: prompt + steps taken, the
@@ -202,7 +210,11 @@ class InterleavedPipelineSim:
         pipeline is priced as one. kv_tokens: effective per-stream token
         count for the OnlinePlanner's TS thresholds (default ctx); the
         serving layer passes Σ_active ctx_i / n_micro_env so admission-level
-        KV accounting is what walks the ladder (paper Eq. 5).
+        KV accounting is what walks the ladder (paper Eq. 5). q_len: query
+        positions scored this round (speculative verify, DESIGN.md §11) —
+        compute and activation hops scale with q_len, weight streaming
+        does not, which is exactly why the verify round amortizes the
+        per-round load bytes over every accepted token.
         """
         tok = self._tok_count
         if ctx is None:
@@ -228,7 +240,8 @@ class InterleavedPipelineSim:
                        for i in range(self.D)] if self.kv else None
             eff = ctx if kv_tokens is None else kv_tokens
             fired = bool(self.planner.on_token(eff, offsets))
-        t_end, stall, comm = self._step(self.now, ctx, self._bw, n_micro)
+        t_end, stall, comm = self._step(self.now, ctx, self._bw, n_micro,
+                                        q_len)
         trace = StepTrace(tok, t_end - self.now, stall, comm, fired,
                           kv_moved_bytes=moved)
         self.now = t_end

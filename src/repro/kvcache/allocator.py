@@ -116,6 +116,22 @@ class BlockTable:
         new = self.extend_to(self.tokens + 1, alloc)
         return new[0] if new else None
 
+    def truncate_to(self, n_tokens: int, alloc: PageAllocator) -> List[int]:
+        """Shrink the table to hold `n_tokens` (speculative-decoding
+        rollback: reject a drafted suffix, DESIGN.md §11). Pages past
+        ceil(n_tokens/page_size) are decrefed; returns the page ids this
+        table dropped (freed iff refcount hit zero)."""
+        if n_tokens > self.tokens:
+            raise ValueError(f"truncate_to past end ({self.tokens} -> "
+                             f"{n_tokens} tokens)")
+        keep = alloc.pages_for(n_tokens)
+        dropped = self.pages[keep:]
+        for pid in dropped:
+            alloc.decref(pid)
+        self.pages = self.pages[:keep]
+        self.tokens = max(n_tokens, 0)
+        return dropped
+
     def release(self, alloc: PageAllocator) -> None:
         for pid in self.pages:
             alloc.decref(pid)

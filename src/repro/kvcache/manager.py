@@ -88,6 +88,12 @@ class PagedKVManager:
         except OutOfPages:
             return False
 
+    def truncate(self, rid: int, n_tokens: int) -> int:
+        """Roll back `rid` to `n_tokens` (speculative decoding rejected a
+        drafted suffix — DESIGN.md §11); frees the pages past the kept
+        prefix. Returns pages dropped."""
+        return self.pool.truncate_table(self._tables[rid], n_tokens)
+
     def release(self, rid: int) -> None:
         t = self._tables.pop(rid)
         self._suspended.pop(rid, None)

@@ -32,7 +32,7 @@ from repro.configs.base import Family, ModelConfig
 from repro.kvcache.allocator import BlockTable
 from repro.kvcache.pool import PagedKVConfig, PagePool
 from repro.models import model as M
-from repro.models.attention import paged_attn_decode
+from repro.models.attention import paged_attn_decode, paged_attn_decode_multi
 
 
 def _check_family(cfg: ModelConfig) -> None:
@@ -66,6 +66,46 @@ def _paged_decode_step(cfg: ModelConfig, params, k_pool, v_pool,
         xn = M.rms_norm(x, p["ln1"], cfg.norm_eps)
         a_out, ck, cv = paged_attn_decode(
             p["attn"], xn, xs["k"], xs["v"], page_ids, slot, block_tables,
+            ctx, pos, rope_theta=cfg.rope_theta, window=xs["window"],
+            impl=impl)
+        if cfg.parallel_block:
+            x = x + a_out + M.mlp(p["mlp"], xn)
+        else:
+            x = x + a_out
+            x = x + M.mlp(p["mlp"], M.rms_norm(x, p["ln2"], cfg.norm_eps))
+        return (x,), {"k": ck, "v": cv}
+
+    xs = {"p": params["layers"],
+          "window": M.layer_windows(cfg, cfg.n_layers),
+          "k": k_pool, "v": v_pool}
+    (x,), ys = jax.lax.scan(body, (x,), xs)
+    x = M.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return M.unembed(params, x), ys["k"], ys["v"]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "impl"),
+                   donate_argnums=(2, 3))
+def _paged_verify_step(cfg: ModelConfig, params, k_pool, v_pool,
+                       block_tables, page_ids, slots, pos, token,
+                       impl: str = "ref"):
+    """q_len tokens scored in one stack traversal (speculative-decoding
+    verification, DESIGN.md §11). k/v_pool: (L, P, ps, KV, dh);
+    page_ids: (B, q_len) physical page per new token; slots: (q_len,)
+    offsets inside those pages; pos: scalar int32 position of token 0;
+    token: (B, q_len) int32. Returns (logits (B, q_len, PV), k_pool,
+    v_pool) with all q_len K/V written — rollback is the caller
+    truncating tables and resetting pos (garbage left in rejected slots
+    is masked by ctx and overwritten when decode reaches them)."""
+    B, Q = token.shape
+    x = M.embed(params, token).astype(jnp.bfloat16)
+    ctx = jnp.full((B,), pos + Q, jnp.int32)
+
+    def body(carry, xs):
+        x, = carry
+        p = xs["p"]
+        xn = M.rms_norm(x, p["ln1"], cfg.norm_eps)
+        a_out, ck, cv = paged_attn_decode_multi(
+            p["attn"], xn, xs["k"], xs["v"], page_ids, slots, block_tables,
             ctx, pos, rope_theta=cfg.rope_theta, window=xs["window"],
             impl=impl)
         if cfg.parallel_block:
@@ -154,6 +194,43 @@ class PagedDecodeCache:
             jnp.asarray(token, jnp.int32), self.impl)
         self.pos += 1
         return logits
+
+    # -- speculative verify / commit (DESIGN.md §11) -----------------------------
+    def verify(self, params, tokens):
+        """Score q_len positions in one pass. tokens: (B, q_len) int32,
+        column 0 = last committed token, the rest drafted. Allocates
+        pages for all q_len candidate positions and writes their K/V;
+        returns logits (B, q_len, PV). `pos` does NOT advance — call
+        commit() with the accepted count."""
+        tokens = np.asarray(tokens, np.int32)
+        B, Q = tokens.shape
+        if self.pos + Q > self.max_len:
+            raise ValueError(f"verify past max_len ({self.pos}+{Q} > "
+                             f"{self.max_len})")
+        self._extend_all(self.pos + Q)
+        ps = self.pool.page_size
+        qpos = np.arange(self.pos, self.pos + Q)
+        page_ids = np.stack([[t.pages[p // ps] for p in qpos]
+                             for t in self.tables]).astype(np.int32)
+        logits, self.k_pool, self.v_pool = _paged_verify_step(
+            self.cfg, params, self.k_pool, self.v_pool,
+            self._device_tables(), jnp.asarray(page_ids),
+            jnp.asarray(qpos % ps, jnp.int32), jnp.int32(self.pos),
+            jnp.asarray(tokens), self.impl)
+        self._spec_len = Q
+        return logits
+
+    def commit(self, n_tokens: int) -> None:
+        """Advance `pos` by the accepted count and roll back the rejected
+        suffix: tables truncate to the committed length, pages backing
+        only-rejected slots return to the pool."""
+        assert 0 <= n_tokens <= getattr(self, "_spec_len", 0), n_tokens
+        new_pos = self.pos + n_tokens
+        for t in self.tables:
+            if self.pool.truncate_table(t, new_pos):
+                self._bt_dev = None      # table shrank: refresh device copy
+        self.pos = new_pos
+        self._spec_len = 0
 
     def release(self) -> None:
         for t in self.tables:

@@ -113,6 +113,19 @@ class PagePool:
         self._count[tier] += len(new)
         return new
 
+    def truncate_table(self, table: BlockTable, n_tokens: int) -> int:
+        """Shrink a table to `n_tokens` (speculative rollback): pages past
+        the kept prefix leave their tier when this table was the last
+        owner. Returns the number of pages dropped."""
+        if not 0 <= n_tokens <= table.tokens:   # validate BEFORE touching
+            raise ValueError(                   # tier accounting
+                f"truncate_table to {n_tokens} outside [0, {table.tokens}]")
+        keep = self.alloc.pages_for(n_tokens)
+        for pid in table.pages[keep:]:
+            if self.alloc.refcount(pid) == 1:   # last owner frees the slot
+                self._count[self._tier.pop(pid)] -= 1
+        return len(table.truncate_to(n_tokens, self.alloc))
+
     def release_table(self, table: BlockTable) -> None:
         for pid in table.pages:
             if self.alloc.refcount(pid) == 1:   # last owner frees the slot

@@ -35,6 +35,12 @@ def main(argv=None):
                     help="JSON arrival trace for --pattern trace")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative decoding: draft k tokens, verify "
+                         "them in one pipeline round (DESIGN.md §11)")
+    ap.add_argument("--spec-k", type=int, default=4)
+    ap.add_argument("--spec-draft", default="ngram",
+                    choices=("ngram", "model"))
     args = ap.parse_args(argv)
 
     import jax
@@ -67,10 +73,16 @@ def main(argv=None):
     else:
         print("single-device fallback (no engine)")
 
+    spec = None
+    if args.spec:
+        from repro.specdec import SpecConfig
+        spec = SpecConfig(k=args.spec_k, draft=args.spec_draft,
+                          seed=args.seed)
     srv = LimeServer(cfg, params, engine=engine, max_len=args.max_len,
                      pattern="sporadic" if args.pattern == "sporadic"
                      else "bursty",
-                     sampler=SamplerConfig(temperature=args.temperature))
+                     sampler=SamplerConfig(temperature=args.temperature),
+                     spec=spec)
 
     arrivals = cli_arrivals(args.pattern, args.requests, seed=args.seed,
                             prompt_len=args.prompt_len,
@@ -86,7 +98,8 @@ def main(argv=None):
             f"out[:8]={r.output[:8]}"
         print(f"req {r.rid}: {status}")
     report = summarize(done, pattern=args.pattern,
-                       backend="engine" if engine else "fallback")
+                       backend="engine" if engine else "fallback",
+                       stats=sched.stats)
     print(json.dumps(report.to_dict(), indent=2))
     return 0
 

@@ -84,6 +84,34 @@ def chunked_attention(q, k, v, *, causal: bool, window, q_offset=0,
     return out.reshape(B, Sq, H, dh)
 
 
+def mq_decode_attention_ref(q, k_cache, v_cache, pos_ids, pos, *, window):
+    """q_len>1 decode attention against a (possibly ring-buffer) KV cache:
+    the multi-query generalization of `decode_attention_ref` used by
+    speculative-decoding verification (DESIGN.md §11).
+
+    q: (B, q_len, H, dh) — query i sits at absolute position pos + i;
+    k_cache/v_cache: (B, S_c, KV, dh) with the q_len new K/V already
+    written; pos_ids: (S_c,) absolute position per slot (-1 = empty);
+    pos: scalar position of query 0. Returns (B, q_len, H, dh).
+    """
+    B, Q, H, dh = q.shape
+    S_c, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = dh ** -0.5
+    qg = q.reshape(B, Q, KV, G, dh)
+    scores = jnp.einsum("bqkgd,bskd->bqkgs", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    qpos = pos + jnp.arange(Q)                     # (Q,)
+    valid = (pos_ids[None, :] >= 0) \
+        & (pos_ids[None, :] <= qpos[:, None])      # (Q, S_c)
+    if window is not None:
+        valid &= (qpos[:, None] - pos_ids[None, :]) < window
+    scores = jnp.where(valid[None, :, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bqkgs,bskd->bqkgd", probs, v_cache)
+    return out.reshape(B, Q, H, dh)
+
+
 def decode_attention_ref(q, k_cache, v_cache, pos_ids, pos, *, window):
     """One-token attention against a (possibly ring-buffer) KV cache.
 
@@ -162,6 +190,42 @@ def attn_decode(params, x, cache_k, cache_v, pos_ids, pos, slot, *, rope_theta,
     return y, ck, cv
 
 
+def attn_decode_multi(params, x, cache_k, cache_v, pos_ids, pos, slots, *,
+                      rope_theta, window=None, impl: str = "ref"):
+    """q_len-token verification decode (speculative decoding, DESIGN.md
+    §11). x: (B, q_len, D); slots: (q_len,) cache indices receiving the
+    new K/V (position pos + i lands at slots[i]); pos_ids: (S_c,) already
+    updated with pos + i at slots[i]. All q_len K/V are written first, so
+    the queries attend to each other through the cache; causality between
+    them is the per-query validity mask (pos_ids <= pos + i) — exactly the
+    arithmetic sequential `attn_decode` steps would have produced.
+    Returns (out (B, q_len, D), new_cache_k, new_cache_v)."""
+    B, Q, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    posb = pos + jnp.broadcast_to(jnp.arange(Q), (B, Q))
+    q = apply_rope(q, posb, rope_theta)
+    k = apply_rope(k, posb, rope_theta)
+    # contiguous write at slots[0] (dynamic_update_slice — the one update
+    # op old XLA's partial-auto partitioner accepts inside the engine's
+    # shard_map; Scatter/one-hot variants trip its manual-subgroup
+    # check). Callers guarantee the verify window never wraps the ring:
+    # the serving backend caps q_len so pos + q_len <= max_len.
+    ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                      (0, slots[0], 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                      (0, slots[0], 0, 0))
+    if impl == "pallas":
+        from repro.kernels.decode_attention import multiquery as mq
+        out = mq.mq_decode_attention(q, ck, cv, pos_ids, pos, window=window)
+    else:
+        out = mq_decode_attention_ref(q, ck, cv, pos_ids, pos,
+                                      window=window)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, ck, cv
+
+
 def paged_attn_decode(params, x, k_pool, v_pool, page_ids, slot,
                       block_tables, ctx_lens, pos, *, rope_theta,
                       window=None, impl: str = "ref"):
@@ -190,6 +254,36 @@ def paged_attn_decode(params, x, k_pool, v_pool, page_ids, slot,
             paged_decode_attention_ref
         out = paged_decode_attention_ref(q, ck, cv, block_tables, ctx_lens,
                                          window=window)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, ck, cv
+
+
+def paged_attn_decode_multi(params, x, k_pool, v_pool, page_ids, slots,
+                            block_tables, ctx_lens, pos, *, rope_theta,
+                            window=None, impl: str = "ref"):
+    """q_len-token verification decode against a paged KV pool (DESIGN.md
+    §11). x: (B, q_len, D); page_ids: (B, q_len) physical page per new
+    token; slots: (q_len,) offsets inside those pages (shared `pos`
+    convention, so uniform across the batch); ctx_lens: (B,) tokens live
+    *including* the q_len new ones. Returns (out, new_k_pool, new_v_pool).
+    """
+    B, Q, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    posb = pos + jnp.broadcast_to(jnp.arange(Q), (B, Q))
+    q = apply_rope(q, posb, rope_theta)
+    k = apply_rope(k, posb, rope_theta)
+    slot_b = jnp.broadcast_to(slots, (B, Q))
+    ck = k_pool.at[page_ids, slot_b].set(k.astype(k_pool.dtype))
+    cv = v_pool.at[page_ids, slot_b].set(v.astype(v_pool.dtype))
+    from repro.kernels.decode_attention import multiquery as mq
+    if impl == "pallas":
+        out = mq.mq_paged_decode_attention(q, ck, cv, block_tables,
+                                           ctx_lens, window=window)
+    else:
+        out = mq.mq_paged_decode_attention_ref(q, ck, cv, block_tables,
+                                               ctx_lens, window=window)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
     return y, ck, cv
 

@@ -25,7 +25,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import AttnKind, Family, ModelConfig
 from repro.models import spec as pspec
 from repro.models.attention import (attention_specs, attn_forward, attn_decode,
-                                    cross_attn_decode)
+                                    attn_decode_multi, cross_attn_decode)
 from repro.models.modules import (embed, embed_specs, mlp, mlp_specs, rms_norm,
                                   rms_norm_spec, unembed,
                                   round_up,  # noqa: F401  (M.* namespace API)
@@ -462,7 +462,12 @@ def seed_cross_kv(cfg: ModelConfig, params, cache, enc_out):
 # Decode step
 # ============================================================================
 def _decode_body(cfg: ModelConfig, mesh, impl: str, moe: bool, pos, slot,
-                 pos_ids, enc_len: int = 0, moe_mode: str = "shard_map"):
+                 pos_ids, enc_len: int = 0, moe_mode: str = "shard_map",
+                 q_slots=None):
+    """q_slots: optional (q_len,) cache slots — switches the attention
+    read/write to the multi-query verification path (speculative decoding,
+    DESIGN.md §11); every other block is position-free and handles the
+    (B, q_len, D) activation unchanged."""
     bc = _bconstraint(mesh) if moe_mode != "auto" else (lambda x: x)
 
     def body(carry, xs):
@@ -486,9 +491,15 @@ def _decode_body(cfg: ModelConfig, mesh, impl: str, moe: bool, pos, slot,
             return (x, aux), ys
 
         xn = rms_norm(x, p["ln1"], cfg.norm_eps)
-        a_out, ck, cv = attn_decode(p["attn"], xn, xs["k"], xs["v"], pos_ids,
-                                    pos, slot, rope_theta=cfg.rope_theta,
-                                    window=window, impl=impl)
+        if q_slots is not None:
+            a_out, ck, cv = attn_decode_multi(
+                p["attn"], xn, xs["k"], xs["v"], pos_ids, pos, q_slots,
+                rope_theta=cfg.rope_theta, window=window, impl=impl)
+        else:
+            a_out, ck, cv = attn_decode(p["attn"], xn, xs["k"], xs["v"],
+                                        pos_ids, pos, slot,
+                                        rope_theta=cfg.rope_theta,
+                                        window=window, impl=impl)
         ys["k"], ys["v"] = ck, cv
 
         if cfg.family == Family.HYBRID:
@@ -600,6 +611,80 @@ def decode_step(cfg: ModelConfig, params, cache, token, *, mesh=None,
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = unembed(params, x)
     new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+def verify_step(cfg: ModelConfig, params, cache, tokens, *, mesh=None,
+                impl: str = "ref", long_mode: bool = False):
+    """Multi-token verification pass for speculative decoding (DESIGN.md
+    §11): score q_len query positions in one traversal of the stack.
+
+    tokens: (B, q_len) int32 — position pos+i holds tokens[:, i] (column 0
+    is the last committed token, the rest are drafted). Returns
+    (logits (B, q_len, PV), new_cache) with new_cache["pos"] = pos + q_len
+    and all q_len K/V written. Rolling back rejected positions is just
+    resetting "pos": stale cache entries carry pos_ids > pos and are
+    masked out of every future attention read, then overwritten when
+    decoding actually reaches their position.
+
+    Families with recurrent per-step state (SSM/HYBRID) cannot roll back
+    by masking; ENCDEC's cross-attention is untested here — all three are
+    rejected."""
+    if cfg.family not in (Family.DENSE, Family.MOE):
+        raise NotImplementedError(
+            f"speculative verification needs pure-KV per-layer state "
+            f"(DENSE/MOE), not {cfg.family}")
+    B, Q = tokens.shape
+    pos = cache["pos"]
+    x = embed(params, tokens).astype(jnp.bfloat16)
+    x = _bconstraint(mesh)(x)
+
+    new_cache = dict(cache)
+    pos_ids = cache.get("pos_ids")
+    S_c = pos_ids.shape[0]
+    assert Q < S_c, f"q_len {Q} must be < cache length {S_c}"
+    qpos = pos + jnp.arange(Q)
+    slots = qpos % S_c
+    # contiguous update: the verify window never wraps the ring (callers
+    # cap pos + Q at the cache length; see attn_decode_multi)
+    pos_ids = jax.lax.dynamic_update_slice(pos_ids,
+                                           qpos.astype(pos_ids.dtype),
+                                           (slots[0],))
+    new_cache["pos_ids"] = pos_ids
+
+    aux = jnp.float32(0.0)
+    off = 0
+    per_layer_keys = [k for k in ("k", "v") if k in cache]
+
+    def run_stack(x, aux, stack_params, n_layers, layer_off, moe):
+        body = _decode_body(cfg, mesh, impl, moe, pos, jnp.int32(0),
+                            pos_ids, q_slots=slots)
+        xs = {"p": stack_params,
+              "window": layer_windows(cfg, n_layers, long_mode, layer_off)}
+        for kkey in per_layer_keys:
+            xs[kkey] = jax.lax.dynamic_slice_in_dim(cache[kkey], layer_off,
+                                                    n_layers, axis=0)
+        (x, aux), ys = jax.lax.scan(body, (x, aux), xs)
+        return x, aux, ys
+
+    if "dense_layers" in params:
+        nd = jax.tree.leaves(params["dense_layers"])[0].shape[0]
+        x, aux, ys = run_stack(x, aux, params["dense_layers"], nd, 0, False)
+        for kkey in ys:
+            new_cache[kkey] = jax.lax.dynamic_update_slice_in_dim(
+                new_cache[kkey], ys[kkey], 0, axis=0)
+        off = nd
+
+    nl = cfg.n_layers - off
+    x, aux, ys = run_stack(x, aux, params["layers"], nl, off,
+                           cfg.family == Family.MOE)
+    for kkey in ys:
+        new_cache[kkey] = jax.lax.dynamic_update_slice_in_dim(
+            new_cache[kkey], ys[kkey], off, axis=0)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, x)
+    new_cache["pos"] = pos + Q
     return logits, new_cache
 
 

@@ -55,7 +55,7 @@ class SimBackend:
 
     def __init__(self, env: CostEnv, plan=None, *, n_slots: int = 0,
                  use_planner: bool = True, use_kv_transfer: bool = True,
-                 prompt_tokens: int = 64):
+                 prompt_tokens: int = 64, spec=None):
         if plan is None:
             from repro.core.offline_scheduler import allocate
             r = allocate(env, env.work.cfg.n_layers,
@@ -71,6 +71,17 @@ class SimBackend:
             use_kv_transfer=use_kv_transfer, prompt_tokens=prompt_tokens)
         self._ctx: Dict[int, int] = {}        # slot -> prompt + generated
         self._kv_pages = None                 # (pages_in_use, page_size)
+        # speculative decoding (DESIGN.md §11): the simulator has no real
+        # tokens to verify, so a spec config prices each decode round as a
+        # (k+1)-query verify pass and draws per-slot accepted counts from
+        # the acceptance-rate model (each draft token independently
+        # accepted with prob spec.acceptance, stopping at the first
+        # rejection — the geometric shape real rejection sampling has).
+        self.spec = spec
+        if spec is not None:
+            from repro.specdec import SpecStats
+            self._spec_rng = np.random.default_rng(spec.seed)
+            self._spec_stats = SpecStats()
 
     # -- clock -------------------------------------------------------------------
     def now(self) -> float:
@@ -149,15 +160,40 @@ class SimBackend:
         self._ctx[slot] += 1
         return None
 
-    def decode_active(self, slots: Sequence[int]) -> Dict[int, Optional[int]]:
+    def decode_active(self, slots: Sequence[int]):
         if not slots:
             return {}
         ctx = max(self._ctx[s] for s in slots)
+        if self.spec is not None:
+            return self._decode_active_spec(slots, ctx)
         self.sim.step_once(ctx=ctx, n_micro=len(slots),
                            kv_tokens=self._planner_tokens())
         for s in slots:
             self._ctx[s] += 1
         return {s: None for s in slots}
+
+    def _decode_active_spec(self, slots: Sequence[int], ctx: int):
+        """One speculative round: price a (k+1)-query verify pass, then
+        commit 1..k+1 tokens per slot from the acceptance model."""
+        k = self.spec.k
+        self.sim.step_once(ctx=ctx, n_micro=len(slots),
+                           kv_tokens=self._planner_tokens(), q_len=k + 1)
+        out = {}
+        for s in slots:
+            acc = 0
+            while acc < k and self._spec_rng.random() < self.spec.acceptance:
+                acc += 1
+            committed = acc + 1          # accepted prefix + correction/bonus
+            self._ctx[s] += committed
+            self._spec_stats.rounds += 1
+            self._spec_stats.drafted += k
+            self._spec_stats.accepted += acc
+            out[s] = [None] * committed
+        return out
+
+    @property
+    def spec_stats(self):
+        return self._spec_stats.to_dict() if self.spec is not None else None
 
     def release(self, slot: int) -> None:
         self._ctx.pop(slot, None)
@@ -189,7 +225,7 @@ class EngineBackend:
 
     def __init__(self, cfg, params, *, engine=None, n_slots: int = 0,
                  max_len: int = 512, sampler=None, prompt_seed: int = 0,
-                 paged: bool = False, page_size: int = 64):
+                 paged: bool = False, page_size: int = 64, spec=None):
         import jax
 
         from repro.models import model as M
@@ -199,6 +235,31 @@ class EngineBackend:
         self.params = params
         self.engine = engine
         self.max_len = max_len
+        # speculative decoding (DESIGN.md §11): real drafts, real
+        # multi-token verification. The shared-pos cache layout (prompts
+        # left-padded, one position counter per batch) forces lockstep
+        # commits: every live slot advances by the min accepted count and
+        # the rest re-verifies next round — lossless either way, since
+        # re-verification redraws from the same target conditional.
+        self.spec = spec
+        self._ctl = None
+        self._pos = 0                         # host mirror of cache pos
+        if spec is not None:
+            from repro.configs.base import Family
+            if cfg.family not in (Family.DENSE, Family.MOE):
+                raise ValueError(
+                    f"speculative decoding needs pure-KV per-layer state "
+                    f"(DENSE/MOE), not {cfg.family}")
+            # verify windows must not wrap the cache ring: cap rounds at
+            # the ACTUAL KV length (sliding-window caches have
+            # S_c = window < max_len), not max_len. Past the ring end the
+            # plain ring-aware step takes over (decode_active fallback).
+            if paged and engine is None:
+                self._spec_cap = max_len      # pool slots, no ring
+            elif engine is not None:
+                self._spec_cap = min(engine.S_c, max_len)
+            else:
+                self._spec_cap = min(M.kv_cache_len(cfg, max_len), max_len)
         # paged=True routes the single-device path through the paged
         # decode (block-table gather attention, kvcache/paged_decode);
         # with an engine, pass paged=True to the engine itself instead
@@ -219,6 +280,9 @@ class EngineBackend:
         self._prefill = jax.jit(functools.partial(M.prefill, cfg))
         self._decode = jax.jit(functools.partial(M.decode_step, cfg)) \
             if engine is None else None
+        self._verify = jax.jit(functools.partial(M.verify_step, cfg)) \
+            if (engine is None and not self.paged and spec is not None) \
+            else None
         self._t0 = time.monotonic()
         self._skew = 0.0
         self._state = None
@@ -310,10 +374,26 @@ class EngineBackend:
             self._state = cache
         tok = self._sample(logits[:, -1])
         self._cur = tok[:, None]
+        if self.spec is not None:
+            from repro.specdec import SpecDecodeController
+            if self._ctl is None:
+                self._ctl = SpecDecodeController(self.spec, self.sampler,
+                                                 self.cfg, self.batch_width)
+            self._pos = int(toks.shape[1])    # left-padded prompt span
+            for slot, p in enumerate(prompts):
+                # drafts see the real (unpadded) prompt + first token
+                self._ctl.begin(slot, list(int(t) for t in p)
+                                + [int(tok[slot])])
         return [int(tok[slot]) for slot in range(len(reqs))]
 
-    def decode_active(self, slots: Sequence[int]) -> Dict[int, Optional[int]]:
+    def decode_active(self, slots: Sequence[int]):
         import jax.numpy as jnp
+        # speculative round when a draft fits before the cache/ring end
+        # (the last position is reserved for the committed-token write)
+        if self.spec is not None:
+            k = min(self.spec.k, self._spec_cap - self._pos - 1)
+            if slots and k >= 1:
+                return self._decode_active_spec(slots, k)
         active = np.zeros(self.batch_width, bool)
         for s in slots:
             active[s] = True
@@ -328,10 +408,69 @@ class EngineBackend:
             if lg.ndim == 3:
                 lg = lg[:, 0]
         tok = self._sample(lg)
+        if self.spec is not None:             # keep drafts/pos in sync on
+            self._pos += 1                    # the non-spec fallback step
+            for s in slots:
+                self._ctl.observe(s, [int(tok[s])])
         # freed slots keep replaying their last token as pipeline padding
         self._cur = jnp.where(jnp.asarray(active)[:, None], tok[:, None],
                               self._cur)
         return {s: int(tok[s]) for s in slots}
+
+    def _decode_active_spec(self, slots: Sequence[int], k: int):
+        """One speculative round: propose k per live slot, verify all of
+        them in ONE multi-token pass (one engine pipeline round — one
+        weight-stream), commit the lockstep-min accepted prefix, roll the
+        rejected suffix back (pos reset / table truncation)."""
+        import jax.numpy as jnp
+        cur = np.array(self._cur, np.int32)             # (B, 1) host copy
+        mat = np.tile(cur, (1, 1 + k))                  # padding: replicas
+        proposals = {}
+        for s in slots:
+            toks, qp = self._ctl.propose(s, k)
+            proposals[s] = (toks, qp)
+            mat[s, 1:] = toks
+        active = np.zeros(self.batch_width, bool)
+        active[list(slots)] = True
+        if self.engine is not None:
+            lg, self._state = self.engine.verify_requests(
+                self._state, jnp.asarray(mat), jnp.asarray(active))
+        elif self.paged:
+            lg = self._paged_cache.verify(self.params, mat)
+        else:
+            lg, self._state = self._verify(self.params, self._state,
+                                           jnp.asarray(mat))
+        lg = np.asarray(lg, np.float32)                 # (B, k+1, PV)
+        committed = {s: self._ctl.verify(lg[s], *proposals[s])
+                     for s in slots}
+        # shared-pos lockstep: every live slot advances by the same count;
+        # tokens past the min re-verify next round (greedy re-derives them
+        # exactly; stochastic redraws from the same target conditional)
+        c = min(len(v) for v in committed.values())
+        for s in slots:
+            # accepted AND committed drafts only (out = accepted drafts +
+            # one correction/bonus; truncated tokens re-draft next round)
+            self._ctl.note_round(k, min(c, len(committed[s]) - 1))
+        committed = {s: v[:c] for s, v in committed.items()}
+        new_pos = self._pos + c
+        if self.engine is not None:
+            self._state = self.engine.rollback(self._state, new_pos)
+            self.engine.note_committed(new_pos, active)
+        elif self.paged:
+            self._paged_cache.commit(c)
+        else:
+            self._state = dict(self._state)
+            self._state["pos"] = jnp.asarray(new_pos, jnp.int32)
+        self._pos = new_pos
+        for s in slots:
+            self._ctl.observe(s, committed[s])
+            cur[s, 0] = committed[s][-1]
+        self._cur = jnp.asarray(cur)
+        return committed
+
+    @property
+    def spec_stats(self):
+        return self._ctl.stats.to_dict() if self._ctl is not None else None
 
     def join(self, slot: int, req) -> Optional[int]:
         raise NotImplementedError(

@@ -42,6 +42,11 @@ class ServingReport:
     ttft_p99_s: float
     latency_p50_s: float
     latency_p99_s: float
+    # per-request decode pace: generated tokens / (finish - first token),
+    # the steady-state rate users see after TTFT (NaN when no request
+    # decoded more than one token)
+    decode_tok_s_p50: float = float("nan")
+    decode_tok_s_p99: float = float("nan")
     # paged-KV accounting (DESIGN.md §10; zero under reservation policy)
     n_preempted: int = 0           # preemption events (spill or recompute)
     peak_active: int = 0           # max co-resident requests
@@ -49,6 +54,11 @@ class ServingReport:
     kv_pages_spilled: int = 0
     kv_pages_fetched: int = 0
     kv_migrated_bytes: float = 0.0
+    # speculative decoding (DESIGN.md §11; zero when spec is off)
+    spec_rounds: int = 0
+    spec_drafted: int = 0
+    spec_accepted: int = 0
+    spec_acceptance_rate: float = 0.0
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -77,6 +87,12 @@ def summarize(requests: List, *, pattern: str = "", backend: str = "",
     ttfts = [r.first_token_s - r.arrival_s for r in served
              if r.first_token_s is not None]
     lats = [r.finish_s - r.arrival_s for r in served]
+    # p50/p99 of per-request decode pace; the first token belongs to TTFT,
+    # the remaining generated-1 span first_token_s..finish_s
+    rates = [(r.generated - 1) / max(r.finish_s - r.first_token_s, 1e-12)
+             for r in served
+             if r.first_token_s is not None
+             and getattr(r, "generated", 0) > 1]
     return ServingReport(
         pattern=pattern, backend=backend,
         n_requests=len(served), n_rejected=len(rejected),
@@ -88,7 +104,13 @@ def summarize(requests: List, *, pattern: str = "", backend: str = "",
         ttft_p50_s=percentile(ttfts, 50), ttft_p99_s=percentile(ttfts, 99),
         latency_p50_s=percentile(lats, 50),
         latency_p99_s=percentile(lats, 99),
+        decode_tok_s_p50=percentile(rates, 50),
+        decode_tok_s_p99=percentile(rates, 99),
         n_preempted=sum(getattr(r, "preempted", 0) for r in requests),
+        spec_rounds=int(stats.get("spec_rounds", 0)),
+        spec_drafted=int(stats.get("spec_drafted", 0)),
+        spec_accepted=int(stats.get("spec_accepted", 0)),
+        spec_acceptance_rate=float(stats.get("spec_acceptance_rate", 0.0)),
         peak_active=int(stats.get("peak_active", 0)),
         peak_kv_pages=int(stats.get("peak_kv_pages", 0)),
         kv_pages_spilled=int(stats.get("kv_pages_spilled", 0)),

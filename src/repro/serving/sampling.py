@@ -1,4 +1,13 @@
-"""Token sampling (shared by every serving backend)."""
+"""Token sampling (shared by every serving backend).
+
+`filter_logits` is the single source of truth for the sampling
+distribution: temperature scaling, then top-k, then nucleus (top-p)
+filtering, each expressed as masking logits to -inf. `sample()` draws
+from it; the speculative-decoding rejection sampler
+(`repro.specdec.sampler`) consumes the same filtered logits so its
+"target distribution" is exactly what autoregressive sampling would
+have drawn from — the losslessness contract.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -6,23 +15,45 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+NEG_INF = -1e30
+
 
 @dataclasses.dataclass(frozen=True)
 class SamplerConfig:
     temperature: float = 0.0        # 0 => greedy
     top_k: int = 0                  # 0 => full softmax
+    top_p: float = 1.0              # 1 => no nucleus filtering
     seed: int = 0
+
+
+def filter_logits(logits, cfg: SamplerConfig, real_vocab: int):
+    """logits: (..., PV) -> (..., real_vocab) with temperature applied and
+    tokens outside the top-k / nucleus set masked to -inf. Only meaningful
+    for temperature > 0 (greedy decoding never samples)."""
+    lv = logits[..., :real_vocab].astype(jnp.float32)
+    if cfg.temperature > 0.0:
+        lv = lv / cfg.temperature
+    if cfg.top_k and cfg.top_k < real_vocab:
+        vals = jax.lax.top_k(lv, cfg.top_k)[0]
+        thresh = vals[..., -1:]
+        lv = jnp.where(lv >= thresh, lv, NEG_INF)
+    if 0.0 < cfg.top_p < 1.0:
+        # nucleus: keep the smallest prefix of the descending-prob order
+        # whose mass reaches top_p (the head token always survives)
+        srt = jnp.sort(lv, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(srt, axis=-1)
+        csum = jnp.cumsum(probs, axis=-1)
+        keep = (csum - probs) < cfg.top_p      # mass *before* this token
+        # threshold = smallest kept logit; everything below is cut
+        thresh = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1,
+                         keepdims=True)
+        lv = jnp.where(lv >= thresh, lv, NEG_INF)
+    return lv
 
 
 def sample(logits, cfg: SamplerConfig, key, real_vocab: int):
     """logits: (B, PV) -> (B,) int32."""
-    lv = logits[:, :real_vocab]
     if cfg.temperature <= 0.0:
-        return jnp.argmax(lv, axis=-1).astype(jnp.int32)
-    lv = lv / cfg.temperature
-    if cfg.top_k:
-        vals, idx = jax.lax.top_k(lv, cfg.top_k)
-        choice = jax.random.categorical(key, vals)
-        return jnp.take_along_axis(idx, choice[:, None], 1)[:, 0] \
-            .astype(jnp.int32)
-    return jax.random.categorical(key, lv).astype(jnp.int32)
+        return jnp.argmax(logits[:, :real_vocab], axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, filter_logits(logits, cfg, real_vocab)).astype(jnp.int32)

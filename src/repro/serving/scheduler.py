@@ -146,6 +146,12 @@ class ContinuousBatchingScheduler:
             attach = getattr(backend, "attach_page_pool", None)
             if attach:
                 attach(self.mgr.pool)
+        # tokens a live request can commit in ONE decode round: 1, or up
+        # to k+1 when the backend decodes speculatively (DESIGN.md §11) —
+        # paged growth must reserve the whole round, or admission reads
+        # stale occupancy and admits into guaranteed preemption churn
+        self._round_tokens = 1 + getattr(getattr(backend, "spec", None),
+                                         "k", 0)
         # preemption events are counted on the Request records themselves
         # (summarize sums Request.preempted — single source of truth)
         self.stats: Dict[str, float] = {
@@ -218,15 +224,19 @@ class ContinuousBatchingScheduler:
     def _grow_active(self, active: Dict[int, Request],
                      order: List[int], suspended: Deque[Request]) -> None:
         """Before a decode step every live request needs room for one more
-        token. On a dry pool, preempt latest-admitted victims (vLLM-style)
-        until the extension fits; a request that cannot even self-extend
-        after evicting everyone else suspends itself (can't happen while
+        round of tokens (1, or a whole speculative commit). On a dry
+        pool, preempt latest-admitted victims (vLLM-style) until the
+        extension fits; a request that cannot even self-extend after
+        evicting everyone else suspends itself (can't happen while
         _oversized() gates admission, kept as a defensive terminal)."""
         for slot in list(sorted(active, key=lambda s: order.index(s))):
             r = active.get(slot)
             if r is None:
                 continue
-            while not self.mgr.extend(r.rid, r.kv_tokens_now + 1):
+            grow_to = r.kv_tokens_now + min(self._round_tokens,
+                                            max(r.max_new_tokens
+                                                - r.generated, 1))
+            while not self.mgr.extend(r.rid, grow_to):
                 victims = [s for s in sorted(active,
                                              key=lambda s: order.index(s),
                                              reverse=True) if s != slot]
@@ -370,15 +380,22 @@ class ContinuousBatchingScheduler:
                     continue          # everyone preempted (defensive)
             emitted = self.backend.decode_active(sorted(active))
             t = self.backend.now()
-            for slot, tok in emitted.items():
+            for slot, toks in emitted.items():
                 r = active.get(slot)
                 if r is None:         # preempted out of this step
                     continue
-                r.generated += 1
-                if tok is not None:
-                    r.output.append(tok)
-                if r.generated >= r.max_new_tokens:
-                    finish(r, slot, t)
+                # speculative backends emit several committed tokens per
+                # round (DESIGN.md §11); tokens past max_new are dropped
+                # (the backend over-decodes padding, never user output)
+                if not isinstance(toks, (list, tuple)):
+                    toks = [toks]
+                for tok in toks:
+                    r.generated += 1
+                    if tok is not None:
+                        r.output.append(tok)
+                    if r.generated >= r.max_new_tokens:
+                        finish(r, slot, t)
+                        break
 
             # continuous batching: refill freed slots mid-flight
             if self.backend.can_join_running and active:
@@ -409,4 +426,7 @@ class ContinuousBatchingScheduler:
             self.stats["kv_pages_spilled"] = pool.spilled_pages
             self.stats["kv_pages_fetched"] = pool.fetched_pages
             self.stats["kv_migrated_bytes"] = pool.migrated_bytes
+        spec = getattr(self.backend, "spec_stats", None)
+        if spec:                      # drafted/accepted counters -> report
+            self.stats.update(spec)
         return done + shed

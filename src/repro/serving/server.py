@@ -66,13 +66,14 @@ class LimeServer:
     def __init__(self, cfg: ModelConfig, params, *,
                  engine: Optional[InterleavedEngine] = None,
                  max_len: int = 512, sampler: SamplerConfig = SamplerConfig(),
-                 pattern: str = "sporadic"):
+                 pattern: str = "sporadic", spec=None):
         self.cfg = cfg
         self.params = params
         self.engine = engine
         self.max_len = max_len
         self.sampler = sampler
         self.pattern = pattern
+        self.spec = spec              # SpecConfig -> speculative decoding
         self.queue = RequestQueue()
         self._backend: Optional[EngineBackend] = None
 
@@ -91,7 +92,8 @@ class LimeServer:
                                           engine=self.engine,
                                           n_slots=self.slots,
                                           max_len=self.max_len,
-                                          sampler=self.sampler)
+                                          sampler=self.sampler,
+                                          spec=self.spec)
         return self._backend
 
     def serve_all(self) -> List[Request]:

@@ -1,0 +1,22 @@
+"""Lossless speculative decoding (DESIGN.md §11).
+
+Draft cheap, verify exact: a draft provider proposes k tokens, one
+multi-token pass of the target model scores all of them (one pipeline
+round — one weight-stream — in the interleaved engine), and an
+acceptance-rejection sampler commits a prefix whose distribution provably
+equals autoregressive sampling from the target. The rejected suffix rolls
+back by resetting the decode position (dense caches) or truncating block
+tables (paged KV).
+
+  draft.py       pluggable proposers: n-gram/prompt-lookup self-draft
+                 (no extra weights), small-model draft (any registered
+                 config)
+  sampler.py     exact greedy + stochastic acceptance-rejection
+  controller.py  SpecConfig + the per-slot propose/verify/commit loop
+"""
+from repro.specdec.controller import (SpecConfig,  # noqa: F401
+                                      SpecDecodeController, SpecStats)
+from repro.specdec.draft import (NgramDraft, SmallModelDraft,  # noqa: F401
+                                 make_draft_provider)
+from repro.specdec.sampler import (greedy_verify,  # noqa: F401
+                                   rejection_verify, target_probs)

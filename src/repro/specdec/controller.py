@@ -1,0 +1,116 @@
+"""SpecDecodeController: the propose → verify → commit/rollback loop
+(DESIGN.md §11).
+
+The controller owns everything host-side about a speculative round for a
+batch of slots: per-slot draft providers, the acceptance-rejection walk
+over the target's multi-position logits, and the drafted/accepted
+counters the serving metrics report. It never touches device state — the
+backend runs the multi-token verify pass (engine.verify_requests,
+model.verify_step, or PagedDecodeCache.verify) and applies the commit the
+controller returns (pos rollback / block-table truncation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.sampling import SamplerConfig
+from repro.specdec.draft import make_draft_provider
+from repro.specdec.sampler import (greedy_verify, rejection_verify,
+                                   target_probs)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Knobs for speculative decoding, shared by both backends.
+
+    k                 drafted tokens per round (verify scores k+1)
+    draft             "ngram" (prompt-lookup self-draft, no weights) or
+                      "model" (small-model draft from a registered config)
+    max_ngram         longest tail n-gram the lookup draft matches
+    draft_arch        registry arch for draft="model" (smoke-reduced)
+    draft_temperature sampling temperature of the model draft (0 = greedy
+                      point-mass proposals)
+    acceptance        per-draft-token acceptance probability of the
+                      SimBackend's acceptance-rate model (the simulator
+                      has no real tokens to verify)
+    seed              host-side rng (rejection sampling + sim model)
+    """
+    k: int = 4
+    draft: str = "ngram"
+    max_ngram: int = 3
+    draft_arch: Optional[str] = None
+    draft_temperature: float = 0.0
+    acceptance: float = 0.8
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SpecStats:
+    rounds: int = 0
+    drafted: int = 0
+    accepted: int = 0          # drafted tokens that survived verification
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / self.drafted if self.drafted else 0.0
+
+    def to_dict(self) -> Dict[str, float]:
+        return {"spec_rounds": self.rounds, "spec_drafted": self.drafted,
+                "spec_accepted": self.accepted,
+                "spec_acceptance_rate": self.acceptance_rate}
+
+
+class SpecDecodeController:
+    """Per-slot drafting + lossless acceptance for one serving batch."""
+
+    def __init__(self, spec: SpecConfig, sampler: SamplerConfig,
+                 target_cfg, n_slots: int):
+        self.spec = spec
+        self.sampler = sampler
+        self.cfg = target_cfg
+        self.drafts = [make_draft_provider(spec, target_cfg)
+                       for _ in range(n_slots)]
+        self._rng = np.random.default_rng(spec.seed)
+        self.stats = SpecStats()
+
+    # -- sequence lifecycle ------------------------------------------------------
+    def begin(self, slot: int, tokens) -> None:
+        """Start a sequence on `slot`: prompt + the first sampled token."""
+        self.drafts[slot].reset(tokens)
+
+    def observe(self, slot: int, tokens) -> None:
+        """Feed the round's committed tokens back to the draft."""
+        self.drafts[slot].observe(tokens)
+
+    # -- one round ---------------------------------------------------------------
+    def propose(self, slot: int,
+                k: Optional[int] = None) -> Tuple[np.ndarray,
+                                                  Optional[np.ndarray]]:
+        """k: round cap from the backend (near the cache end it shrinks
+        below spec.k — drafting past it would be discarded work)."""
+        return self.drafts[slot].propose(self.spec.k if k is None else k)
+
+    def verify(self, logits: np.ndarray, draft: np.ndarray,
+               draft_probs: Optional[np.ndarray] = None) -> List[int]:
+        """logits: (k+1, PV) target logits for one slot; returns the
+        committed tokens (1..k+1). Greedy for temperature=0, stochastic
+        rejection sampling otherwise — both exactly the serving sampler's
+        distribution (sampler.py). Counters are NOT updated here — the
+        backend may truncate the result (lockstep commit); it reports
+        what was actually committed via note_round()."""
+        if self.sampler.temperature <= 0.0:
+            return greedy_verify(logits, draft, self.cfg.vocab_size)
+        p = target_probs(logits, self.sampler, self.cfg.vocab_size)
+        return rejection_verify(self._rng, p, draft, draft_probs)
+
+    def note_round(self, drafted: int, accepted_committed: int) -> None:
+        """Per-slot round accounting AFTER the commit: `accepted_committed`
+        counts drafted tokens that both survived verification and made it
+        into the committed prefix (lockstep truncation drops the rest —
+        they are re-drafted and must not be counted twice)."""
+        self.stats.rounds += 1
+        self.stats.drafted += drafted
+        self.stats.accepted += accepted_committed

@@ -1,0 +1,151 @@
+"""Draft providers for speculative decoding (DESIGN.md §11).
+
+A draft provider is per-sequence host-side state with three hooks:
+
+  reset(tokens)    start a sequence (prompt + first sampled token)
+  observe(tokens)  tokens the verifier actually committed this round
+  propose(k)       -> (tokens (k,) int32, probs (k, V) float or None)
+                   probs is the proposal distribution q for the
+                   stochastic rejection sampler; None declares a
+                   point-mass draft (q(token) = 1)
+
+Correctness never depends on the draft: any proposal stream is verified
+losslessly, a bad draft only costs acceptance rate. Two built-ins:
+
+  NgramDraft      prompt-lookup self-draft [Saxena'23]: match the longest
+                  recent n-gram against earlier context and propose its
+                  historical continuation. Zero extra weights, zero extra
+                  FLOPs — the draft LIME wants on edge devices, where the
+                  whole point is that weight-streaming, not compute,
+                  bounds decode.
+  SmallModelDraft autoregressive draft from any registered config (smoke-
+                  reduced by default): its cache tracks the committed
+                  history (snapshot-and-advance, so rejected proposals
+                  never pollute it).
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+class NgramDraft:
+    """Prompt-lookup: propose the continuation of the most recent earlier
+    occurrence of the longest matching tail n-gram."""
+
+    def __init__(self, max_ngram: int = 3):
+        assert max_ngram >= 1
+        self.max_ngram = max_ngram
+        self._hist: List[int] = []
+
+    def reset(self, tokens) -> None:
+        self._hist = [int(t) for t in tokens]
+
+    def observe(self, tokens) -> None:
+        self._hist.extend(int(t) for t in tokens)
+
+    def propose(self, k: int) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        h = self._hist
+        for n in range(min(self.max_ngram, max(len(h) - 1, 0)), 0, -1):
+            pat = h[-n:]
+            # most recent earlier occurrence wins (locality: repeated
+            # spans tend to continue the same way they did last time)
+            for i in range(len(h) - n - 1, -1, -1):
+                if h[i:i + n] == pat:
+                    cont = h[i + n:i + n + k]
+                    if cont:
+                        out = cont + [cont[-1]] * (k - len(cont))
+                        return np.asarray(out[:k], np.int32), None
+        last = h[-1] if h else 0
+        return np.full(k, last, np.int32), None
+
+
+class SmallModelDraft:
+    """Greedy (or sampled) k-token draft from a small model's own cache.
+
+    The cache only ever contains COMMITTED tokens: propose() decodes from
+    a snapshot (jax pytrees are immutable, holding the old reference is
+    the snapshot), observe() advances the real cache by teacher-forcing
+    the committed tokens through decode_step."""
+
+    def __init__(self, cfg, params, *, max_len: int = 512,
+                 temperature: float = 0.0, seed: int = 0):
+        import jax
+
+        from repro.models import model as M
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.temperature = temperature
+        self._rng = np.random.default_rng(seed)
+        self._M = M
+        self._decode = jax.jit(functools.partial(M.decode_step, cfg))
+        self._prefill = jax.jit(functools.partial(M.prefill, cfg))
+        self._cache = None
+        self._pending: Optional[int] = None   # last token not yet in cache
+
+    def reset(self, tokens) -> None:
+        import jax.numpy as jnp
+        toks = [int(t) for t in tokens]
+        assert toks, "reset needs at least one token"
+        cache = self._M.init_cache(self.cfg, 1, self.max_len)
+        if len(toks) > 1:
+            _, cache = self._prefill(self.params, jnp.asarray(
+                [toks[:-1]], jnp.int32), cache)
+        self._cache = cache
+        self._pending = toks[-1]
+
+    def observe(self, tokens) -> None:
+        import jax.numpy as jnp
+        for t in tokens:
+            _, self._cache = self._decode(
+                self.params, self._cache,
+                jnp.asarray([[self._pending]], jnp.int32))
+            self._pending = int(t)
+
+    def propose(self, k: int) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        import jax.numpy as jnp
+        cache = self._cache                    # snapshot
+        cur = self._pending
+        V = self.cfg.vocab_size
+        toks = np.zeros(k, np.int32)
+        probs = np.zeros((k, V), np.float64) if self.temperature > 0 \
+            else None
+        for i in range(k):
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray([[cur]], jnp.int32))
+            lv = np.asarray(logits, np.float64).reshape(-1)[:V]
+            if self.temperature > 0:
+                lv = lv / self.temperature
+                lv -= lv.max()
+                q = np.exp(lv)
+                q /= q.sum()
+                cur = int(self._rng.choice(V, p=q))
+                probs[i] = q
+            else:
+                cur = int(lv.argmax())
+            toks[i] = cur
+        return toks, probs
+
+
+def make_draft_provider(spec, target_cfg):
+    """Build one provider from a SpecConfig (controller.py)."""
+    if spec.draft == "ngram":
+        return NgramDraft(max_ngram=spec.max_ngram)
+    if spec.draft == "model":
+        import jax
+
+        from repro.configs.registry import get_smoke_config
+        from repro.models import model as M
+        cfg = get_smoke_config(spec.draft_arch or "gemma3-1b")
+        if cfg.vocab_size != target_cfg.vocab_size:
+            import dataclasses
+            cfg = dataclasses.replace(cfg,
+                                      vocab_size=target_cfg.vocab_size)
+        params = M.init_params(cfg, jax.random.PRNGKey(spec.seed))
+        return SmallModelDraft(cfg, params,
+                               temperature=spec.draft_temperature,
+                               seed=spec.seed)
+    raise KeyError(f"unknown draft provider {spec.draft!r}")

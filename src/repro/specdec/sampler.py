@@ -1,0 +1,99 @@
+"""Lossless acceptance-rejection verification (DESIGN.md §11).
+
+Given the target model's logits for q_len = k+1 positions (position i is
+the distribution of the token that drafted token i claims to be; the last
+row is the bonus position past the draft), commit a token sequence whose
+distribution is EXACTLY what autoregressive sampling would have produced:
+
+  greedy      temperature = 0: accept drafted token i iff it is the
+              argmax; the first mismatch commits the argmax instead
+              (that is the token sequential decode would have emitted) and
+              stops. Full acceptance commits the bonus argmax. Trivially
+              lossless — every committed token is the sequential argmax.
+  stochastic  temperature > 0: classic rejection sampling [Leviathan'23,
+              Chen'23]. Draft token x ~ q is accepted with probability
+              min(1, p(x)/q(x)); on rejection the committed token is drawn
+              from the residual max(p - q, 0) renormalized, and the round
+              stops. The committed marginal is exactly p at every
+              position, for ANY proposal q — including the point-mass q of
+              deterministic drafts (n-gram lookup), where acceptance
+              degenerates to probability p(x̂).
+
+The target distribution p is `target_probs`: softmax over the SAME
+filtered logits `serving.sampling.sample()` draws from (temperature /
+top-k / top-p), so "lossless" means lossless w.r.t. the serving sampler,
+not just the raw softmax. Everything here is host-side numpy — the
+accept/reject walk is a few scalar comparisons per round and sits between
+device steps, where python is free.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from repro.serving.sampling import SamplerConfig, filter_logits
+
+_EPS = 1e-12
+
+
+def target_probs(logits, cfg: SamplerConfig, real_vocab: int) -> np.ndarray:
+    """logits: (..., PV) array-like -> (..., real_vocab) float64 rows
+    summing to 1: the serving sampler's exact token distribution."""
+    import jax.numpy as jnp
+    lv = np.asarray(filter_logits(jnp.asarray(logits), cfg, real_vocab),
+                    np.float64)
+    lv -= lv.max(axis=-1, keepdims=True)
+    p = np.exp(lv)
+    return p / p.sum(axis=-1, keepdims=True)
+
+
+def greedy_verify(logits: np.ndarray, draft: np.ndarray,
+                  real_vocab: int) -> List[int]:
+    """logits: (k+1, PV); draft: (k,) proposed tokens. Returns the
+    committed tokens (1..k+1 of them): the accepted prefix, then either
+    the correcting argmax at the first mismatch or the bonus argmax after
+    full acceptance."""
+    am = np.asarray(logits)[:, :real_vocab].argmax(axis=-1)
+    out: List[int] = []
+    for i, d in enumerate(np.asarray(draft)):
+        if int(am[i]) != int(d):
+            out.append(int(am[i]))
+            return out
+        out.append(int(d))
+    out.append(int(am[len(draft)]))
+    return out
+
+
+def rejection_verify(rng: np.random.Generator, p: np.ndarray,
+                     draft: np.ndarray,
+                     q: Optional[np.ndarray] = None) -> List[int]:
+    """p: (k+1, V) target probabilities (target_probs output); draft: (k,)
+    proposed tokens; q: (k, V) proposal probabilities, or None for a
+    point-mass draft (q(draft[i]) = 1). Returns committed tokens
+    (1..k+1): accepted prefix + residual sample at the first rejection,
+    or + bonus sample after full acceptance."""
+    p = np.asarray(p, np.float64)
+    draft = np.asarray(draft)
+    out: List[int] = []
+    for i, d in enumerate(draft):
+        d = int(d)
+        pi = p[i]
+        qi_d = 1.0 if q is None else float(q[i][d])
+        if rng.random() < min(1.0, pi[d] / max(qi_d, _EPS)):
+            out.append(d)
+            continue
+        # rejected: sample from the residual max(p - q, 0), renormalized —
+        # the distribution that makes accepted + rejected mix back to p
+        if q is None:
+            resid = pi.copy()
+            resid[d] = 0.0
+        else:
+            resid = np.maximum(pi - np.asarray(q[i], np.float64), 0.0)
+        z = resid.sum()
+        if z <= _EPS:          # p ≡ q at this position: acceptance was
+            resid, z = pi, pi.sum()   # certain; defensive fallback
+        out.append(int(rng.choice(len(pi), p=resid / z)))
+        return out
+    out.append(int(rng.choice(p.shape[-1], p=p[len(draft)])))
+    return out

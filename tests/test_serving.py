@@ -349,3 +349,183 @@ def test_engine_backend_paged_decode_serves_tokens():
     assert all(len(r.output) == r.generated for r in done)
     assert be._paged_cache is not None
     assert be._paged_cache.pages_in_use > 0   # epoch pools live until next
+
+
+# ----------------------------------------------------------------------------
+# sampling: nucleus (top_p) + top_k filtering math
+# ----------------------------------------------------------------------------
+def test_filter_logits_top_p_keeps_minimal_nucleus():
+    import jax.numpy as jnp
+
+    from repro.serving.sampling import NEG_INF, SamplerConfig, filter_logits
+
+    # probs (descending): 0.4, 0.3, 0.2, 0.1 -> top_p=0.6 keeps the first
+    # two (mass before token 0 is 0.0 < 0.6, before token 1 is 0.4 < 0.6,
+    # before token 2 is 0.7 >= 0.6)
+    p = np.array([0.4, 0.3, 0.2, 0.1])
+    logits = jnp.asarray(np.log(p))[None, :]
+    out = np.asarray(filter_logits(logits,
+                                   SamplerConfig(temperature=1.0, top_p=0.6),
+                                   4))[0]
+    kept = out > NEG_INF / 2
+    assert kept.tolist() == [True, True, False, False]
+    # renormalized distribution over the nucleus
+    probs = np.exp(out - out.max())
+    probs /= probs.sum()
+    assert np.allclose(probs[:2], [0.4 / 0.7, 0.3 / 0.7], atol=1e-6)
+
+
+def test_filter_logits_top_p_always_keeps_head():
+    import jax.numpy as jnp
+
+    from repro.serving.sampling import NEG_INF, SamplerConfig, filter_logits
+
+    p = np.array([0.99, 0.005, 0.005])
+    out = np.asarray(filter_logits(jnp.asarray(np.log(p))[None, :],
+                                   SamplerConfig(temperature=1.0,
+                                                 top_p=0.01), 3))[0]
+    kept = out > NEG_INF / 2
+    assert kept.tolist() == [True, False, False]
+
+
+def test_filter_logits_top_k_then_top_p_compose():
+    import jax.numpy as jnp
+
+    from repro.serving.sampling import NEG_INF, SamplerConfig, filter_logits
+
+    lv = jnp.asarray([[5.0, 4.0, 3.0, 2.0, 1.0]])
+    out = np.asarray(filter_logits(
+        lv, SamplerConfig(temperature=1.0, top_k=3, top_p=0.99), 5))[0]
+    kept = (out > NEG_INF / 2).tolist()
+    assert kept == [True, True, True, False, False]
+    # temperature rescales surviving logits
+    out2 = np.asarray(filter_logits(
+        lv, SamplerConfig(temperature=2.0), 5))[0]
+    assert np.allclose(out2, np.asarray(lv)[0] / 2.0)
+
+
+def test_sample_top_p_respects_nucleus():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.serving.sampling import SamplerConfig, sample
+
+    p = np.array([0.5, 0.3, 0.1, 0.1])
+    logits = jnp.tile(jnp.asarray(np.log(p)), (64, 1))
+    toks = np.asarray(sample(logits,
+                             SamplerConfig(temperature=1.0, top_p=0.7,
+                                           seed=0),
+                             jax.random.PRNGKey(0), 4))
+    assert set(toks.tolist()) <= {0, 1}   # outside the nucleus never drawn
+
+
+# ----------------------------------------------------------------------------
+# server front door: RequestQueue + LimeServer end-to-end
+# ----------------------------------------------------------------------------
+def test_request_queue_fifo_rids_and_drain():
+    from repro.serving import RequestQueue
+
+    q = RequestQueue()
+    a = q.submit([1, 2, 3], max_new_tokens=4)
+    b = q.submit([4], max_new_tokens=2, now=1.5)
+    c = q.submit([5, 6], max_new_tokens=1)
+    assert (a.rid, b.rid, c.rid) == (0, 1, 2)
+    assert len(q) == 3
+    assert b.arrival_s == 1.5 and b.prompt_len == 1
+    first = q.pop_up_to(2)
+    assert [r.rid for r in first] == [0, 1]
+    assert len(q) == 1
+    rest = q.drain()
+    assert [r.rid for r in rest] == [2]
+    assert len(q) == 0 and q.drain() == []
+    # rid assignment continues after a drain
+    d = q.submit([7], max_new_tokens=1)
+    assert d.rid == 3
+
+
+def test_request_queue_pop_up_to_zero_and_overshoot():
+    from repro.serving import RequestQueue
+
+    q = RequestQueue()
+    q.submit([1], max_new_tokens=1)
+    assert q.pop_up_to(0) == []
+    assert len(q.pop_up_to(10)) == 1
+
+
+def test_lime_server_end_to_end_over_engine_backend():
+    """LimeServer smoke: queue -> scheduler -> EngineBackend fallback,
+    real token ids, latency bookkeeping, repeat serve_all() calls."""
+    import jax
+
+    from repro.models import model as M
+    from repro.serving import LimeServer
+
+    cfg = get_smoke_config("gemma3-1b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    srv = LimeServer(cfg, params, max_len=32, pattern="bursty")
+    assert srv.serve_all() == []          # empty queue: no work
+    r0 = srv.queue.submit(np.array([3, 1, 4], np.int32), max_new_tokens=5)
+    r1 = srv.queue.submit(np.array([1, 5], np.int32), max_new_tokens=3)
+    done = srv.serve_all()
+    assert {r.rid for r in done} == {r0.rid, r1.rid}
+    assert len(srv.queue) == 0
+    by = {r.rid: r for r in done}
+    assert by[r0.rid].generated == 5 and len(by[r0.rid].output) == 5
+    assert by[r1.rid].generated == 3 and len(by[r1.rid].output) == 3
+    assert all(0 <= t < cfg.vocab_size
+               for r in done for t in r.output)
+    assert all(r.done and r.finish_s >= r.first_token_s >= r.arrival_s
+               for r in done)
+    # second batch reuses the cached backend; arrivals re-base onto its
+    # clock so queueing latency is not inflated by the first batch
+    r2 = srv.queue.submit(np.array([2, 7, 1, 8], np.int32),
+                          max_new_tokens=2)
+    done2 = srv.serve_all()
+    assert len(done2) == 1 and done2[0].rid == r2.rid
+    assert done2[0].done and done2[0].ttft_s < 60.0
+
+
+def test_lime_server_sporadic_single_slot():
+    import jax
+
+    from repro.models import model as M
+    from repro.serving import LimeServer
+
+    cfg = get_smoke_config("gemma3-1b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    srv = LimeServer(cfg, params, max_len=32, pattern="sporadic")
+    assert srv.slots == 1
+    srv.queue.submit(np.array([2, 3], np.int32), max_new_tokens=2)
+    srv.queue.submit(np.array([4], np.int32), max_new_tokens=2)
+    done = srv.serve_all()
+    served = sorted((r for r in done if not r.rejected),
+                    key=lambda r: r.first_token_s)
+    assert len(served) == 2
+    # one slot: strictly serialized epochs
+    assert served[1].first_token_s >= served[0].finish_s - 1e-9
+
+
+# ----------------------------------------------------------------------------
+# metrics: per-request decode pace percentiles
+# ----------------------------------------------------------------------------
+def test_summarize_decode_tok_s_percentiles():
+    reqs = []
+    # 11 tokens in 1s after TTFT -> 10 tok/s; 5 tokens in 2s -> 2 tok/s
+    for rid, (t_first, t_fin, gen) in enumerate(
+            ((1.0, 2.0, 11), (1.0, 3.0, 5))):
+        r = Request(rid, None, max_new_tokens=gen, prompt_len=4,
+                    arrival_s=0.0)
+        r.generated = gen
+        r.first_token_s = t_first
+        r.finish_s = t_fin
+        r.done = True
+        reqs.append(r)
+    rep = summarize(reqs, pattern="x", backend="y")
+    assert rep.decode_tok_s_p50 == pytest.approx(2.0)
+    assert rep.decode_tok_s_p99 == pytest.approx(10.0)
+    # single-token requests contribute no decode-pace sample
+    one = Request(9, None, max_new_tokens=1, prompt_len=1)
+    one.generated, one.first_token_s, one.finish_s, one.done = \
+        1, 0.5, 0.5, True
+    rep2 = summarize([one], pattern="x", backend="y")
+    assert np.isnan(rep2.decode_tok_s_p50)
