@@ -1,0 +1,218 @@
+"""Radix prefix cache + chunked prefill vs cold monolithic prefill
+(EXPERIMENTS.md §PrefixCache).
+
+Two headline claims, exit-code enforced on the paper's default 4-device
+heterogeneous fleet (E3) over the discrete-event substrate:
+
+  prefix   under `shared_prefix` traffic (N templates x many users) the
+           radix cache reaches hit-rate >= 0.5 and cuts TTFT p50 by >= 2x
+           vs the cold baseline — cached spans skip their offload rounds
+           entirely (DESIGN.md §12)
+  chunked  under `bursty` traffic with long cold prompts, chunked prefill
+           (prompts drain chunk-by-chunk through mixed rounds alongside
+           live decode streams) improves per-request decode tok/s p99 vs
+           monolithic prefill, whose joiner passes stall every decoder
+
+Every run also audits page accounting: when the scheduler finishes, the
+allocator must hold exactly the live radix-tree pages (zero refcount
+leaks), and with the cache off it must hold nothing.
+
+  python benchmarks/bench_prefix.py
+  python benchmarks/bench_prefix.py --scenario prefix --n-requests 48
+  python benchmarks/bench_prefix.py --out benchmarks/baselines/prefix_sim.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+
+def build_backend(args, slots: int, prompt: int):
+    from repro.configs.registry import get_config
+    from repro.core.cost_model import CostEnv, Workload
+    from repro.core.profiles import env_E1, env_E2, env_E3, mbps
+    from repro.serving import SimBackend
+
+    fleets = {"E1": env_E1, "E2": env_E2, "E3": env_E3}
+    cfg = get_config(args.arch)
+    w = Workload(cfg, mb=1, ctx=prompt, n_micro=slots)
+    env = CostEnv(fleets[args.fleet](), mbps(args.bw_mbps), w)
+    return SimBackend(env, n_slots=slots, prompt_tokens=prompt)
+
+
+def audit_pages(sched) -> dict:
+    """Leak audit: every request released its table, so the allocator
+    holds exactly the live radix pages (post-warmup baseline minus the
+    tree's holdings — see the acceptance invariant in ISSUE/DESIGN §12)."""
+    if sched.mgr is None:
+        return {"audited": False}
+    pool = sched.mgr.pool
+    tree_pages = sched.prefix.n_pages if sched.prefix is not None else 0
+    ok = pool.alloc.used_pages == tree_pages
+    return {"audited": True, "leak_free": ok,
+            "used_pages": pool.alloc.used_pages,
+            "radix_pages": tree_pages,
+            "free_pages": pool.alloc.free_pages}
+
+
+def run_shared_prefix(args, prefix_on: bool) -> dict:
+    from repro.serving import (ContinuousBatchingScheduler, SchedulerConfig,
+                               cli_arrivals, requests_from_arrivals,
+                               summarize)
+
+    arrivals = cli_arrivals("shared_prefix", args.n_requests, seed=args.seed,
+                            prompt_len=args.prompt_len,
+                            max_new_tokens=args.max_new,
+                            rate_rps=args.rate_rps,
+                            n_templates=args.n_templates,
+                            prefix_len=args.prefix_len)
+    backend = build_backend(args, args.slots, args.prompt_len)
+    sched = ContinuousBatchingScheduler(backend, SchedulerConfig(
+        kv_policy="paged", page_size=args.page_size,
+        prefix_cache=prefix_on))
+    served = sched.serve(requests_from_arrivals(arrivals))
+    rep = summarize(served, pattern="shared_prefix",
+                    backend=f"sim/{'prefix' if prefix_on else 'cold'}",
+                    stats=sched.stats)
+    out = rep.to_dict()
+    out["prefix_cache"] = prefix_on
+    out["page_audit"] = audit_pages(sched)
+    return out
+
+
+def run_chunked(args, chunk) -> dict:
+    from repro.serving import (ContinuousBatchingScheduler, SchedulerConfig,
+                               cli_arrivals, requests_from_arrivals,
+                               summarize)
+
+    arrivals = cli_arrivals("bursty", args.n_requests, seed=args.seed,
+                            prompt_len=(args.prompt_len // 2,
+                                        2 * args.prompt_len),
+                            max_new_tokens=args.max_new,
+                            gap_s=args.gap_s, burst_size=args.slots)
+    backend = build_backend(args, args.slots, args.prompt_len)
+    sched = ContinuousBatchingScheduler(backend, SchedulerConfig(
+        kv_policy="paged", page_size=args.page_size,
+        prefill_chunk_tokens=chunk))
+    served = sched.serve(requests_from_arrivals(arrivals))
+    rep = summarize(served, pattern="bursty",
+                    backend=f"sim/{'chunk' + str(chunk) if chunk else 'mono'}",
+                    stats=sched.stats)
+    out = rep.to_dict()
+    out["prefill_chunk_tokens"] = chunk
+    out["page_audit"] = audit_pages(sched)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scenario", choices=("prefix", "chunked", "all"),
+                    default="all")
+    ap.add_argument("--arch", default="llama2-13b")
+    ap.add_argument("--fleet", default="E3", choices=("E1", "E2", "E3"))
+    ap.add_argument("--bw-mbps", type=float, default=200.0)
+    ap.add_argument("--n-requests", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=512)
+    ap.add_argument("--prefix-len", type=int, default=448,
+                    help="shared template span within each prompt")
+    ap.add_argument("--n-templates", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--rate-rps", type=float, default=0.25)
+    ap.add_argument("--gap-s", type=float, default=6.0)
+    ap.add_argument("--page-size", type=int, default=64)
+    ap.add_argument("--chunk", type=int, default=128,
+                    help="prefill_chunk_tokens for the chunked scenario")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="also write JSON here")
+    args = ap.parse_args(argv)
+
+    results = []
+    comparison = {}
+    rc = 0
+    if args.scenario in ("prefix", "all"):
+        cold = run_shared_prefix(args, False)
+        warm = run_shared_prefix(args, True)
+        results += [cold, warm]
+        speedup = cold["ttft_p50_s"] / max(warm["ttft_p50_s"], 1e-12)
+        comparison["prefix"] = {
+            "hit_rate": warm["prefix_hit_rate"],
+            "prefill_tokens_saved": warm["prefill_tokens_saved"],
+            "ttft_p50_cold_s": cold["ttft_p50_s"],
+            "ttft_p50_prefix_s": warm["ttft_p50_s"],
+            "ttft_speedup": speedup,
+            "ttft_prefill_p50_cold_s": cold["ttft_prefill_p50_s"],
+            "ttft_prefill_p50_prefix_s": warm["ttft_prefill_p50_s"],
+        }
+        print(f"# shared_prefix: TTFT p50 {warm['ttft_p50_s']:.2f}s vs cold "
+              f"{cold['ttft_p50_s']:.2f}s ({speedup:.2f}x) at hit-rate "
+              f"{warm['prefix_hit_rate']:.2f}", file=sys.stderr)
+        if warm["prefix_hit_rate"] < 0.5:
+            print("# WARNING: hit-rate below 0.5 — shared_prefix traffic "
+                  "or matching broke", file=sys.stderr)
+            rc = 1
+        if speedup < 2.0:
+            print("# WARNING: prefix-cache TTFT p50 speedup below 2x",
+                  file=sys.stderr)
+            rc = 1
+        for r in (cold, warm):
+            if not r["page_audit"]["leak_free"]:
+                print(f"# WARNING: page leak: {r['page_audit']}",
+                      file=sys.stderr)
+                rc = 1
+    if args.scenario in ("chunked", "all"):
+        mono = run_chunked(args, None)
+        chunked = run_chunked(args, args.chunk)
+        results += [mono, chunked]
+        comparison["chunked"] = {
+            "decode_tok_s_p99_mono": mono["decode_tok_s_p99"],
+            "decode_tok_s_p99_chunked": chunked["decode_tok_s_p99"],
+            "ttft_p50_mono_s": mono["ttft_p50_s"],
+            "ttft_p50_chunked_s": chunked["ttft_p50_s"],
+        }
+        print(f"# bursty chunked: decode tok/s p99 "
+              f"{chunked['decode_tok_s_p99']:.3f} vs monolithic "
+              f"{mono['decode_tok_s_p99']:.3f}", file=sys.stderr)
+        if chunked["decode_tok_s_p99"] <= mono["decode_tok_s_p99"]:
+            print("# WARNING: chunked prefill did not improve decode "
+                  "tok/s p99 — mixed-round pricing broke", file=sys.stderr)
+            rc = 1
+        for r in (mono, chunked):
+            if not r["page_audit"]["leak_free"]:
+                print(f"# WARNING: page leak: {r['page_audit']}",
+                      file=sys.stderr)
+                rc = 1
+
+    payload = {"config": vars(args), "results": results,
+               "comparison": comparison}
+    text = json.dumps(payload, indent=2)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    return rc
+
+
+def run():
+    """benchmarks.run harness hook: fast sim-only smoke."""
+    class _Row:
+        def __init__(self, name, ms):
+            self.name, self.ms = name, ms
+
+        def csv(self):
+            return f"prefix,{self.name},{self.ms:.1f},ok"
+
+    rc = main(["--n-requests", "16", "--prompt-len", "256",
+               "--prefix-len", "192", "--max-new", "8"])
+    if rc:
+        raise SystemExit("bench_prefix smoke failed")
+    return [_Row("shared_prefix_and_chunked", 0.0)]
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -30,7 +30,8 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                 "..", "src"))
 
-PATTERN_CHOICES = ("sporadic", "bursty", "poisson", "trace", "all")
+PATTERN_CHOICES = ("sporadic", "bursty", "poisson", "trace",
+                   "shared_prefix", "multiturn", "all")
 
 
 def spec_config(args):
@@ -60,7 +61,7 @@ def build_sim_backend(args, slots: int):
                       spec=spec_config(args))
 
 
-def build_engine_backend(args, slots: int):
+def build_engine_backend(args, slots: int, max_prompt: int = 0):
     import jax
 
     from repro.configs.registry import get_smoke_config
@@ -74,6 +75,9 @@ def build_engine_backend(args, slots: int):
               f"{engine_arch} (smoke), not {args.arch}", file=sys.stderr)
     cfg = get_smoke_config(engine_arch)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
+    # size the per-slot cache off the stream's longest prompt — multiturn
+    # conversations outgrow the nominal --prompt-len
+    max_len = max(max_prompt, args.prompt_len) + args.max_new + 8
     engine = None
     n_dev = len(jax.devices())
     if n_dev >= 4 and n_dev % 4 == 0:   # make_mesh needs prod == n_dev
@@ -84,11 +88,14 @@ def build_engine_backend(args, slots: int):
         mesh = jax.make_mesh((4, n_dev // 4), ("data", "model"))
         plan = UniformPlan(4, 2, 0, 1)
         engine = InterleavedEngine(cfg, mesh, plan, n_mb=slots, mb=1,
-                                   max_len=args.prompt_len + args.max_new + 8)
+                                   max_len=max_len)
         params = M.init_params(cfg, jax.random.PRNGKey(0))
     return EngineBackend(cfg, params, engine=engine, n_slots=slots,
-                         max_len=args.prompt_len + args.max_new + 8,
-                         sampler=SamplerConfig(), spec=spec_config(args))
+                         max_len=max_len,
+                         sampler=SamplerConfig(), spec=spec_config(args),
+                         prefix_cache=(args.prefix_cache and engine is None),
+                         prefill_chunk_tokens=args.prefill_chunk or 0,
+                         page_size=args.page_size)
 
 
 def run_pattern(args, pattern: str) -> dict:
@@ -101,14 +108,26 @@ def run_pattern(args, pattern: str) -> dict:
                             prompt_len=args.prompt_len,
                             max_new_tokens=args.max_new, gap_s=args.gap_s,
                             burst_size=args.slots, rate_rps=args.rate_rps,
+                            n_templates=args.n_templates,
+                            prefix_len=args.prefix_len, turns=args.turns,
                             trace=args.trace)
 
     backend = build_sim_backend(args, slots) if args.backend == "sim" \
-        else build_engine_backend(args, slots)
+        else build_engine_backend(args, slots,
+                                  max(ev.prompt_len for ev in arrivals))
+    kv_policy = args.kv_policy
+    if args.prefix_cache and args.backend == "sim":
+        kv_policy = "paged"             # the radix tree lives in the pool
     sched = ContinuousBatchingScheduler(
-        backend, SchedulerConfig(kv_policy=args.kv_policy,
-                                 page_size=args.page_size))
-    served = sched.serve(requests_from_arrivals(arrivals))
+        backend, SchedulerConfig(
+            kv_policy=kv_policy, page_size=args.page_size,
+            prefix_cache=(args.prefix_cache and args.backend == "sim"),
+            prefill_chunk_tokens=args.prefill_chunk))
+    # template prompts materialize real ids: keep them inside the engine's
+    # (smoke) vocab so prefix keys equal what the model actually embeds
+    vocab = backend.cfg.vocab_size if args.backend == "engine" else 32768
+    served = sched.serve(requests_from_arrivals(arrivals, vocab_size=vocab,
+                                                seed=args.seed))
     report = summarize(served, pattern=pattern, backend=args.backend,
                        stats=sched.stats)
     return report.to_dict()
@@ -145,6 +164,20 @@ def main(argv=None) -> int:
                     help="admission accounting: worst-case reservation or "
                          "page-granular (bench_kvcache.py compares both)")
     ap.add_argument("--page-size", type=int, default=64)
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix cache (DESIGN.md §12): match prompt"
+                         " prefixes against cached KV pages, prefill only "
+                         "the uncached suffix (sim: scheduler-level over "
+                         "the paged pool; engine: real KV pages)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill: prompts drain this many tokens "
+                         "per mixed round alongside live decode streams")
+    ap.add_argument("--n-templates", type=int, default=4,
+                    help="shared_prefix: distinct prompt templates")
+    ap.add_argument("--prefix-len", type=int, default=256,
+                    help="shared_prefix: shared template span per prompt")
+    ap.add_argument("--turns", type=int, default=3,
+                    help="multiturn: conversation turns per session")
     ap.add_argument("--trace", default=None,
                     help="JSON arrival trace for --pattern trace")
     ap.add_argument("--out", default=None, help="also write JSON here")

@@ -863,6 +863,38 @@ class InterleavedEngine:
         toks = jnp.where(active[:, None], tokens.astype(jnp.int32), 0)
         return self.verify_step(state, toks)
 
+    def prefill_partial(self, state, tokens, *, chunk: int = 0):
+        """Partial-context prefill through the interleaved pipeline
+        (DESIGN.md §12): run `tokens` ((n_mb*mb, T) prompt positions
+        starting at the state's current pos — 0 for a cold prompt, the
+        cached span for a prefix hit) as ceil(T/chunk) multi-query rounds
+        of the verify step, each one pipeline traversal (one
+        weight-stream) scoring `chunk` positions. No separate prefill
+        program on replicated params is needed — the pipeline itself
+        builds the cache. Returns (last round's logits (n_mb*mb, q, PV),
+        state) with pos advanced by T; the final position's row seeds the
+        first sampled token."""
+        if self.cfg.family not in (Family.DENSE, Family.MOE):
+            raise NotImplementedError(
+                "partial-context prefill rides the multi-query verify "
+                "step (pure-KV families only)")
+        tokens = jnp.asarray(tokens, jnp.int32)
+        T = int(tokens.shape[1])
+        chunk = T if chunk <= 0 else min(chunk, T)
+        assert chunk < max(self.S_c, 2), (chunk, self.S_c)
+        logits = None
+        for off in range(0, T, chunk):
+            logits, state = self.verify_step(state,
+                                             tokens[:, off:off + chunk])
+        if self.paged:
+            # slot tables rebuilt at the prefilled span (the serving
+            # layer's page-granular occupancy view; release-then-extend
+            # so a later epoch's shorter prompt doesn't try to shrink)
+            pos = int(jax.device_get(state["glob"]["pos"]))
+            self._paged_pos = pos
+            self._paged_seed_slots(pos)
+        return logits, state
+
     def rollback(self, state, pos: int):
         """Reset the decode position to `pos` (commit an accepted prefix
         of a verify round, rejecting the suffix). Purely a pos reset:

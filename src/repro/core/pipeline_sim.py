@@ -149,10 +149,15 @@ class InterleavedPipelineSim:
 
     # -- one auto-regressive step ----------------------------------------------
     def _step(self, t0: float, ctx: int, bw: float, n_micro: int,
-              q_len: int = 1) -> Tuple[float, float, float]:
-        """Returns (t_end, load_stall, comm_time)."""
+              q_len: int = 1,
+              q_lens: Optional[List[int]] = None) -> Tuple[float, float, float]:
+        """Returns (t_end, load_stall, comm_time). `q_lens` gives each
+        micro-batch its own query count (a *mixed* round: decode streams at
+        q=1 riding the same weight-stream as a chunked-prefill stream at
+        q=chunk — DESIGN.md §12); `q_len` is the uniform shorthand."""
         D, S = self.D, self.n_seg
-        hop = self._hop_time(bw, q_len)
+        qs = list(q_lens) if q_lens is not None else [q_len] * n_micro
+        assert len(qs) == n_micro, (len(qs), n_micro)
         dev_free = [t0] * D
         stall = 0.0
         comm = 0.0
@@ -163,9 +168,10 @@ class InterleavedPipelineSim:
                 w_ready = self._load_done[i][s % S]
                 last_end = dev_free[i]
                 for m in range(n_micro):
+                    hop = self._hop_time(bw, qs[m])
                     start = max(ready[m], dev_free[i], w_ready)
                     stall += max(w_ready - max(ready[m], dev_free[i]), 0.0)
-                    end = start + self._comp_seg_mb(i, ctx, q_len)
+                    end = start + self._comp_seg_mb(i, ctx, qs[m])
                     dev_free[i] = end
                     ready[m] = end + hop
                     comm += hop
@@ -201,7 +207,8 @@ class InterleavedPipelineSim:
 
     def step_once(self, *, ctx: Optional[int] = None, n_micro: int = 1,
                   kv_tokens: Optional[int] = None,
-                  q_len: int = 1) -> StepTrace:
+                  q_len: int = 1,
+                  q_lens: Optional[List[int]] = None) -> StepTrace:
         """One autoregressive step at the current virtual clock.
 
         ctx: KV read span this step (default: prompt + steps taken, the
@@ -214,7 +221,10 @@ class InterleavedPipelineSim:
         positions scored this round (speculative verify, DESIGN.md §11) —
         compute and activation hops scale with q_len, weight streaming
         does not, which is exactly why the verify round amortizes the
-        per-round load bytes over every accepted token.
+        per-round load bytes over every accepted token. q_lens:
+        per-micro-batch query counts for mixed rounds (chunked prefill
+        riding alongside live decode streams, DESIGN.md §12); overrides
+        q_len when given.
         """
         tok = self._tok_count
         if ctx is None:
@@ -241,7 +251,7 @@ class InterleavedPipelineSim:
             eff = ctx if kv_tokens is None else kv_tokens
             fired = bool(self.planner.on_token(eff, offsets))
         t_end, stall, comm = self._step(self.now, ctx, self._bw, n_micro,
-                                        q_len)
+                                        q_len, q_lens)
         trace = StepTrace(tok, t_end - self.now, stall, comm, fired,
                           kv_moved_bytes=moved)
         self.now = t_end

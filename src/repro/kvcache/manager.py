@@ -15,8 +15,10 @@ two standard outs:
 
 Victim choice is the caller's policy (the scheduler preempts the
 latest-admitted request, vLLM-style); the manager keeps the bookkeeping
-honest: a request is either resident (all pages DEVICE), suspended (all
-pages HOST or none), or released.
+honest: a request is either resident (all pages DEVICE), suspended (its
+solely-owned pages HOST — pages shared with the radix tree or a
+co-resident COW fork stay DEVICE, see PagePool.spill_table — or none),
+or released.
 """
 from __future__ import annotations
 
@@ -76,6 +78,46 @@ class PagedKVManager:
         self._tables[rid] = t
         self._suspended[rid] = False
         return True
+
+    # -- prefix-cache admission (DESIGN.md §12) ----------------------------------
+    def can_admit_prefix(self, n_tokens: int, prefix_pages: List[int],
+                         headroom_pages: int = 0) -> bool:
+        """Admission check for a radix prefix hit: only the *uncached
+        suffix* needs fresh device pages, plus one device slot for every
+        matched page currently delegated to the host tier (the hit fetches
+        them back before decode attends them)."""
+        new = self.pool.pages_for(n_tokens) - len(prefix_pages)
+        host = sum(1 for p in prefix_pages
+                   if self.pool.tier_of(p) == HOST)
+        need = max(new, 0) + host + max(headroom_pages, 0)
+        return self.pool.free_pages(DEVICE) >= need \
+            and self.pool.alloc.can_alloc(max(new, 0))
+
+    def admit_with_prefix(self, rid: int, prefix_pages: List[int],
+                          prefix_tokens: int, n_tokens: int) -> float:
+        """Admit `rid` copy-on-write over a matched radix prefix: the
+        shared pages are increfed into a fresh table (never written — the
+        match is page-aligned and capped below the prompt end, so growth
+        only allocates new pages), host-resident shared pages are fetched
+        back to the device tier, and the uncached suffix is allocated
+        fresh. Returns bytes fetched (the spill-priced part of a hit)."""
+        if rid in self._tables:
+            raise ValueError(f"request {rid} already admitted")
+        t = BlockTable(self.pool.page_size)
+        for pid in prefix_pages:
+            self.pool.incref_page(pid)
+        t.pages = list(prefix_pages)
+        t.tokens = prefix_tokens
+        try:
+            moved = self.pool.migrate(prefix_pages, DEVICE)
+            self.pool.extend_table(t, n_tokens, DEVICE)
+        except OutOfPages:              # caller raced can_admit_prefix
+            for pid in t.pages:
+                self.pool.decref_page(pid)
+            raise
+        self._tables[rid] = t
+        self._suspended[rid] = False
+        return moved
 
     def extend(self, rid: int, n_tokens: Optional[int] = None) -> bool:
         """Grow `rid` to `n_tokens` (default: +1 token). False on a dry

@@ -164,22 +164,71 @@ class PagedDecodeCache:
             if self.pool.extend_table(t, n_tokens):
                 self._bt_dev = None      # table grew: refresh device copy
 
+    # -- epoch lifecycle over a persistent pool (DESIGN.md §12) ------------------
+    def reset_tables(self) -> None:
+        """Release this batch's tables (radix-shared pages survive their
+        increfs) and rewind `pos` — the pool and its K/V bytes persist, so
+        a prefix cache built over it carries state across epochs."""
+        for i, t in enumerate(self.tables):
+            self.pool.release_table(t)
+            self.tables[i] = BlockTable(self.pool.page_size)
+        self.pos = 0
+        self._bt_dev = None
+
+    def adopt_tables(self, tables: List[BlockTable], pos: int) -> None:
+        """Take ownership of externally-built tables (radix prefix forks:
+        shared full pages up front, `pos` tokens committed). The caller
+        has already increfed the shared pages into them."""
+        assert len(tables) == self.batch, (len(tables), self.batch)
+        self.tables = tables
+        self.pos = pos
+        self._bt_dev = None
+
     # -- seeding from a dense prefill cache --------------------------------------
     def seed(self, cache: Dict) -> None:
         """Adopt a model-layout cache (M.prefill output): scatter its K/V
-        through freshly allocated block tables into the pools."""
+        through freshly allocated block tables into the pools. Scatters
+        into the *live* pool buffers — pages owned by a radix prefix
+        cache keep their bytes across epoch re-seeds."""
         from repro.kvcache.layout import scatter_to_pages
         pos = int(cache["pos"])
         self._extend_all(pos)
-        kp = scatter_to_pages(np.zeros(self.k_pool.shape, np.float32),
+        # np.array (not asarray): a same-dtype jax array converts to a
+        # read-only zero-copy view — scatter needs a writable host copy
+        kp = scatter_to_pages(np.array(self.k_pool, np.float32),
                               np.asarray(cache["k"][:, :self.batch],
                                          np.float32), self.tables, pos)
-        vp = scatter_to_pages(np.zeros(self.v_pool.shape, np.float32),
+        vp = scatter_to_pages(np.array(self.v_pool, np.float32),
                               np.asarray(cache["v"][:, :self.batch],
                                          np.float32), self.tables, pos)
         self.k_pool = jnp.asarray(kp, self.k_pool.dtype)
         self.v_pool = jnp.asarray(vp, self.v_pool.dtype)
         self.pos = pos
+
+    # -- suffix / chunked prefill (DESIGN.md §12) --------------------------------
+    def prefill(self, params, tokens, *, chunk: int = 0):
+        """Process `tokens` (B, T) — the prompt, or just its uncached
+        suffix when the tables already hold a radix-matched prefix at
+        `pos` — through ceil(T/chunk) multi-query rounds (`chunk` 0 =
+        monolithic). Each round is the speculative verify pass scoring
+        chunk query positions and writing their K/V through the block
+        tables, so chunked output is bitwise-equal to monolithic: every
+        query row sees exactly the same pages, masks and block walk
+        either way. Returns the final position's logits (B, PV) — the
+        distribution the first sampled token draws from."""
+        tokens = np.asarray(tokens, np.int32)
+        T = tokens.shape[1]
+        if T == 0:
+            raise ValueError("prefill needs at least one uncached token "
+                             "(the match cap guarantees it)")
+        chunk = T if chunk <= 0 else min(chunk, T)
+        last = None
+        for off in range(0, T, chunk):
+            q = tokens[:, off:off + chunk]
+            logits = self.verify(params, q)
+            self.commit(q.shape[1])
+            last = logits[:, -1]
+        return last
 
     # -- one decode step ---------------------------------------------------------
     def step(self, params, token):

@@ -132,6 +132,18 @@ class PagePool:
                 self._count[self._tier.pop(pid)] -= 1
         table.release(self.alloc)
 
+    # -- page-level sharing (radix prefix cache, DESIGN.md §12) ------------------
+    def incref_page(self, pid: int) -> None:
+        """Add an owner to an allocated page (tier unchanged)."""
+        self.alloc.incref(pid)
+
+    def decref_page(self, pid: int) -> None:
+        """Drop one owner; the last owner's decref frees the tier slot
+        (the page-level twin of release_table's per-page bookkeeping)."""
+        if self.alloc.refcount(pid) == 1:
+            self._count[self._tier.pop(pid)] -= 1
+        self.alloc.decref(pid)
+
     # -- migration ---------------------------------------------------------------
     def tier_of(self, pid: int) -> str:
         return self._tier[pid]
@@ -168,8 +180,15 @@ class PagePool:
         return self.migrate(pids, dst)
 
     def spill_table(self, table: BlockTable) -> float:
-        """Whole-table spill to the host tier (preempt-and-swap)."""
-        return self.migrate(table.pages, HOST)
+        """Whole-table spill to the host tier (preempt-and-swap). Pages
+        the table shares with another owner (the radix tree or a
+        co-resident COW fork, refcount > 1) stay put: migrating them
+        would pull KV out from under a resident request that still
+        attends it and overstate free device capacity. resume() is
+        tier-aware (fetch_table moves only what left), so a partially
+        spilled table round-trips correctly."""
+        return self.migrate([p for p in table.pages
+                             if self.alloc.refcount(p) == 1], HOST)
 
     def fetch_table(self, table: BlockTable) -> float:
         """Bring every page of a table back to the device tier."""

@@ -23,7 +23,8 @@ def main(argv=None):
     ap.add_argument("--stages", type=int, default=4)
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--pattern",
-                    choices=("sporadic", "bursty", "poisson", "trace"),
+                    choices=("sporadic", "bursty", "poisson", "trace",
+                             "shared_prefix", "multiturn"),
                     default="sporadic")
     ap.add_argument("--requests", type=int, default=2)
     ap.add_argument("--max-new", type=int, default=16)
@@ -41,6 +42,17 @@ def main(argv=None):
     ap.add_argument("--spec-k", type=int, default=4)
     ap.add_argument("--spec-draft", default="ngram",
                     choices=("ngram", "model"))
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix cache over real KV pages "
+                         "(single-device fallback only — DESIGN.md §12)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill span (0 = monolithic)")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="KV page size (prefix sharing is page-granular: "
+                         "pick <= prefix length for smoke prompts)")
+    ap.add_argument("--n-templates", type=int, default=4)
+    ap.add_argument("--prefix-len", type=int, default=32)
+    ap.add_argument("--turns", type=int, default=3)
     args = ap.parse_args(argv)
 
     import jax
@@ -82,16 +94,22 @@ def main(argv=None):
                      pattern="sporadic" if args.pattern == "sporadic"
                      else "bursty",
                      sampler=SamplerConfig(temperature=args.temperature),
-                     spec=spec)
+                     spec=spec,
+                     prefix_cache=args.prefix_cache,
+                     prefill_chunk_tokens=args.prefill_chunk,
+                     page_size=args.page_size)
 
     arrivals = cli_arrivals(args.pattern, args.requests, seed=args.seed,
                             prompt_len=args.prompt_len,
                             max_new_tokens=args.max_new, gap_s=args.gap_s,
                             burst_size=srv.slots, rate_rps=args.rate_rps,
+                            n_templates=args.n_templates,
+                            prefix_len=args.prefix_len, turns=args.turns,
                             trace=args.trace)
 
     sched = ContinuousBatchingScheduler(srv.make_backend(), SchedulerConfig())
-    done = sched.serve(requests_from_arrivals(arrivals))
+    done = sched.serve(requests_from_arrivals(arrivals,
+                                              vocab_size=cfg.vocab_size))
     for r in sorted(done, key=lambda r: r.rid):
         status = "REJECTED" if r.rejected else \
             f"ttft {r.ttft_s:.2f}s total {r.latency_s:.2f}s " \

@@ -1,0 +1,9 @@
+"""Radix prefix-cache subsystem (DESIGN.md §12).
+
+A radix tree over token-id sequences whose nodes own full, immutable,
+ref-counted KV pages in a `PagePool`: match on admission forks the cached
+prefix copy-on-write into a request's BlockTable (only the uncached suffix
+is prefilled), insert on finish donates the request's committed pages back,
+and LRU eviction reclaims unpinned cached pages first under pool pressure.
+"""
+from repro.prefixcache.radix import RadixPrefixCache  # noqa: F401

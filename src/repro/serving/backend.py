@@ -136,15 +136,28 @@ class SimBackend:
         # a recompute-resumed request re-prefills prompt + generated
         return getattr(req, "prefill_tokens", None) or req.prompt_len
 
+    @staticmethod
+    def _prefill_q(req) -> int:
+        """Query positions the prefill pass actually computes: the span
+        minus whatever the radix prefix cache (or a spill that kept the
+        KV) already holds — Eq. 5-8 bytes and hops are priced for the
+        uncached suffix only (DESIGN.md §12)."""
+        span = SimBackend._prefill_span(req)
+        cached = getattr(req, "cached_tokens", 0)
+        return max(span - cached, 1)
+
     def start_batch(self, reqs: Sequence) -> List[Optional[int]]:
         out: List[Optional[int]] = []
         for slot, r in enumerate(reqs):
             self._ctx[slot] = self._prefill_span(r)
-        # prefill priced as one pipeline pass at the longest prompt
+        # prefill: one pipeline pass; each micro-batch carries its own
+        # uncached-suffix query count (attention still reads the full
+        # span, hence ctx = the longest context in the batch)
         self.sim.step_once(ctx=max((self._prefill_span(r) for r in reqs),
                                    default=1),
                            n_micro=max(len(reqs), 1),
-                           kv_tokens=self._planner_tokens())
+                           kv_tokens=self._planner_tokens(),
+                           q_lens=[self._prefill_q(r) for r in reqs] or [1])
         for slot, r in enumerate(reqs):
             self._ctx[slot] += 1
             out.append(None)                  # sim has no real token ids
@@ -156,9 +169,74 @@ class SimBackend:
         span = self._prefill_span(req)
         self._ctx[slot] = span
         self.sim.step_once(ctx=max(span, 1), n_micro=1,
-                           kv_tokens=self._planner_tokens())
+                           kv_tokens=self._planner_tokens(),
+                           q_len=self._prefill_q(req))
         self._ctx[slot] += 1
         return None
+
+    # -- chunked prefill / mixed rounds (DESIGN.md §12) --------------------------
+    def attach_slot(self, slot: int, req, ctx0: int) -> None:
+        """Register a slot whose prompt will drain through decode_mixed
+        chunks; `ctx0` is the context already in KV (radix prefix hit or
+        a spill that kept the pages)."""
+        self._ctx[slot] = max(ctx0, 0)
+
+    def decode_mixed(self, work: Dict[int, tuple]):
+        """One mixed round: {slot: ("prefill", n_tokens, last_chunk) |
+        ("decode",)}. Every stream rides the same weight-stream — the
+        chunk's compute and hops scale with its q_len, decode streams
+        with 1 (or k+1 under speculation) — so a cold prompt no longer
+        stalls live decoders for a monolithic pass. Prefill slots emit
+        [None] (their first token) when the last chunk lands, [] before;
+        decode slots emit their committed round."""
+        if not work:
+            return {}
+        slots = sorted(work)
+        q_lens, out = [], {}
+        spec_slots = []
+        k = self.spec.k if self.spec is not None else 0
+        for s in slots:
+            w = work[s]
+            if w[0] == "prefill":
+                q_lens.append(max(w[1], 1))
+            elif self.spec is not None:
+                q_lens.append(k + 1)
+                spec_slots.append(s)
+            else:
+                q_lens.append(1)
+        ctx = max(self._ctx[s] + (work[s][1] if work[s][0] == "prefill"
+                                  else 1) for s in slots)
+        self.sim.step_once(ctx=ctx, n_micro=len(slots),
+                           kv_tokens=self._planner_tokens(), q_lens=q_lens)
+        for s in slots:
+            w = work[s]
+            if w[0] == "prefill":
+                self._ctx[s] += w[1]
+                if w[2]:                      # last chunk: first token
+                    self._ctx[s] += 1
+                    out[s] = [None]
+                else:
+                    out[s] = []
+            elif s in spec_slots:
+                out[s] = [None] * self._spec_commit(s)
+            else:
+                self._ctx[s] += 1
+                out[s] = [None]
+        return out
+
+    def _spec_commit(self, s: int) -> int:
+        """Draw one slot's committed count from the acceptance model and
+        advance its context (shared by decode_active and mixed rounds)."""
+        k = self.spec.k
+        acc = 0
+        while acc < k and self._spec_rng.random() < self.spec.acceptance:
+            acc += 1
+        committed = acc + 1          # accepted prefix + correction/bonus
+        self._ctx[s] += committed
+        self._spec_stats.rounds += 1
+        self._spec_stats.drafted += k
+        self._spec_stats.accepted += acc
+        return committed
 
     def decode_active(self, slots: Sequence[int]):
         if not slots:
@@ -178,18 +256,7 @@ class SimBackend:
         k = self.spec.k
         self.sim.step_once(ctx=ctx, n_micro=len(slots),
                            kv_tokens=self._planner_tokens(), q_len=k + 1)
-        out = {}
-        for s in slots:
-            acc = 0
-            while acc < k and self._spec_rng.random() < self.spec.acceptance:
-                acc += 1
-            committed = acc + 1          # accepted prefix + correction/bonus
-            self._ctx[s] += committed
-            self._spec_stats.rounds += 1
-            self._spec_stats.drafted += k
-            self._spec_stats.accepted += acc
-            out[s] = [None] * committed
-        return out
+        return {s: [None] * self._spec_commit(s) for s in slots}
 
     @property
     def spec_stats(self):
@@ -225,7 +292,9 @@ class EngineBackend:
 
     def __init__(self, cfg, params, *, engine=None, n_slots: int = 0,
                  max_len: int = 512, sampler=None, prompt_seed: int = 0,
-                 paged: bool = False, page_size: int = 64, spec=None):
+                 paged: bool = False, page_size: int = 64, spec=None,
+                 prefix_cache: bool = False, prefill_chunk_tokens: int = 0,
+                 cache_pages: int = 0):
         import jax
 
         from repro.models import model as M
@@ -235,6 +304,27 @@ class EngineBackend:
         self.params = params
         self.engine = engine
         self.max_len = max_len
+        # radix prefix cache over the real paged pool (DESIGN.md §12):
+        # prompts matched against cached pages, only the uncached suffix
+        # prefilled, finished requests donate their pages back. Rides the
+        # single-device paged path (with an engine, chunked prefill is
+        # available via prefill_partial; page sharing needs the paged
+        # pool, which the engine tier keeps per-slot-dense).
+        if prefix_cache and engine is not None:
+            raise NotImplementedError(
+                "prefix_cache shares real KV pages through the "
+                "single-device paged pool; the engine's per-stage cache "
+                "layout has no shared pool to fork from")
+        self.prefix_cache = prefix_cache
+        self.chunk = max(int(prefill_chunk_tokens), 0)
+        self._cache_pages = cache_pages   # radix headroom (0 -> one full
+                                          # batch's worth of extra pages)
+        self._radix = None
+        self._slot_tokens = None          # per-slot donatable prompt ids
+        self._slot_out = None             # per-slot committed output ids
+        self._saved_tokens = 0            # prompt tokens seeded from cache
+        if prefix_cache:
+            paged = True
         # speculative decoding (DESIGN.md §11): real drafts, real
         # multi-token verification. The shared-pos cache layout (prompts
         # left-padded, one position counter per batch) forces lockstep
@@ -344,6 +434,103 @@ class EngineBackend:
         self._key, k = jax.random.split(self._key)
         return sample(logits, self.sampler, k, self.cfg.vocab_size)
 
+    # -- radix prefix cache over real KV pages (DESIGN.md §12) -------------------
+    def _engine_can_chunk(self) -> bool:
+        from repro.configs.base import Family
+        return self.cfg.family in (Family.DENSE, Family.MOE) \
+            and self.chunk < self.engine.S_c
+
+    def _prefix_structures(self):
+        """Persistent pool + paged cache + radix tree (lazily built: they
+        outlive epochs — that is the whole point of the cache)."""
+        if self._radix is None:
+            from repro.kvcache.paged_decode import PagedDecodeCache
+            from repro.kvcache.pool import PagePool, PagedKVConfig
+            from repro.prefixcache import RadixPrefixCache
+            B = self.batch_width
+            max_pages = -(-self.max_len // self.page_size)
+            extra = self._cache_pages or B * max_pages
+            pool = PagePool(PagedKVConfig(
+                page_size=self.page_size,
+                device_pages=B * max_pages + extra))
+            self._paged_cache = PagedDecodeCache(
+                self.cfg, B, self.max_len, page_size=self.page_size,
+                pool=pool)
+            self._radix = RadixPrefixCache(pool)
+        return self._paged_cache, self._radix
+
+    def _ensure_room(self, pc, n_new_tokens: int) -> None:
+        """Free device pages for the coming growth: unpinned radix pages
+        are evicted first — cached prefixes are reclaimable, live tables
+        are not (the pool is sized so this always suffices)."""
+        need = sum(pc.pool.pages_for(pc.pos + n_new_tokens) - len(t.pages)
+                   for t in pc.tables)
+        short = need - pc.pool.free_pages()
+        if short > 0:
+            self._radix.evict(short)
+
+    def _start_batch_prefix(self, reqs, prompts, toks):
+        """Seed the epoch from shared pages where the radix tree has them,
+        then prefill only the uncached suffix (chunked when configured).
+        The shared-pos cache layout forces one matched length for the
+        whole batch, so hits need equal-length prompts (shared_prefix
+        traffic's common case) and align on the batch-minimum match;
+        unequal-length epochs run cold through the dense prefill (their
+        left-padded prefixes would key pad tokens — never donated)."""
+        from repro.kvcache.allocator import BlockTable
+        from repro.models import model as M
+
+        pc, radix = self._prefix_structures()
+        B = self.batch_width
+        pc.reset_tables()                 # radix increfs keep shared pages
+        self._slot_tokens = [None] * B
+        self._slot_out = [[] for _ in range(B)]
+        ps = self.page_size
+        lens = {len(p) for p in prompts}
+        if len(lens) != 1:
+            cache = M.init_cache(self.cfg, B, self.max_len)
+            logits, cache = self._prefill(self.params, toks, cache)
+            self._ensure_room(pc, int(cache["pos"]))
+            pc.seed(cache)
+            self._state = None
+            return logits[:, -1]
+        L = lens.pop()
+        matches = [radix.match(p, max_pages=(L - 1) // ps)
+                   for p in prompts]
+        m = min(n for _, n in matches)    # shared pos: batch-min match
+        self._saved_tokens += m * len(reqs)
+        for r in reqs:                    # visibility in serving reports
+            r.cached_tokens = max(getattr(r, "cached_tokens", 0), m)
+        while len(matches) < B:           # padded replicas ride the last
+            matches.append(matches[-1])   # request's match
+        if m > 0:
+            tables = []
+            for pages, _ in matches:
+                t = BlockTable(ps)
+                for pid in pages[:m // ps]:
+                    pc.pool.incref_page(pid)
+                t.pages = list(pages[:m // ps])
+                t.tokens = m
+                tables.append(t)
+            pc.adopt_tables(tables, m)
+        self._ensure_room(pc, L - pc.pos)
+        last = pc.prefill(self.params, np.asarray(toks)[:, pc.pos:],
+                          chunk=self.chunk)
+        for slot, p in enumerate(prompts):
+            self._slot_tokens[slot] = [int(x) for x in p]
+        self._state = None
+        return last
+
+    @property
+    def prefix_stats(self):
+        if self._radix is None:
+            return None
+        r = self._radix
+        return {"prefix_lookups": r.lookups, "prefix_hits": r.hits,
+                "cached_tokens": r.cached_tokens(),
+                "prefix_pages": r.n_pages,
+                "prefill_tokens_saved": self._saved_tokens}
+
     # -- serving hooks -----------------------------------------------------------
     def start_batch(self, reqs: Sequence) -> List[Optional[int]]:
         import jax.numpy as jnp
@@ -356,23 +543,39 @@ class EngineBackend:
             toks = jnp.concatenate(
                 [toks, jnp.tile(toks[-1:], (self.batch_width - toks.shape[0],
                                             1))], 0)
-        cache = M.init_cache(self.cfg, toks.shape[0], self.max_len)
-        logits, cache = self._prefill(self.params, toks, cache)
-        if self.engine is not None:
+        if self.prefix_cache:
+            last = self._start_batch_prefix(reqs, prompts, toks)
+        elif self.engine is not None and self.chunk \
+                and self._engine_can_chunk():
+            # partial-context prefill rounds through the interleaved
+            # pipeline itself (DESIGN.md §12) — no separate prefill
+            # program on replicated params
             state = self.engine.init_state(self.params)
-            self._state = self.engine.seed_cache(state, cache)
-        elif self.paged:
-            from repro.kvcache.paged_decode import PagedDecodeCache
-            if self._paged_cache is not None:
-                self._paged_cache.release()
-            self._paged_cache = PagedDecodeCache(
-                self.cfg, toks.shape[0], self.max_len,
-                page_size=self.page_size)
-            self._paged_cache.seed(cache)
-            self._state = None
+            lg, self._state = self.engine.prefill_partial(
+                state, toks, chunk=self.chunk)
+            last = lg[:, -1]
         else:
-            self._state = cache
-        tok = self._sample(logits[:, -1])
+            cache = M.init_cache(self.cfg, toks.shape[0], self.max_len)
+            logits, cache = self._prefill(self.params, toks, cache)
+            last = logits[:, -1]
+            if self.engine is not None:
+                state = self.engine.init_state(self.params)
+                self._state = self.engine.seed_cache(state, cache)
+            elif self.paged:
+                from repro.kvcache.paged_decode import PagedDecodeCache
+                if self._paged_cache is not None:
+                    self._paged_cache.release()
+                self._paged_cache = PagedDecodeCache(
+                    self.cfg, toks.shape[0], self.max_len,
+                    page_size=self.page_size)
+                self._paged_cache.seed(cache)
+                self._state = None
+            else:
+                self._state = cache
+        tok = self._sample(last)
+        if self.prefix_cache:
+            for slot in range(len(reqs)):
+                self._slot_out[slot].append(int(tok[slot]))
         self._cur = tok[:, None]
         if self.spec is not None:
             from repro.specdec import SpecDecodeController
@@ -401,6 +604,8 @@ class EngineBackend:
             lg, self._state = self.engine.decode_requests(
                 self._state, self._cur, jnp.asarray(active))
         elif self.paged:
+            if self.prefix_cache:
+                self._ensure_room(self._paged_cache, 1)
             lg = self._paged_cache.step(self.params, self._cur)[:, 0]
         else:
             lg, self._state = self._decode(self.params, self._state,
@@ -408,6 +613,9 @@ class EngineBackend:
             if lg.ndim == 3:
                 lg = lg[:, 0]
         tok = self._sample(lg)
+        if self.prefix_cache:
+            for s in slots:
+                self._slot_out[s].append(int(tok[s]))
         if self.spec is not None:             # keep drafts/pos in sync on
             self._pos += 1                    # the non-spec fallback step
             for s in slots:
@@ -436,6 +644,8 @@ class EngineBackend:
             lg, self._state = self.engine.verify_requests(
                 self._state, jnp.asarray(mat), jnp.asarray(active))
         elif self.paged:
+            if self.prefix_cache:
+                self._ensure_room(self._paged_cache, 1 + k)
             lg = self._paged_cache.verify(self.params, mat)
         else:
             lg, self._state = self._verify(self.params, self._state,
@@ -465,6 +675,12 @@ class EngineBackend:
         for s in slots:
             self._ctl.observe(s, committed[s])
             cur[s, 0] = committed[s][-1]
+            if self.prefix_cache:
+                # spec commit boundary (DESIGN.md §12): several tokens
+                # landed at once — donate freshly-completed pages so
+                # concurrent same-prefix traffic hits mid-flight
+                self._slot_out[s].extend(int(t) for t in committed[s])
+                self._donate_slot(s)
         self._cur = jnp.asarray(cur)
         return committed
 
@@ -476,8 +692,26 @@ class EngineBackend:
         raise NotImplementedError(
             "engine batches are fixed at cache-seed time")
 
+    def _donate_slot(self, slot: int) -> None:
+        """Insert `slot`'s committed pages (prompt + sampled output so
+        far) into the radix tree. Slots whose prompt rode left-padding
+        have _slot_tokens None — their early positions hold pad KV, so
+        they never donate."""
+        if self._radix is None or self._slot_tokens is None \
+                or self._slot_tokens[slot] is None:
+            return
+        toks = self._slot_tokens[slot] + self._slot_out[slot]
+        table = self._paged_cache.tables[slot]
+        self._radix.insert(toks, table.pages,
+                           n_tokens=min(len(toks), table.tokens))
+
     def release(self, slot: int) -> None:
         # the slot keeps padding the fixed batch until the epoch drains
         # (see decode_active); with a paged engine its pages are freed now
+        if self.prefix_cache:
+            # insert on finish: the request's committed pages become
+            # future prefix hits (the table itself lives until the next
+            # epoch's reset_tables — the tree's increfs carry them on)
+            self._donate_slot(slot)
         if self.engine is not None and getattr(self.engine, "paged", False):
             self.engine.free_slot(slot)

@@ -42,6 +42,13 @@ class ServingReport:
     ttft_p99_s: float
     latency_p50_s: float
     latency_p99_s: float
+    # TTFT split (DESIGN.md §12): time stuck in the queue vs time spent
+    # prefilling after admission — a prefix hit shrinks the second term,
+    # better scheduling the first
+    ttft_queue_p50_s: float = float("nan")
+    ttft_queue_p99_s: float = float("nan")
+    ttft_prefill_p50_s: float = float("nan")
+    ttft_prefill_p99_s: float = float("nan")
     # per-request decode pace: generated tokens / (finish - first token),
     # the steady-state rate users see after TTFT (NaN when no request
     # decoded more than one token)
@@ -59,6 +66,11 @@ class ServingReport:
     spec_drafted: int = 0
     spec_accepted: int = 0
     spec_acceptance_rate: float = 0.0
+    # radix prefix cache (DESIGN.md §12; zero when the cache is off)
+    prefix_hit_rate: float = 0.0   # admissions that matched a cached prefix
+    cached_tokens: int = 0         # tokens held by the radix tree at end
+    prefill_tokens_saved: int = 0  # prompt tokens served from cache instead
+                                   # of riding a prefill round
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -87,6 +99,13 @@ def summarize(requests: List, *, pattern: str = "", backend: str = "",
     ttfts = [r.first_token_s - r.arrival_s for r in served
              if r.first_token_s is not None]
     lats = [r.finish_s - r.arrival_s for r in served]
+    # TTFT split: arrival -> admission (queue wait) and admission ->
+    # first token (prefill compute + any preemption detour)
+    queues = [r.admitted_s - r.arrival_s for r in served
+              if getattr(r, "admitted_s", None) is not None]
+    prefills = [r.first_token_s - r.admitted_s for r in served
+                if getattr(r, "admitted_s", None) is not None
+                and r.first_token_s is not None]
     # p50/p99 of per-request decode pace; the first token belongs to TTFT,
     # the remaining generated-1 span first_token_s..finish_s
     rates = [(r.generated - 1) / max(r.finish_s - r.first_token_s, 1e-12)
@@ -104,6 +123,10 @@ def summarize(requests: List, *, pattern: str = "", backend: str = "",
         ttft_p50_s=percentile(ttfts, 50), ttft_p99_s=percentile(ttfts, 99),
         latency_p50_s=percentile(lats, 50),
         latency_p99_s=percentile(lats, 99),
+        ttft_queue_p50_s=percentile(queues, 50),
+        ttft_queue_p99_s=percentile(queues, 99),
+        ttft_prefill_p50_s=percentile(prefills, 50),
+        ttft_prefill_p99_s=percentile(prefills, 99),
         decode_tok_s_p50=percentile(rates, 50),
         decode_tok_s_p99=percentile(rates, 99),
         n_preempted=sum(getattr(r, "preempted", 0) for r in requests),
@@ -111,6 +134,10 @@ def summarize(requests: List, *, pattern: str = "", backend: str = "",
         spec_drafted=int(stats.get("spec_drafted", 0)),
         spec_accepted=int(stats.get("spec_accepted", 0)),
         spec_acceptance_rate=float(stats.get("spec_acceptance_rate", 0.0)),
+        prefix_hit_rate=(float(stats.get("prefix_hits", 0))
+                         / max(float(stats.get("prefix_lookups", 0)), 1.0)),
+        cached_tokens=int(stats.get("cached_tokens", 0)),
+        prefill_tokens_saved=int(stats.get("prefill_tokens_saved", 0)),
         peak_active=int(stats.get("peak_active", 0)),
         peak_kv_pages=int(stats.get("peak_kv_pages", 0)),
         kv_pages_spilled=int(stats.get("kv_pages_spilled", 0)),

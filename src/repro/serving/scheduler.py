@@ -55,7 +55,13 @@ class Request:
     rejected: bool = False
     preempted: int = 0              # times evicted mid-generation
     restart_tokens: int = 0         # recompute-resume: context to re-prefill
+    cached_tokens: int = 0          # prompt tokens served from the radix
+                                    # prefix cache (or kept through a spill
+                                    # resume) — the backend prefills only
+                                    # prefill_tokens - cached_tokens
     first_token_s: Optional[float] = None
+    admitted_s: Optional[float] = None  # left the queue (TTFT split:
+                                        # queue wait vs prefill compute)
     finish_s: Optional[float] = None
 
     def __post_init__(self):
@@ -93,11 +99,28 @@ class Request:
             else self.finish_s - self.arrival_s
 
 
-def requests_from_arrivals(arrivals, *, start_rid: int = 0) -> List[Request]:
-    """ArrivalEvents (traffic.py) -> length-only Requests."""
-    return [Request(start_rid + i, None, ev.max_new_tokens,
-                    arrival_s=ev.time_s, prompt_len=ev.prompt_len)
-            for i, ev in enumerate(arrivals)]
+def requests_from_arrivals(arrivals, *, start_rid: int = 0,
+                           vocab_size: int = 32768,
+                           seed: int = 0) -> List[Request]:
+    """ArrivalEvents (traffic.py) -> Requests. Template-bearing events
+    (shared_prefix / multiturn) materialize real token ids — the leading
+    template_len tokens from the shared template stream, the rest unique
+    per request — because the radix prefix cache keys on token content;
+    plain events stay length-only."""
+    from repro.serving.traffic import template_tokens
+    out = []
+    for i, ev in enumerate(arrivals):
+        rid = start_rid + i
+        prompt = None
+        if ev.template_id is not None:
+            shared = template_tokens(ev.template_id, ev.template_len,
+                                     vocab_size=vocab_size, seed=seed)
+            uniq = template_tokens(rid, ev.prompt_len - ev.template_len,
+                                   vocab_size=vocab_size, seed=seed, salt=1)
+            prompt = np.concatenate([shared, uniq])
+        out.append(Request(rid, prompt, ev.max_new_tokens,
+                           arrival_s=ev.time_s, prompt_len=ev.prompt_len))
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,6 +132,13 @@ class SchedulerConfig:
     preempt: str = "spill"                   # paged: "spill" | "recompute"
     host_kv_budget_tokens: Optional[int] = None  # paged: spill-tier size
                                                  # (None -> device budget)
+    prefix_cache: bool = False               # radix KV reuse (DESIGN.md
+                                             # §12; needs kv_policy="paged"
+                                             # and token-bearing requests)
+    prefill_chunk_tokens: Optional[int] = None   # split prompt processing
+                                                 # into chunks that ride
+                                                 # mixed rounds with decode
+                                                 # (None = monolithic)
 
 
 class ContinuousBatchingScheduler:
@@ -152,18 +182,51 @@ class ContinuousBatchingScheduler:
         # stale occupancy and admits into guaranteed preemption churn
         self._round_tokens = 1 + getattr(getattr(backend, "spec", None),
                                          "k", 0)
+        # radix prefix cache (DESIGN.md §12): shares the paged pool —
+        # matched prompt prefixes fork COW into fresh block tables and
+        # only the uncached suffix is prefilled
+        if config.prefix_cache and not self.paged:
+            raise ValueError("prefix_cache needs kv_policy='paged' "
+                             "(the radix tree shares the page pool)")
+        self.prefix = None
+        if config.prefix_cache and self.paged:
+            from repro.prefixcache import RadixPrefixCache
+            self.prefix = RadixPrefixCache(self.mgr.pool)
+        # chunked prefill (DESIGN.md §12): prompts are processed
+        # prefill_chunk_tokens at a time in mixed rounds alongside live
+        # decode streams — only on substrates that expose decode_mixed
+        # (the simulator); epoch backends chunk inside their own prefill
+        self.chunk = config.prefill_chunk_tokens
+        self._mixed = getattr(backend, "decode_mixed", None) \
+            if self.chunk else None
+        self._fill: Dict[int, int] = {}   # rid -> prefill tokens remaining
         # preemption events are counted on the Request records themselves
         # (summarize sums Request.preempted — single source of truth)
         self.stats: Dict[str, float] = {
             "peak_active": 0, "peak_kv_pages": 0,
             "kv_pages_spilled": 0, "kv_pages_fetched": 0,
-            "kv_migrated_bytes": 0.0}
+            "kv_migrated_bytes": 0.0,
+            "prefix_lookups": 0, "prefix_hits": 0,
+            "cached_tokens": 0, "prefill_tokens_saved": 0,
+            "prefix_pages": 0, "prefix_evicted_pages": 0}
 
     def _page_bytes(self) -> float:
         fn = getattr(self.backend, "kv_bytes_per_token", None)
         return (fn() if fn else 0.0) * self.config.page_size
 
     # -- admission -------------------------------------------------------------
+    def _lookup(self, req: Request):
+        """Radix match for `req`'s prompt, capped below the last prompt
+        token (page-aligned) so at least one token is always prefilled —
+        the logits that seed its first sampled token. Returns (shared
+        page ids, matched token count)."""
+        if self.prefix is None or req.prompt is None or req.preempted:
+            # a resumed request re-enters with its own pages (spill) or a
+            # pending recompute span — prefix forking would double-count
+            return [], 0
+        cap = (req.prompt_len - 1) // self.config.page_size
+        return self.prefix.match(req.prompt, max_pages=cap)
+
     def _admits(self, req: Request, active_count: int = 0) -> bool:
         if self.kv_budget is None:
             return True
@@ -171,21 +234,78 @@ class ContinuousBatchingScheduler:
             # watermark: keep one free page per already-resident request
             # (they each want another page within page_size steps) —
             # admitting into the last pages guarantees preemption churn
-            return self.mgr.can_admit(req.prefill_tokens + 1,
-                                      headroom_pages=active_count)
+            need = req.prefill_tokens + 1
+            if self.prefix is not None:
+                # a prefix hit only needs pages for the uncached suffix —
+                # admitting it as if cold under-fills the batch
+                pages, _ = self._lookup(req)
+                if self.mgr.can_admit_prefix(need, pages,
+                                             headroom_pages=active_count):
+                    return True
+                # pool pressure: cached pages are the first to go —
+                # reclaim unpinned radix leaves before refusing admission
+                # (cold-requirement bound: >= the hit's actual shortfall)
+                short = self.mgr.pool.pages_for(need) \
+                    + active_count - self.mgr.pool.free_pages()
+                if short > 0 and self._evict_cached(short):
+                    pages, _ = self._lookup(req)   # eviction may have
+                    return self.mgr.can_admit_prefix(   # pruned the match
+                        need, pages, headroom_pages=active_count)
+                return False
+            return self.mgr.can_admit(need, headroom_pages=active_count)
         return self._kv_in_use + req.kv_tokens <= self.kv_budget
+
+    def _evict_cached(self, n_pages: int) -> int:
+        """Reclaim device-tier radix pages (the callers are starved for
+        *device* capacity — host-tier cached leaves would free the wrong
+        tier and loop the evict-retry paths to no effect)."""
+        if self.prefix is None:
+            return 0
+        from repro.kvcache.pool import DEVICE
+        freed = self.prefix.evict(n_pages, tier=DEVICE)
+        self.stats["prefix_evicted_pages"] = self.prefix.evicted_pages
+        return freed
 
     def _on_admit(self, req: Request) -> None:
         if self.paged:
-            self.mgr.admit(req.rid, req.prefill_tokens + 1)
+            if self.prefix is not None:
+                pages, ctok = self._lookup(req)
+                moved = self.mgr.admit_with_prefix(
+                    req.rid, pages, ctok, req.prefill_tokens + 1)
+                self._charge(moved)
+                req.cached_tokens = ctok
+                # hit accounting per *admission* (the tree's own lookup
+                # counters also see head-of-line re-checks)
+                self.stats["prefix_lookups"] += 1
+                self.stats["prefix_hits"] += int(ctok > 0)
+                self.stats["prefill_tokens_saved"] += ctok
+            else:
+                self.mgr.admit(req.rid, req.prefill_tokens + 1)
         else:
             self._kv_in_use += req.kv_tokens
 
     def _on_finish(self, req: Request) -> None:
         if self.paged:
+            self._maybe_insert(req)
             self.mgr.release(req.rid)
         else:
             self._kv_in_use -= req.kv_tokens
+
+    def _maybe_insert(self, req: Request) -> None:
+        """Donate `req`'s committed pages to the radix tree (insert on
+        finish and on spec-decode commit boundaries): keys are the tokens
+        whose ids we actually know — the prompt plus any real emitted ids
+        (the simulator emits None placeholders, which cannot key a page)."""
+        if self.prefix is None or req.prompt is None:
+            return
+        toks = list(req.prompt)
+        for t in req.output:
+            if t is None:
+                break
+            toks.append(t)
+        table = self.mgr.table(req.rid)
+        self.prefix.insert(toks, table.pages,
+                           n_tokens=min(len(toks), table.tokens))
 
     def _oversized(self, req: Request) -> bool:
         """Can never be served, even on an idle fleet (both policies cap
@@ -237,6 +357,13 @@ class ContinuousBatchingScheduler:
                                             max(r.max_new_tokens
                                                 - r.generated, 1))
             while not self.mgr.extend(r.rid, grow_to):
+                # reclamation order under pressure (DESIGN.md §12): unpinned
+                # radix-cached pages first — they serve future hits, not a
+                # live decode — and only then preempt a victim
+                need = self.mgr.pool.pages_for(grow_to) \
+                    - self.mgr.pages_of(r.rid)
+                if self._evict_cached(need):
+                    continue
                 victims = [s for s in sorted(active,
                                              key=lambda s: order.index(s),
                                              reverse=True) if s != slot]
@@ -257,11 +384,15 @@ class ContinuousBatchingScheduler:
         self.backend.release(slot)
 
     def _try_resume(self, req: Request) -> bool:
+        kept = bool(self.mgr.table(req.rid).pages)   # spilled, not dropped
         moved = self.mgr.resume(req.rid)
         if moved is None:
             return False
         self._charge(moved)
         req.restart_tokens = 0        # resumed: no pending recompute span
+        # a spill kept the KV: the re-entry step prefills nothing (the
+        # backend prices one query); recompute re-prefills the whole span
+        req.cached_tokens = req.kv_tokens_now if kept else 0
         return True
 
     # -- main loop ---------------------------------------------------------------
@@ -315,9 +446,24 @@ class ContinuousBatchingScheduler:
                 # the re-entry step emits a token; make room for its KV
                 # (best effort — _grow_active preempts if this lost a race)
                 self.mgr.extend(r.rid, r.kv_tokens_now + 1)
-                return r
-            r = queue.popleft()
-            self._on_admit(r)
+            else:
+                r = queue.popleft()
+                self._on_admit(r)
+            if r.admitted_s is None:
+                r.admitted_s = self.backend.now()
+            if self._mixed is not None:
+                # chunked prefill: the uncached span drains chunk-by-chunk
+                # through mixed rounds instead of one monolithic pass
+                pending = self._fill.get(r.rid, 0)
+                if kind == "suspended" and pending > 0 \
+                        and r.cached_tokens > 0:
+                    # spill-resumed mid-prefill: the KV computed so far
+                    # came back with the pages; only the un-prefilled
+                    # remainder still rides mixed rounds
+                    r.cached_tokens = max(r.prefill_tokens - pending, 0)
+                else:
+                    self._fill[r.rid] = max(r.prefill_tokens
+                                            - r.cached_tokens, 0)
             return r
 
         def finish(r: Request, slot: int, t: float):
@@ -357,9 +503,18 @@ class ContinuousBatchingScheduler:
                     r.rejected = True
                     shed.append(r)
                     continue
+                order = list(range(len(batch)))
+                if self._mixed is not None:
+                    # chunked: register slots only — prompts drain through
+                    # mixed rounds below, first tokens emitted when each
+                    # request's last chunk lands
+                    for slot, r in enumerate(batch):
+                        active[slot] = r
+                        self.backend.attach_slot(slot, r, r.cached_tokens)
+                    self._note_occupancy(len(batch))
+                    continue
                 first = self.backend.start_batch(batch)
                 t = self.backend.now()
-                order = list(range(len(batch)))
                 for slot, (r, tok) in enumerate(zip(batch, first)):
                     active[slot] = r
                     if r.first_token_s is None:
@@ -378,7 +533,23 @@ class ContinuousBatchingScheduler:
                 self._note_occupancy(len(active))
                 if not active:
                     continue          # everyone preempted (defensive)
-            emitted = self.backend.decode_active(sorted(active))
+            if self._mixed is not None:
+                # mixed round: prefilling slots consume one chunk each,
+                # decoding slots commit a round of tokens — all riding the
+                # same weight-stream (DESIGN.md §12)
+                work = {}
+                for slot in sorted(active):
+                    r = active[slot]
+                    rem = self._fill.get(r.rid, 0)
+                    if rem > 0:
+                        n = min(self.chunk, rem)
+                        work[slot] = ("prefill", n, n == rem)
+                        self._fill[r.rid] = rem - n
+                    else:
+                        work[slot] = ("decode",)
+                emitted = self._mixed(work)
+            else:
+                emitted = self.backend.decode_active(sorted(active))
             t = self.backend.now()
             for slot, toks in emitted.items():
                 r = active.get(slot)
@@ -391,11 +562,22 @@ class ContinuousBatchingScheduler:
                     toks = [toks]
                 for tok in toks:
                     r.generated += 1
+                    if r.first_token_s is None:   # chunked: the prompt's
+                        r.first_token_s = t       # last chunk emits here
                     if tok is not None:
                         r.output.append(tok)
                     if r.generated >= r.max_new_tokens:
                         finish(r, slot, t)
                         break
+            # spec-decode commit boundary (DESIGN.md §12): multi-token
+            # commits with real ids cross page boundaries mid-flight —
+            # donate completed pages now so concurrent same-prefix
+            # requests hit without waiting for this one to finish
+            if self.prefix is not None \
+                    and getattr(self.backend, "spec", None) is not None:
+                for r in active.values():
+                    if r.output:
+                        self._maybe_insert(r)
 
             # continuous batching: refill freed slots mid-flight
             if self.backend.can_join_running and active:
@@ -411,6 +593,11 @@ class ContinuousBatchingScheduler:
                     if slot in order:
                         order.remove(slot)
                     order.append(slot)
+                    if self._mixed is not None:
+                        # chunked: the joiner's prompt drains through the
+                        # coming mixed rounds — no monolithic join pass
+                        self.backend.attach_slot(slot, r, r.cached_tokens)
+                        continue
                     tok = self.backend.join(slot, r)
                     if r.first_token_s is None:
                         r.first_token_s = self.backend.now()
@@ -426,6 +613,14 @@ class ContinuousBatchingScheduler:
             self.stats["kv_pages_spilled"] = pool.spilled_pages
             self.stats["kv_pages_fetched"] = pool.fetched_pages
             self.stats["kv_migrated_bytes"] = pool.migrated_bytes
+        if self.prefix is not None:
+            self.stats["cached_tokens"] = self.prefix.cached_tokens()
+            self.stats["prefix_pages"] = self.prefix.n_pages
+            self.stats["prefix_evicted_pages"] = self.prefix.evicted_pages
+        else:                         # engine-tier radix (real KV pages)
+            bps = getattr(self.backend, "prefix_stats", None)
+            if bps:
+                self.stats.update(bps)
         spec = getattr(self.backend, "spec_stats", None)
         if spec:                      # drafted/accepted counters -> report
             self.stats.update(spec)

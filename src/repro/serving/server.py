@@ -66,7 +66,9 @@ class LimeServer:
     def __init__(self, cfg: ModelConfig, params, *,
                  engine: Optional[InterleavedEngine] = None,
                  max_len: int = 512, sampler: SamplerConfig = SamplerConfig(),
-                 pattern: str = "sporadic", spec=None):
+                 pattern: str = "sporadic", spec=None,
+                 prefix_cache: bool = False, prefill_chunk_tokens: int = 0,
+                 page_size: int = 64):
         self.cfg = cfg
         self.params = params
         self.engine = engine
@@ -74,6 +76,9 @@ class LimeServer:
         self.sampler = sampler
         self.pattern = pattern
         self.spec = spec              # SpecConfig -> speculative decoding
+        self.prefix_cache = prefix_cache      # radix KV reuse (DESIGN §12)
+        self.prefill_chunk_tokens = prefill_chunk_tokens
+        self.page_size = page_size
         self.queue = RequestQueue()
         self._backend: Optional[EngineBackend] = None
 
@@ -88,12 +93,13 @@ class LimeServer:
         # functools.partial objects miss jax's jit cache) on every
         # serve_all() call
         if self._backend is None:
-            self._backend = EngineBackend(self.cfg, self.params,
-                                          engine=self.engine,
-                                          n_slots=self.slots,
-                                          max_len=self.max_len,
-                                          sampler=self.sampler,
-                                          spec=self.spec)
+            self._backend = EngineBackend(
+                self.cfg, self.params, engine=self.engine,
+                n_slots=self.slots, max_len=self.max_len,
+                sampler=self.sampler, spec=self.spec,
+                prefix_cache=self.prefix_cache and self.engine is None,
+                prefill_chunk_tokens=self.prefill_chunk_tokens,
+                page_size=self.page_size)
         return self._backend
 
     def serve_all(self) -> List[Request]:

@@ -1,12 +1,14 @@
 """Paged KV-cache subsystem (DESIGN.md §10): allocator/pool/manager
 invariants, the paged decode-attention bit-wise contract, paged decode
 losslessness, and page-granular scheduler admission with preemption."""
+import collections
 import os
 import subprocess
 import sys
 
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.kvcache import (BlockTable, OutOfPages, PageAllocator,
                            PagedKVConfig, PagedKVManager, PagePool)
@@ -170,6 +172,108 @@ def test_manager_delegate_tail_partial_page_rounds_down():
     assert m.delegate_tail(1, 9) == 16.0        # 2 whole pages move
     assert m.pool.pages_in_use(HOST) == 2
     assert m.resident_tokens(1) == 4            # 1 device page remains
+
+
+# ----------------------------------------------------------------------------
+# COW fork / truncate / preempt / resume: refcount leak-freedom (property)
+# ----------------------------------------------------------------------------
+def _refcount_consistent(pool, tree, tables):
+    """Every page's allocator refcount equals how many owners actually
+    name it: live block tables + the radix tree."""
+    counts = collections.Counter()
+    for t in tables:
+        counts.update(t.pages)
+    if tree is not None:
+        for node in tree._iter_nodes():
+            counts[node.page] += 1
+    for pid in range(pool.alloc.n_pages):
+        assert pool.alloc.refcount(pid) == counts.get(pid, 0), pid
+
+
+@st.composite
+def _kv_ops(draw):
+    """A mixed workload: admissions (cold or over a radix match of a
+    shared template prompt), extension, speculative truncate_to rollback,
+    preemption (spill and recompute), resumption, eviction, and finishes
+    that donate pages back to the tree."""
+    n = draw(st.integers(5, 30))
+    return [(draw(st.sampled_from(["admit", "extend", "truncate",
+                                   "preempt", "resume", "finish",
+                                   "evict"])),
+             draw(st.integers(0, 2 ** 16))) for _ in range(n)]
+
+
+@settings(max_examples=40, deadline=None)
+@given(_kv_ops())
+def test_fork_cow_no_refcount_leaks_property(ops):
+    """BlockTable.fork COW semantics under preempt/spill/resume and
+    truncate_to rollback: whatever interleaving runs, (a) refcounts always
+    equal the set of actual owners, (b) shared prefix pages are never
+    dropped while the tree or another table holds them, and (c) after all
+    requests finish, the allocator holds exactly the live radix pages —
+    zero leaks."""
+    from repro.prefixcache import RadixPrefixCache
+
+    ps = 4
+    pool = PagePool(PagedKVConfig(page_size=ps, device_pages=14,
+                                  host_pages=10, page_bytes=4.0))
+    tree = RadixPrefixCache(pool)
+    mgr = PagedKVManager(pool)
+    prompts = {}                        # rid -> token list
+    next_rid = [0]
+
+    def template(tid, n):
+        return [1000 + tid * 64 + i for i in range(n)]
+
+    for op, arg in ops:
+        live = list(prompts)
+        if op == "admit":
+            tid = arg % 3
+            plen = 4 + arg % 13
+            toks = template(tid, plen)
+            pages, ctok = tree.match(toks, max_pages=(plen - 1) // ps)
+            total = plen + 1
+            if mgr.can_admit_prefix(total, pages):
+                rid = next_rid[0]
+                next_rid[0] += 1
+                mgr.admit_with_prefix(rid, pages, ctok, total)
+                assert mgr.table(rid).pages[:len(pages)] == pages
+                prompts[rid] = toks
+        elif op == "extend" and live:
+            rid = live[arg % len(live)]
+            if not mgr.is_suspended(rid):
+                mgr.extend(rid, mgr.tokens_of(rid) + 1 + arg % 3)
+        elif op == "truncate" and live:
+            rid = live[arg % len(live)]
+            if not mgr.is_suspended(rid) and mgr.table(rid).pages:
+                mgr.truncate(rid, arg % (mgr.tokens_of(rid) + 1))
+        elif op == "preempt" and live:
+            rid = live[arg % len(live)]
+            if not mgr.is_suspended(rid):
+                mgr.preempt(rid, "spill" if arg % 2 else "recompute")
+        elif op == "resume" and live:
+            rid = live[arg % len(live)]
+            if mgr.is_suspended(rid):
+                mgr.resume(rid)
+        elif op == "finish" and live:
+            rid = live[arg % len(live)]
+            t = mgr.table(rid)
+            gen = [2 ** 20 + rid * 64 + i
+                   for i in range(max(t.tokens - len(prompts[rid]), 0))]
+            tree.insert(prompts[rid] + gen, t.pages, n_tokens=t.tokens)
+            mgr.release(rid)
+            del prompts[rid]
+        elif op == "evict":
+            tree.evict(arg % 4)
+        _refcount_consistent(pool, tree,
+                             [mgr.table(r) for r in prompts])
+
+    for rid in list(prompts):
+        mgr.release(rid)
+    assert pool.alloc.used_pages == tree.n_pages
+    tree.release_all()
+    assert pool.alloc.used_pages == 0
+    assert pool.pages_in_use(DEVICE) == 0 and pool.pages_in_use(HOST) == 0
 
 
 # ----------------------------------------------------------------------------
