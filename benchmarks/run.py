@@ -21,6 +21,8 @@ SUITES = {
     "specdec": ("benchmarks.bench_specdec", "speculative vs AR decode"),
     "prefix": ("benchmarks.bench_prefix", "radix prefix cache + chunked "
                                           "prefill"),
+    "adaptation": ("benchmarks.bench_adaptation", "online memory adaptation "
+                                                  "vs static plan"),
 }
 
 

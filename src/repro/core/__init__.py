@@ -4,7 +4,8 @@ Reproduction (simulator): cost_model, offline_scheduler, online_planner,
 kv_transfer, pipeline_sim, baselines.
 TPU runtime: engine (interleaved pipeline under shard_map).
 """
-from repro.core.cost_model import CostEnv, Workload, Plan, DeviceAlloc  # noqa: F401
+from repro.core.cost_model import (CostEnv, Workload, ExecutionPlan,  # noqa: F401
+                                   StageAlloc, Plan, DeviceAlloc)
 from repro.core.offline_scheduler import allocate, ScheduleResult  # noqa: F401
 from repro.core.online_planner import OnlinePlanner  # noqa: F401
 from repro.core.kv_transfer import KVTransferProtocol  # noqa: F401

@@ -114,12 +114,17 @@ class Workload:
 
 
 # ============================================================================
-# Allocation plan (output of the offline scheduler, input to sim/engine)
+# ExecutionPlan (output of the offline scheduler, input to sim AND engine)
 # ============================================================================
 @dataclasses.dataclass
-class DeviceAlloc:
-    """Per-device allocation. Counts are *per segment* for offloaded layers
-    (the interleave repeats the same shape every segment, paper Fig. 6)."""
+class StageAlloc:
+    """Per-stage (= per-device) allocation. Counts are *per segment* for
+    offloaded layers (the interleave repeats the same shape every segment,
+    paper Fig. 6). One object serves both consumers: the cost model /
+    simulator price the block-granular fields; the engine reads the
+    whole-layer view (`k_res` / `k_off`) — a block-split layer streams as
+    a whole layer on the engine (the split is a bandwidth refinement the
+    simulator prices, not a separate execution mode)."""
     resident_total: int          # fully-resident layers (across all segments)
     off_full_seg: int = 0        # layers fully (re)loaded, per segment
     off_attn_only_seg: int = 0   # MLP resident, MHA loaded, per segment
@@ -145,16 +150,40 @@ class DeviceAlloc:
                 + self.load_bytes_seg(w)        # double-buffer: one segment live
                 + split_res)
 
+    # -- engine-facing whole-layer view ---------------------------------------
+    def k_res(self, n_seg: int) -> int:
+        """Resident layers per chunk (ceil: a remainder that doesn't divide
+        the segments evenly pads the grid — padded slots are zero/identity
+        layers, see engine.plan_layout)."""
+        return -(-self.resident_total // max(n_seg, 1))
+
+    @property
+    def k_off(self) -> int:
+        """Streamed layers per chunk (block-split layers stream whole)."""
+        return self.off_layers_seg()
+
 
 @dataclasses.dataclass
-class Plan:
+class ExecutionPlan:
+    """THE plan object: emitted by the offline scheduler, priced by the
+    cost model / simulator, executed by the InterleavedEngine.
+
+    A uniform plan (every stage identical — the homogeneous-TPU case) is
+    the degenerate instance built by `ExecutionPlan.uniform(...)`; the
+    engine's historical `UniformPlan(...)` constructor delegates here."""
     n_seg: int
-    devices: List[DeviceAlloc]
+    stages: List[StageAlloc]
     t_comp: float = 0.0
     t_comm: float = 0.0
     t_uncover: float = 0.0
     off_trim: int = 0           # padding overshoot when #Seg ∤ |L_left|
                                 # (cost terms stay conservative/padded)
+
+    # -- cost view -------------------------------------------------------------
+    @property
+    def devices(self) -> List[StageAlloc]:
+        """Historical alias (device == pipeline stage)."""
+        return self.stages
 
     @property
     def t_total(self) -> float:
@@ -162,7 +191,72 @@ class Plan:
 
     def layers_total(self) -> int:
         return sum(d.layers_total(self.n_seg)
-                   for d in self.devices) - self.off_trim
+                   for d in self.stages) - self.off_trim
+
+    # -- engine-facing geometry -------------------------------------------------
+    @property
+    def n_stage(self) -> int:
+        return len(self.stages)
+
+    @property
+    def n_chunks(self) -> int:
+        return self.n_seg * self.n_stage
+
+    @property
+    def k_res_list(self):
+        """Per-stage resident layers per chunk."""
+        return tuple(st.k_res(self.n_seg) for st in self.stages)
+
+    @property
+    def k_off_list(self):
+        """Per-stage streamed layers per chunk."""
+        return tuple(st.k_off for st in self.stages)
+
+    @property
+    def k_max(self) -> int:
+        """Largest chunk across stages — the padded scan length."""
+        return max(r + o for r, o in zip(self.k_res_list, self.k_off_list))
+
+    @property
+    def n_layers(self) -> int:
+        """Grid capacity (>= layers_total when resident counts don't divide
+        the segments; the overhang is zero/identity padding)."""
+        return self.n_seg * sum(r + o for r, o in
+                                zip(self.k_res_list, self.k_off_list))
+
+    @property
+    def is_uniform(self) -> bool:
+        return len({(st.resident_total, st.off_full_seg,
+                     st.off_attn_only_seg, st.off_mlp_only_seg)
+                    for st in self.stages}) <= 1
+
+    # -- uniform-plan scalar compat (dryrun / roofline / tests) -----------------
+    @property
+    def k_res(self) -> int:
+        assert self.is_uniform, "k_res is per-stage on heterogeneous plans"
+        return self.stages[0].k_res(self.n_seg)
+
+    @property
+    def k_off(self) -> int:
+        assert self.is_uniform, "k_off is per-stage on heterogeneous plans"
+        return self.stages[0].k_off
+
+    @property
+    def k(self) -> int:
+        return self.k_res + self.k_off
+
+    @classmethod
+    def uniform(cls, n_stage: int, n_seg: int, k_res: int,
+                k_off: int) -> "ExecutionPlan":
+        return cls(n_seg=n_seg,
+                   stages=[StageAlloc(resident_total=k_res * n_seg,
+                                      off_full_seg=k_off)
+                           for _ in range(n_stage)])
+
+
+# historical names (PR <= 4 API): one object now serves both consumers
+DeviceAlloc = StageAlloc
+Plan = ExecutionPlan
 
 
 # ============================================================================
@@ -189,24 +283,24 @@ class CostEnv:
                                     + self.net_latency)
 
     # -- Eq. 2: per-device overlap budget within one segment ------------------
-    def idle_seg(self, plan: Plan, i: int) -> float:
-        d = plan.devices[i]
+    def idle_seg(self, plan: ExecutionPlan, i: int) -> float:
+        d = plan.stages[i]
         own_nonoff = self.comp_layers(i, d.resident_total / plan.n_seg)
         others = sum(
-            self.comp_layers(j, plan.devices[j].layers_total(plan.n_seg)
+            self.comp_layers(j, plan.stages[j].layers_total(plan.n_seg)
                              / plan.n_seg)
-            for j in range(len(plan.devices)) if j != i)
+            for j in range(len(plan.stages)) if j != i)
         return own_nonoff + others + self.comm_seg()
 
     # -- Eq. 1: total latency of a plan ---------------------------------------
-    def evaluate(self, plan: Plan) -> Plan:
+    def evaluate(self, plan: ExecutionPlan) -> ExecutionPlan:
         w = self.work
         plan.t_comp = sum(
-            self.comp_layers(i, plan.devices[i].layers_total(plan.n_seg))
-            for i in range(len(plan.devices)))
+            self.comp_layers(i, plan.stages[i].layers_total(plan.n_seg))
+            for i in range(len(plan.stages)))
         plan.t_comm = plan.n_seg * self.comm_seg()
         unc = 0.0
-        for i, d in enumerate(plan.devices):
+        for i, d in enumerate(plan.stages):
             load = self.load_time(i, d.load_bytes_seg(w))
             unc = max(unc, max(load - self.idle_seg(plan, i), 0.0))
         plan.t_uncover = plan.n_seg * unc
@@ -216,8 +310,8 @@ class CostEnv:
     def kv_reserve_bytes(self, layers_on_dev: int, n_tokens: int) -> float:
         return layers_on_dev * n_tokens * self.work.kv_bytes_per_token_layer()
 
-    def mem_ok(self, plan: Plan, n_tokens: int) -> bool:
-        for i, d in enumerate(plan.devices):
+    def mem_ok(self, plan: ExecutionPlan, n_tokens: int) -> bool:
+        for i, d in enumerate(plan.stages):
             used = (d.resident_bytes(self.work, plan.n_seg)
                     + self.kv_reserve_bytes(d.layers_total(plan.n_seg),
                                             n_tokens))

@@ -18,12 +18,17 @@ a TPU pod slice:
                           weights, so XLA's async collectives overlap it with
                           compute — the paper's overlap claim, structural.
 
-Layer placement (uniform — TPU stages are homogeneous; the heterogeneous
-path lives in the offline scheduler + simulator): the L layers are cut into
-C = n_seg·n_stage contiguous chunks of k = k_res + k_off layers; chunk c
-runs on stage c mod n_stage during segment c // n_stage. Within a chunk the
-first k_res layers are resident, the last k_off stream in per segment —
-"positions consistent across segments" (paper §IV-A).
+Layer placement (one ExecutionPlan everywhere — DESIGN.md §13): the L
+layers are cut into C = n_seg·n_stage contiguous chunks; chunk c runs on
+stage c mod n_stage during segment c // n_stage and holds that stage's
+k_d = k_res_d + k_off_d layers (per-stage splits may differ — the offline
+scheduler's heterogeneous allocation executes directly; a uniform plan is
+the degenerate case). Within a chunk the first k_res_d layers are
+resident, the last k_off_d stream in per segment — "positions consistent
+across segments" (paper §IV-A). Chunks are padded to the caps and dead
+slots masked in the scan, so ONE compiled step serves every stage; the
+resident/streamed boundary is a dynamic input, which is what lets
+retier() move layers between tiers at runtime without recompiling.
 
 Decode schedule: micro-batch m computes chunk c at slot τ = m + c
 (sporadic: n_mb = 1; bursty: n_mb = n_stage). The slot loop is a lax.scan,
@@ -47,6 +52,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import PARTIAL_AUTO_COLLECTIVES_OK, shard_map
 
 from repro.configs.base import Family, ModelConfig
+from repro.core.cost_model import ExecutionPlan, StageAlloc  # noqa: F401
 from repro.kvcache import BlockTable, PagePool, PagedKVConfig
 from repro.models import model as M
 from repro.models import spec as pspec
@@ -60,34 +66,26 @@ PER_LAYER_CACHE_KEYS = frozenset({"k", "v", "rwkv_state", "last_tm",
 
 
 # ============================================================================
-# Uniform plan (TPU homogeneous stages)
+# ExecutionPlan (core/cost_model.py) is THE plan object; UniformPlan is the
+# degenerate homogeneous-stage constructor kept for the historical API.
 # ============================================================================
-@dataclasses.dataclass(frozen=True)
-class UniformPlan:
-    n_stage: int
-    n_seg: int
-    k_res: int                  # resident layers per chunk
-    k_off: int                  # streamed layers per chunk
-
-    @property
-    def k(self) -> int:
-        return self.k_res + self.k_off
-
-    @property
-    def n_chunks(self) -> int:
-        return self.n_seg * self.n_stage
-
-    @property
-    def n_layers(self) -> int:
-        return self.n_chunks * self.k
+def UniformPlan(n_stage: int, n_seg: int, k_res: int,
+                k_off: int) -> ExecutionPlan:
+    """Homogeneous-stage plan (every stage k_res resident + k_off streamed
+    per chunk). Delegates to ExecutionPlan.uniform — the engine, simulator
+    and offline scheduler all consume the same object."""
+    return ExecutionPlan.uniform(n_stage, n_seg, k_res, k_off)
 
 
 def plan_for(cfg: ModelConfig, n_stage: int, *, hbm_frac_for_weights: float,
-             hbm_bytes: float = 16e9) -> UniformPlan:
+             hbm_bytes: float = 16e9) -> ExecutionPlan:
     """Pick (n_seg, k_res, k_off) so resident weights fit the per-stage HBM
-    budget. Layers that don't divide evenly are padded into the last chunk
-    by the caller (layer counts in the assigned configs all factor cleanly
-    for n_stage in {4, 8, 16} after segment choice — see tests)."""
+    budget. Layers that don't divide evenly fall through to the 2-segment
+    fallback, whose chunk is padded (padded slots are zero/identity
+    layers); k_res + k_off == ceil(L / n_chunks) by construction, so the
+    plan always covers cfg.n_layers AND keeps resident bytes (n_seg ·
+    k_res · l_bytes per stage) inside the budget (regression:
+    test_plan_for_covers_and_fits_budget)."""
     budget = hbm_bytes * hbm_frac_for_weights
     l_bytes = cfg.layer_params() * 2
     total_per_stage = cfg.n_layers / n_stage * l_bytes
@@ -105,11 +103,14 @@ def plan_for(cfg: ModelConfig, n_stage: int, *, hbm_frac_for_weights: float,
         k_off = max(math.ceil(off_layers / c), 1)
         if k_off < k:
             return UniformPlan(n_stage, n_seg, k - k_off, k_off)
-    # fallback: 2 segments, all layers streamed beyond one resident
+    # fallback: 2 segments; resident share sized by the BUDGET (the old
+    # fallback derived k_res from floor-divided off_layers, which
+    # under-counts the streamed remainder when layer counts don't factor
+    # cleanly and could claim far more resident bytes than the stage holds)
     c = 2 * n_stage
     k = math.ceil(cfg.n_layers / c)
-    return UniformPlan(n_stage, 2, max(k - max(off_layers // c, 1), 0),
-                       min(max(off_layers // c, 1), k))
+    k_res = max(min(int(budget // l_bytes) // 2, k - 1), 0)
+    return UniformPlan(n_stage, 2, k_res, k - k_res)
 
 
 # ============================================================================
@@ -135,23 +136,70 @@ def stage_shard_dim(per_layer_shape, n_stage: int):
     return best
 
 
-def split_layer_stack(stacked, plan: UniformPlan):
+def plan_layout(plan: ExecutionPlan, headroom: int = 0, k_res_live=None):
+    """Index maps from the flat (execution-order) layer stack into the
+    padded per-stage grid.
+
+    Returns (res_ids, off_ids): int32 arrays of shapes
+    (n_seg, n_stage, k_res_cap) and (n_seg, n_stage, headroom + k_off_cap)
+    whose entries are flat layer indices, or the sentinel `plan.n_layers`
+    (one past the real stack — a guaranteed-zero identity row) for dead
+    padding slots. Chunk c = s·n_stage + d holds the k_d = k_res_d +
+    k_off_d layers at its cumulative offset: residents first, then the
+    streamed tail — same execution order as the flat stack, whatever each
+    stage's split.
+
+    `k_res_live` (per-stage, <= build-time k_res) applies the retier
+    layout: a demoted resident slot j moves its layer id into off-store
+    headroom slot `headroom - (k_res_d - j)`, i.e. demotions fill the
+    headroom right-to-left so the streamed tier preserves layer order
+    (demoted residents run immediately before the originally-streamed
+    tail)."""
+    kr, ko = plan.k_res_list, plan.k_off_list
+    n_seg, S = plan.n_seg, plan.n_stage
+    kr_cap = max(kr) if kr else 0
+    ko_cap = headroom + (max(ko) if ko else 0)
+    live = list(kr) if k_res_live is None else [int(x) for x in k_res_live]
+    assert all(0 <= lv <= k and k - lv <= headroom
+               for lv, k in zip(live, kr)), (live, kr, headroom)
+    dead = plan.n_layers
+    res_ids = np.full((n_seg, S, max(kr_cap, 1)), dead, np.int32)
+    off_ids = np.full((n_seg, S, max(ko_cap, 1)), dead, np.int32)
+    flat = 0
+    for c in range(n_seg * S):
+        s, d = c // S, c % S
+        for j in range(kr[d]):
+            if j < live[d]:
+                res_ids[s, d, j] = flat + j
+            else:
+                off_ids[s, d, headroom - (kr[d] - j)] = flat + j
+        for j in range(ko[d]):
+            off_ids[s, d, headroom + j] = flat + kr[d] + j
+        flat += kr[d] + ko[d]
+    return res_ids[:, :, :kr_cap], off_ids[:, :, :ko_cap]
+
+
+def split_layer_stack(stacked, plan: ExecutionPlan, *, headroom: int = 0,
+                      k_res_live=None):
     """(L, ...) pytree -> (resident, offloaded).
 
-    resident:  (n_seg, n_stage, k_res, *dims) — stage-sharded on dim 1.
-    offloaded: (n_seg, n_stage, k_off, *dims) — stage-sharded on weight dim
-               `stage_shard_dim(dims) + 3` (or replicated when None), so
-               streamed layers stay 'model'-sharded on their other dims
-               under GSPMD the whole time — one chip never materializes a
-               full MoE layer (kimi-k2: 34 GB/layer).
+    resident:  (n_seg, n_stage, k_res_cap, *dims) — stage-sharded on dim 1.
+    offloaded: (n_seg, n_stage, headroom + k_off_cap, *dims) — stage-sharded
+               on weight dim `stage_shard_dim(dims) + 3` (or replicated when
+               None), so streamed layers stay 'model'-sharded on their other
+               dims under GSPMD the whole time — one chip never materializes
+               a full MoE layer (kimi-k2: 34 GB/layer).
+
+    Stages whose chunk is smaller than the cap get zero rows — identity
+    layers through the residual stream, masked dead in the slot body. A
+    uniform plan with headroom 0 reproduces the historical reshape split
+    exactly.
     """
+    res_ids, off_ids = plan_layout(plan, headroom, k_res_live)
+
     def do(leaf):
-        leaf = _pad_layers(leaf, plan.n_layers)
-        shp = leaf.shape[1:]
-        x = leaf.reshape(plan.n_seg, plan.n_stage, plan.k, *shp)
-        res = x[:, :, :plan.k_res]
-        off = x[:, :, plan.k_res:]
-        return res, off
+        leaf = _pad_layers(leaf, plan.n_layers + 1)   # +1: the identity row
+        return leaf[res_ids], leaf[off_ids]
     pairs = jax.tree.map(do, stacked)
     res = jax.tree.map(lambda p: p[0], pairs,
                        is_leaf=lambda x: isinstance(x, tuple))
@@ -168,12 +216,13 @@ class InterleavedEngine:
     pipeline-stage axis; remaining mesh axes — 'model', 'pod' — stay under
     GSPMD auto-sharding, giving tensor parallelism inside each stage)."""
 
-    def __init__(self, cfg: ModelConfig, mesh: Mesh, plan: UniformPlan, *,
+    def __init__(self, cfg: ModelConfig, mesh: Mesh, plan: ExecutionPlan, *,
                  stage_axis: str = "data", n_mb: int = 1, mb: int = 1,
                  max_len: int = 256, long_mode: bool = False,
                  prefetch: bool = True, impl: str = "ref",
                  enc_len: int = 0, fetch_mode: str = "step",
-                 paged: bool = False, page_size: int = 64):
+                 paged: bool = False, page_size: int = 64,
+                 retier_headroom: int = 0):
         """fetch_mode:
         'slot' — paper-literal per-segment streaming: an all_to_all inside
                  every pipeline slot re-fetches the active chunk's layers.
@@ -197,7 +246,20 @@ class InterleavedEngine:
         self.prefetch = prefetch
         self.impl = impl
         self.enc_len = enc_len          # ENCDEC: encoder runs outside
-        self.fetch_mode = fetch_mode if plan.k_off else "slot"
+        # per-stage tier geometry (DESIGN.md §13): every stage's chunk is
+        # padded to the caps so ONE compiled step serves heterogeneous
+        # splits; dead slots are zero/identity layers masked in the scan.
+        # retier_headroom adds per-stage streamed-store slots so resident
+        # layers can demote into the streamed tier at runtime without
+        # recompiling (the tier boundary `k_res_live` is a dynamic input).
+        self.k_res_b = plan.k_res_list
+        self.k_off_b = plan.k_off_list
+        self.k_res_cap = max(self.k_res_b) if self.k_res_b else 0
+        self.H = max(int(retier_headroom), 0)
+        self.k_off_cap = self.H + (max(self.k_off_b) if self.k_off_b else 0)
+        self.K = self.k_res_cap + self.k_off_cap
+        self.k_res_live = list(self.k_res_b)      # host-side tier boundary
+        self.fetch_mode = fetch_mode if self.k_off_cap else "slot"
         if cfg.family == Family.SSM and not PARTIAL_AUTO_COLLECTIVES_OK:
             # Old XLA's partitioner fatally asserts compiling the RWKV
             # family's step-fetch program (manual-subgroup check) even with
@@ -224,6 +286,7 @@ class InterleavedEngine:
                                 for _ in range(n_mb * mb)]
             self._paged_pos = 0        # host mirror of glob["pos"]
         self._stage_ids = jnp.arange(plan.n_stage, dtype=jnp.int32)
+        self._refresh_tier_inputs()
         self._fetch = self._build_fetch() if self.fetch_mode == "step" \
             else None
         # compiled steps by query length: 1 = autoregressive decode,
@@ -232,15 +295,54 @@ class InterleavedEngine:
         self._steps: Dict[int, Any] = {1: self._build_step(1)}
         self._step = self._steps[1]
 
+    # -- tier boundary (retier) inputs -----------------------------------------
+    def _refresh_tier_inputs(self) -> None:
+        """(Re)build the layout-dependent step inputs from the live tier
+        boundary: the gather maps for state construction, the per-slot
+        window table (a layer's window moves with it across tiers), and
+        the dynamic `k_res_live` array the compiled step masks against."""
+        self._res_ids, self._off_ids = plan_layout(self.plan, self.H,
+                                                   self.k_res_live)
+        self._cache_ids = np.concatenate([self._res_ids, self._off_ids],
+                                         axis=2)        # (n_seg, n_stage, K)
+        wins = M.layer_windows(self.cfg, self.plan.n_layers + 1,
+                               self.long_mode)
+        tab = jnp.asarray(wins)[jnp.asarray(self._cache_ids)]
+        tab = jnp.transpose(tab, (1, 0, 2))             # (n_stage, n_seg, K)
+        # real-layer mask: grid-overhang slots (ceil-rounded residents,
+        # plan capacity past cfg.n_layers) hold zero rows like the dead
+        # sentinel does — mask them structurally too, don't rely on
+        # zero-weight layers being numerical no-ops
+        real = np.transpose(self._cache_ids < self.cfg.n_layers, (1, 0, 2))
+        sh = NamedSharding(self.mesh, P(self.axis))
+        self._win_dev = jax.device_put(tab.astype(jnp.int32), sh)
+        self._live_dev = jax.device_put(jnp.asarray(real), sh)
+        self._kl_dev = jax.device_put(
+            jnp.asarray(self.k_res_live, jnp.int32), sh)
+
+    def _gather_layer_cache(self, v):
+        """Model-layout (L, B, ...) cache leaf -> per-stage grid
+        (n_seg, n_stage, K, n_mb, mb, ...), routing each layer's rows to
+        its CURRENT slot (resident or streamed/demoted)."""
+        x = _pad_layers(v, self.plan.n_layers + 1)
+        x = x[self._cache_ids]            # (n_seg, n_stage, K, B, ...)
+        shp = x.shape[4:]
+        return x.reshape(self.plan.n_seg, self.plan.n_stage, self.K,
+                         self.n_mb, self.mb, *shp)
+
     # -- state construction ----------------------------------------------------
     def init_state(self, params) -> Dict[str, Any]:
         """params: the model's usual pytree (layers stacked on L). Returns the
-        engine state with resident/offloaded splits + per-stage caches."""
+        engine state with resident/offloaded splits + per-stage caches.
+        Respects the live tier boundary: layers demoted by earlier retier
+        calls land in the streamed store."""
         cfg, plan = self.cfg, self.plan
         assert "dense_layers" not in params, \
             "engine expects a homogeneous stack; fold dense layers via " \
             "configs with first_dense_layers=0 or pad (see tests)"
-        res, off = split_layer_stack(params["layers"], plan)
+        res, off = split_layer_stack(params["layers"], plan,
+                                     headroom=self.H,
+                                     k_res_live=self.k_res_live)
         cache = M.init_cache(cfg, self.n_mb * self.mb, self.max_len,
                              self.long_mode,
                              enc_out=(jnp.zeros((self.n_mb * self.mb,
@@ -253,13 +355,7 @@ class InterleavedEngine:
             if k == "pos":
                 continue
             if k in PER_LAYER_CACHE_KEYS:
-                x = _pad_layers(v, plan.n_layers)
-                shp = x.shape[1:]
-                # (L, B, ...) -> (n_seg, n_stage, k, n_mb, mb, ...)
-                x = x.reshape(plan.n_seg, plan.n_stage, plan.k, *shp)
-                x = x.reshape(plan.n_seg, plan.n_stage, plan.k,
-                              self.n_mb, self.mb, *shp[1:])
-                per_layer[k] = x
+                per_layer[k] = self._gather_layer_cache(v)
             else:
                 glob[k] = v                      # pos_ids etc. (global)
         others = {k: v for k, v in params.items() if k != "layers"}
@@ -340,7 +436,7 @@ class InterleavedEngine:
                            self.long_mode, self.enc_len)
         cache_sh = {}
         for k in self._cache_keys():
-            shape = (self.plan.n_seg, self.plan.n_stage, self.plan.k,
+            shape = (self.plan.n_seg, self.plan.n_stage, self.K,
                      self.n_mb, self.mb) + cs[k].shape[2:]
             cache_sh[k] = NamedSharding(mesh, self._cache_pspec(shape))
         shared_sh = jax.tree.map(
@@ -374,8 +470,8 @@ class InterleavedEngine:
 
     # -- step-granular weight restore (fetch_mode="step") ------------------------
     def _fetched_pspec(self, per_layer_shape, per_layer_axes) -> P:
-        """(n_stage, n_seg, k_off, *dims): stage dim manual, model dims kept
-        — except the stage-store dim, which arrives fully merged."""
+        """(n_stage, n_seg, k_off_cap, *dims): stage dim manual, model dims
+        kept — except the stage-store dim, which arrives fully merged."""
         sdim = stage_shard_dim(per_layer_shape, self.plan.n_stage)
         parts: list = [self.axis, None, None] + [None] * len(per_layer_shape)
         for i, (d, la) in enumerate(zip(per_layer_shape, per_layer_axes)):
@@ -389,7 +485,7 @@ class InterleavedEngine:
         then never forces the partitioner to materialize un-sharded slabs
         (the failure mode of in-scan fetches — EXPERIMENTS.md §Perf)."""
         plan = self.plan
-        n_stage, n_seg, k_off = plan.n_stage, plan.n_seg, plan.k_off
+        n_stage = plan.n_stage
         ax = self.axis
         mesh = self.mesh
         specs = M.build_param_specs(self.cfg)["layers"]
@@ -445,8 +541,13 @@ class InterleavedEngine:
         one pipeline traversal (one weight-stream) scores all of them;
         logits come back per position (DESIGN.md §11)."""
         cfg, plan = self.cfg, self.plan
-        n_stage, n_seg, k, k_res, k_off = (plan.n_stage, plan.n_seg, plan.k,
-                                           plan.k_res, plan.k_off)
+        n_stage, n_seg = plan.n_stage, plan.n_seg
+        k_res_cap, k_off_cap, H, K = (self.k_res_cap, self.k_off_cap,
+                                      self.H, self.K)
+        # per-stage build-time tiers, baked as constants the traced stage
+        # id selects from; the LIVE boundary arrives as the kl input
+        KR_B = jnp.asarray(self.k_res_b, jnp.int32)
+        KO_B = jnp.asarray(self.k_off_b, jnp.int32)
         C = plan.n_chunks
         n_mb, mb = self.n_mb, self.mb
         n_slots = C + n_mb - 1
@@ -470,7 +571,7 @@ class InterleavedEngine:
             with a psum of offset-scattered shards (compat: partial-auto
             collectives other than psum fatally assert in the partitioner).
             """
-            if k_off == 0:
+            if k_off_cap == 0:
                 return None
             e = jnp.arange(n_stage)
             m_e = (tau - e) % n_stage if n_mb > 1 else jnp.zeros_like(e)
@@ -525,12 +626,14 @@ class InterleavedEngine:
             return jax.lax.dynamic_index_in_dim(buf, d, 0, False)
 
         def chunk_params(res_local, fetched, s_d):
-            """Assemble the k layers of the active chunk on this stage."""
+            """Assemble the K (padded) layers of the active chunk on this
+            stage: resident cap first, then the streamed store (headroom +
+            streamed tail) — dead slots carry zero/identity layers."""
             res_s = jax.tree.map(
                 lambda r: jax.lax.dynamic_index_in_dim(r[:, 0], s_d, 0,
                                                        keepdims=False),
-                res_local)                        # (k_res, ...)
-            if k_off == 0:
+                res_local)                        # (k_res_cap, ...)
+            if k_off_cap == 0:
                 return res_s
             return jax.tree.map(
                 lambda r, f: jnp.concatenate([r, f.astype(r.dtype)], axis=0),
@@ -539,17 +642,34 @@ class InterleavedEngine:
         step_mode = self.fetch_mode == "step"
 
         def step_fn(resident, offload, shared, cache, glob, tokens,
-                    stage_id):
+                    stage_id, kl, win_tab, real_tab):
             """One autoregressive token for all n_mb micro-batches.
             tokens: (n_mb, mb, 1) int32 (replicated). Locals per stage:
-            resident (n_seg, 1, k_res, ...); cache (n_seg, 1, k, n_mb,
+            resident (n_seg, 1, k_res_cap, ...); cache (n_seg, 1, K, n_mb,
             mb, ...); offload: fetch_mode='slot' -> the sharded store,
-            'step' -> the per-stage restored buffer (1, n_seg, k_off, ...).
-            stage_id: (1,) int32, stage-sharded iota — the stage's own
-            index. Passed in rather than jax.lax.axis_index(ax): in a
+            'step' -> the per-stage restored buffer (1, n_seg, k_off_cap,
+            ...). stage_id: (1,) int32, stage-sharded iota — the stage's
+            own index. Passed in rather than jax.lax.axis_index(ax): in a
             partial-auto shard_map old XLA lowers axis_index to a
-            PartitionId op its SPMD partitioner rejects."""
+            PartitionId op its SPMD partitioner rejects.
+            kl: (1,) int32 — the stage's LIVE resident count (the dynamic
+            tier boundary; retier changes it without recompiling).
+            win_tab: (1, n_seg, K) int32 — per-slot attention windows for
+            the stage's CURRENT layout (a layer's window moves with it).
+            real_tab: (1, n_seg, K) bool — slot holds a real model layer
+            (False on dead padding AND grid overhang past cfg.n_layers)."""
             d = stage_id[0]
+            # dead-slot mask (DESIGN.md §13): resident slots past the live
+            # boundary, unfilled headroom, and cap padding are identity —
+            # zero weights make them so numerically, the mask makes it
+            # structural (and exact for every family)
+            m_dem = KR_B[d] - kl[0]
+            jidx = jnp.arange(K)
+            live_d = (jidx < kl[0]) \
+                | ((jidx >= k_res_cap + H - m_dem)
+                   & (jidx < k_res_cap + H + KO_B[d]))
+            win_d = win_tab[0]                  # (n_seg, K)
+            real_d = real_tab[0]                # (n_seg, K) bool
             pos = glob["pos"]
             pos_ids = glob.get("pos_ids")
             slot = jnp.int32(0)
@@ -587,7 +707,7 @@ class InterleavedEngine:
                 # interleave: issue next slot's weight fetch BEFORE compute
                 if step_mode:
                     nxt = None
-                    cur = None if k_off == 0 else jax.tree.map(
+                    cur = None if k_off_cap == 0 else jax.tree.map(
                         lambda w: jax.lax.dynamic_index_in_dim(
                             w[0], s_d, 0, False), offload)
                 else:
@@ -610,17 +730,29 @@ class InterleavedEngine:
                     v, jnp.clip(m_d, 0, n_mb - 1), 1, keepdims=False)
                     for kk, v in cache_chunk.items()}   # (k, mb, ...)
 
-                layer_off = c_d * k
                 moe_mesh = self.mesh if (cfg.family == Family.MOE
                                          and "model" in self.mesh.shape) \
                     else None
-                body = M._decode_body(cfg, moe_mesh, impl,
-                                      cfg.family == Family.MOE, pos, slot,
-                                      pos_ids, enc_len=self.enc_len,
-                                      moe_mode="auto", q_slots=q_slots)
+                inner = M._decode_body(cfg, moe_mesh, impl,
+                                       cfg.family == Family.MOE, pos, slot,
+                                       pos_ids, enc_len=self.enc_len,
+                                       moe_mode="auto", q_slots=q_slots)
+
+                def body(carry, xs_l):
+                    # dead slots are identity: activation (and MoE aux)
+                    # pass through untouched; their cache writes land in
+                    # rows nothing ever reads
+                    x_prev, aux_prev = carry
+                    (x_new, aux_new), ys_l = inner(carry, xs_l)
+                    alive = xs_l["live"]
+                    return (jnp.where(alive, x_new, x_prev),
+                            jnp.where(alive, aux_new, aux_prev)), ys_l
+
                 xs = {"p": p_chunk,
-                      "window": M.layer_windows(cfg, k, self.long_mode,
-                                                layer_off)}
+                      "window": jax.lax.dynamic_index_in_dim(win_d, s_d, 0,
+                                                             False),
+                      "live": live_d & jax.lax.dynamic_index_in_dim(
+                          real_d, s_d, 0, False)}
                 xs.update(cache_mb)
                 (x_out, _), ys = jax.lax.scan(body, (x_in, jnp.float32(0.)),
                                               xs)
@@ -684,7 +816,7 @@ class InterleavedEngine:
                     jax.tree.map(lambda _: P(), self._shared_proto()),
                     {kk: P(None, ax) for kk in self._cache_keys()},
                     {kk: P() for kk in self._glob_keys()},
-                    P(), P(ax))
+                    P(), P(ax), P(ax), P(ax), P(ax))
         out_specs = (P(), {kk: P(None, ax) for kk in self._cache_keys()},
                      {kk: P() for kk in self._glob_keys()}, P(ax))
         fn = shard_map(step_fn, mesh=self.mesh, in_specs=in_specs,
@@ -757,11 +889,7 @@ class InterleavedEngine:
                 if self.paged and kk in ("k", "v"):
                     v = jnp.asarray(self._through_pages(v, paged_ctx),
                                     v.dtype)
-                x = _pad_layers(v, plan.n_layers)
-                shp = x.shape[1:]
-                x = x.reshape(plan.n_seg, plan.n_stage, plan.k,
-                              self.n_mb, self.mb, *shp[1:])
-                new_cache[kk] = x
+                new_cache[kk] = self._gather_layer_cache(v)
             else:
                 glob[kk] = v
         out = dict(state)
@@ -790,7 +918,8 @@ class InterleavedEngine:
             off = self._defer_model_sharding(self._fetch(off))
         logits, cache, glob, dbg = self._step(
             state["resident"], off, state["shared"],
-            state["cache"], state["glob"], t, self._stage_ids)
+            state["cache"], state["glob"], t, self._stage_ids,
+            self._kl_dev, self._win_dev, self._live_dev)
         new_state = dict(state)
         new_state["cache"] = cache
         new_state["glob"] = glob
@@ -846,7 +975,8 @@ class InterleavedEngine:
             off = self._defer_model_sharding(self._fetch(off))
         logits, cache, glob, dbg = self._steps[q_len](
             state["resident"], off, state["shared"],
-            state["cache"], state["glob"], t, self._stage_ids)
+            state["cache"], state["glob"], t, self._stage_ids,
+            self._kl_dev, self._win_dev, self._live_dev)
         new_state = dict(state)
         new_state["cache"] = cache
         new_state["glob"] = glob
@@ -920,23 +1050,130 @@ class InterleavedEngine:
             if live:
                 self.extend_slot(slot, pos)
 
+    # -- online memory adaptation (DESIGN.md §13) --------------------------------
+    def demoted(self, stage: int) -> int:
+        """Resident slots of `stage` currently demoted into the streamed
+        tier."""
+        return self.k_res_b[stage] - self.k_res_live[stage]
+
+    def demote_capacity(self, stage: int) -> int:
+        """How many more resident slots `stage` can demote (bounded by its
+        build-time residents and the streamed-store headroom)."""
+        return min(self.k_res_b[stage], self.H) - self.demoted(stage)
+
+    def slot_hbm_bytes(self) -> float:
+        """HBM one demoted resident slot returns: the slot holds one layer
+        per segment, and the streamed tier keeps a one-layer load buffer —
+        Eq. 7's (#Seg − 1) factor (n_seg == 1 degenerates to the single
+        copy)."""
+        return max(self.plan.n_seg - 1, 1) * self.cfg.layer_params() * 2.0
+
+    def retier_stats(self) -> Dict[str, Any]:
+        return {"k_res_build": list(self.k_res_b),
+                "k_res_live": list(self.k_res_live),
+                "demoted": [self.demoted(d)
+                            for d in range(self.plan.n_stage)]}
+
+    def retier(self, state, stage: int, delta: int):
+        """Move `delta` resident layer slots of `stage` across the tier
+        boundary on the LIVE pipeline (positive: demote resident ->
+        streamed, negative: promote back). No recompilation: the compiled
+        step's shapes are fixed at the caps; the boundary is the dynamic
+        `k_res_live` input, and demotions fill the streamed store's
+        headroom right-to-left so layer execution order is preserved.
+
+        Per unit move: the slot's weights are copied into (or back from)
+        the streamed store, and its KV/state cache rows move to the slot
+        the layer now occupies — so a mid-stream retier changes no emitted
+        token (test_engine_hetero). The vacated HBM (slot_hbm_bytes() per
+        demotion) is returned to the caller for crediting to the serving
+        KV page pool; on the statically-shaped TPU mapping this is an
+        accounting transfer, priced for real by the simulator.
+
+        With state=None only the tier counters move (between serving
+        epochs, before init_state materializes a state — init_state then
+        builds the demoted layout directly).
+
+        Returns (new_state, freed_bytes); freed_bytes < 0 on promotion.
+        """
+        if delta == 0:
+            return state, 0.0
+        assert self.H > 0 or delta < 0, \
+            "retier needs retier_headroom > 0 at engine build"
+        live = state is not None
+        res = state["resident"] if live else None
+        off = state["offload"] if live else None
+        cache = dict(state["cache"]) if live else None
+        kr_b = self.k_res_b[stage]
+        freed = 0.0
+        moves = 0
+        for _ in range(abs(delta)):
+            if delta > 0:
+                if self.k_res_live[stage] <= 0 \
+                        or self.demote_capacity(stage) <= 0:
+                    break
+                j = self.k_res_live[stage] - 1
+                h = self.H - (kr_b - j)
+                if live:
+                    w_mv = jax.tree.map(lambda r: r[:, stage, j], res)
+                    off = jax.tree.map(
+                        lambda o, wv: o.at[:, stage, h]
+                        .set(wv.astype(o.dtype)), off, w_mv)
+                    cache = {kk: v.at[:, stage, self.k_res_cap + h]
+                             .set(v[:, stage, j]) for kk, v in cache.items()}
+                self.k_res_live[stage] = j
+                freed += self.slot_hbm_bytes()
+            else:
+                if self.k_res_live[stage] >= kr_b:
+                    break
+                j = self.k_res_live[stage]
+                h = self.H - (kr_b - j)
+                if live:
+                    w_mv = jax.tree.map(lambda o: o[:, stage, h], off)
+                    res = jax.tree.map(
+                        lambda r, wv: r.at[:, stage, j]
+                        .set(wv.astype(r.dtype)), res, w_mv)
+                    cache = {kk: v.at[:, stage, j]
+                             .set(v[:, stage, self.k_res_cap + h])
+                             for kk, v in cache.items()}
+                self.k_res_live[stage] = j + 1
+                freed -= self.slot_hbm_bytes()
+            moves += 1
+        if not moves:
+            return state, 0.0
+        self._refresh_tier_inputs()
+        if not live:
+            return None, freed
+        sh = self.state_shardings()
+        new_state = dict(state)
+        new_state["resident"] = jax.device_put(res, sh["resident"])
+        new_state["offload"] = jax.device_put(off, sh["offload"])
+        new_state["cache"] = jax.device_put(cache, sh["cache"])
+        return new_state, freed
+
     def lower_step(self):
         """For the dry-run: lower the full serve_step (restore + pipeline)
         without materializing state."""
         shapes = self._abstract_state()
         t = jax.ShapeDtypeStruct((self.n_mb, self.mb, 1), jnp.int32)
         sid = jax.ShapeDtypeStruct((self.plan.n_stage,), jnp.int32)
+        kl = jax.ShapeDtypeStruct((self.plan.n_stage,), jnp.int32)
+        win = jax.ShapeDtypeStruct(
+            (self.plan.n_stage, self.plan.n_seg, self.K), jnp.int32)
+        real = jax.ShapeDtypeStruct(
+            (self.plan.n_stage, self.plan.n_seg, self.K), jnp.bool_)
         if self.fetch_mode == "step":
-            def full(res, off, shared, cache, glob, tokens, stage_id):
+            def full(res, off, shared, cache, glob, tokens, stage_id,
+                     kl_in, win_in, real_in):
                 w = self._fetch(off)
                 return self._step(res, w, shared, cache, glob, tokens,
-                                  stage_id)
+                                  stage_id, kl_in, win_in, real_in)
             return jax.jit(full, donate_argnums=(3,)).lower(
                 shapes["resident"], shapes["offload"], shapes["shared"],
-                shapes["cache"], shapes["glob"], t, sid)
+                shapes["cache"], shapes["glob"], t, sid, kl, win, real)
         return self._step.lower(
             shapes["resident"], shapes["offload"], shapes["shared"],
-            shapes["cache"], shapes["glob"], t, sid)
+            shapes["cache"], shapes["glob"], t, sid, kl, win, real)
 
     def _abstract_state(self):
         cfg, plan = self.cfg, self.plan
@@ -944,12 +1181,12 @@ class InterleavedEngine:
         sh = self.state_shardings()
 
         def res_shape(s):
-            per = (plan.n_seg, plan.n_stage, plan.k_res) + s.shape[1:]
+            per = (plan.n_seg, plan.n_stage, self.k_res_cap) + s.shape[1:]
             return jax.ShapeDtypeStruct(per, s.dtype)
 
         def off_shape(s):
             return jax.ShapeDtypeStruct(
-                (plan.n_seg, plan.n_stage, plan.k_off) + s.shape[1:],
+                (plan.n_seg, plan.n_stage, self.k_off_cap) + s.shape[1:],
                 s.dtype)
 
         layer_shapes = pspec.shapes(specs["layers"])
@@ -968,7 +1205,7 @@ class InterleavedEngine:
         for kk, v in cs.items():
             shp = v.shape
             if kk in PER_LAYER_CACHE_KEYS:
-                per = (plan.n_seg, plan.n_stage, plan.k, self.n_mb,
+                per = (plan.n_seg, plan.n_stage, self.K, self.n_mb,
                        self.mb) + shp[2:]
                 cache[kk] = jax.ShapeDtypeStruct(per, v.dtype)
             else:

@@ -21,7 +21,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional
 
-from repro.core.cost_model import CostEnv, Plan
+from repro.core.cost_model import CostEnv, ExecutionPlan
 from repro.core.online_planner import OnlinePlanner
 
 
@@ -34,7 +34,7 @@ class TransferState:
 
 
 class KVTransferProtocol:
-    def __init__(self, env: CostEnv, plan: Plan, planner: OnlinePlanner,
+    def __init__(self, env: CostEnv, plan: ExecutionPlan, planner: OnlinePlanner,
                  *, n_ts: int = 16):
         self.env = env
         self.plan = plan
@@ -45,7 +45,7 @@ class KVTransferProtocol:
 
     # -- Fig. 10: pair low-threshold devices with high-threshold targets ------
     def _assign_targets(self) -> List[TransferState]:
-        D = len(self.plan.devices)
+        D = len(self.plan.stages)
         thresholds = []
         for i in range(D):
             t = self.planner.next_threshold(i)
@@ -71,7 +71,7 @@ class KVTransferProtocol:
         st = self.states[i]
         if st.target is None:
             return 0
-        d = self.plan.devices[i]
+        d = self.plan.stages[i]
         w = self.env.work
         load = self.env.load_time(
             i, d.load_bytes_seg(w) + self.planner.extra_load_bytes_seg(i))

@@ -27,14 +27,14 @@ import dataclasses
 import math
 from typing import List, Optional, Tuple
 
-from repro.core.cost_model import CostEnv, DeviceAlloc, Plan
+from repro.core.cost_model import CostEnv, ExecutionPlan, StageAlloc
 
 INF = float("inf")
 
 
 @dataclasses.dataclass
 class ScheduleResult:
-    plan: Optional[Plan]
+    plan: Optional[ExecutionPlan]
     feasible: bool
     reason: str = ""
     candidates: Tuple = ()      # (n_seg, t_total) for every evaluated #Seg
@@ -101,11 +101,12 @@ def _balance_residents(env: CostEnv, n_layers: int, n_emp: int
 # ----------------------------------------------------------------------------
 # Phase 2: per-segment DP (Alg. 1 SegmentAllocation, lines 1-11)
 # ----------------------------------------------------------------------------
-def _offload_cap(env: CostEnv, plan: Plan, i: int, n_emp: int) -> int:
+def _offload_cap(env: CostEnv, plan: ExecutionPlan, i: int,
+                 n_emp: int) -> int:
     """Max offloaded layers (per segment) device i can take: each costs a
     load-buffer slot (1 copy of weights) plus n_seg segments' worth of KV."""
     w = env.work
-    d = plan.devices[i]
+    d = plan.stages[i]
     kv_layer = n_emp * w.kv_bytes_per_token_layer()
     used = (d.resident_total * (w.l_size + kv_layer))
     free = env.devices[i].mem_bytes - used
@@ -113,7 +114,7 @@ def _offload_cap(env: CostEnv, plan: Plan, i: int, n_emp: int) -> int:
     return max(int(free // per_off), 0)
 
 
-def _segment_dp(env: CostEnv, plan: Plan, n_left_seg: int,
+def _segment_dp(env: CostEnv, plan: ExecutionPlan, n_left_seg: int,
                 n_emp: int) -> Optional[List[int]]:
     """Assign `n_left_seg` offloaded layers (one segment's worth) to devices.
     Returns per-device counts k_i (sum = n_left_seg) minimizing accumulated
@@ -154,30 +155,30 @@ def _segment_dp(env: CostEnv, plan: Plan, n_left_seg: int,
 # ----------------------------------------------------------------------------
 # Phase 3: fine-grained block refinement (Alg. 1 lines 12-27)
 # ----------------------------------------------------------------------------
-def _refine_blocks(env: CostEnv, plan: Plan, n_emp: int) -> None:
+def _refine_blocks(env: CostEnv, plan: ExecutionPlan, n_emp: int) -> None:
     """Pin MHA/MLP blocks of offloaded layers resident on the bottleneck
     device while memory allows, shaving its per-segment load time."""
     w = env.work
     n_seg = plan.n_seg
 
     def free_mem(i: int) -> float:
-        d = plan.devices[i]
+        d = plan.stages[i]
         used = (d.resident_bytes(w, n_seg)
                 + env.kv_reserve_bytes(d.layers_total(n_seg), n_emp))
         return env.devices[i].mem_bytes - used
 
     def uncovered(i: int) -> float:
-        d = plan.devices[i]
+        d = plan.stages[i]
         return max(env.load_time(i, d.load_bytes_seg(w))
                    - env.idle_seg(plan, i), 0.0)
 
     while True:
         # bottleneck device = max uncovered load (the term T_uncover tracks)
-        order = sorted(range(len(plan.devices)), key=uncovered, reverse=True)
+        order = sorted(range(len(plan.stages)), key=uncovered, reverse=True)
         i = order[0]
         if uncovered(i) <= 0.0:
             break
-        d = plan.devices[i]
+        d = plan.stages[i]
         mem = free_mem(i)
         extra = n_seg - 1          # pinned block copies beyond the load buffer
         # prefer pinning the bigger block (bigger load shaved per byte of
@@ -219,7 +220,7 @@ def allocate(env: CostEnv, n_layers: int, *, n_emp: int = 512,
         if left2:
             res2 = None
     if res2 is not None:
-        plan = Plan(n_seg=1, devices=[DeviceAlloc(r) for r in res2])
+        plan = ExecutionPlan(n_seg=1, stages=[StageAlloc(r) for r in res2])
         env.evaluate(plan)
         if env.mem_ok(plan, n_emp):
             return ScheduleResult(plan, True, "fits without offloading",
@@ -232,17 +233,18 @@ def allocate(env: CostEnv, n_layers: int, *, n_emp: int = 512,
     # Offloading path: evaluate every feasible segment count (line 32).
     hi = max_seg or max(2, min(left, math.ceil(n_layers / max(D, 1))))
     hi = max(hi, 2)
-    best: Optional[Plan] = None
+    best: Optional[ExecutionPlan] = None
     cands = []
     for n_seg in range(2, hi + 1):
         per_seg = math.ceil(left / n_seg)   # even split; short last segment
-        plan = Plan(n_seg=n_seg, devices=[DeviceAlloc(r) for r in res],
+        plan = ExecutionPlan(n_seg=n_seg,
+                             stages=[StageAlloc(r) for r in res],
                     off_trim=per_seg * n_seg - left)
         counts = _segment_dp(env, plan, per_seg, n_emp)
         if counts is None:
             continue
         for i, k in enumerate(counts):
-            plan.devices[i].off_full_seg = k
+            plan.stages[i].off_full_seg = k
         # memory feasibility: load buffer sized by the DP result
         if not env.mem_ok(plan, n_emp):
             continue

@@ -21,7 +21,7 @@ import dataclasses
 import math
 from typing import List, Optional, Tuple
 
-from repro.core.cost_model import CostEnv, Plan
+from repro.core.cost_model import CostEnv, ExecutionPlan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,21 +63,21 @@ def _min_load_plan(need_bytes: float, attn_b: float, mlp_b: float,
 class OnlinePlanner:
     """Builds and walks the TS-ladder for every device of a plan."""
 
-    def __init__(self, env: CostEnv, plan: Plan, *, horizon_tokens: int,
+    def __init__(self, env: CostEnv, plan: ExecutionPlan, *, horizon_tokens: int,
                  ladder_chunk_tokens: int = 256):
         self.env = env
         self.plan = plan
         self.work = env.work
         self.chunk = ladder_chunk_tokens
         self.states = [DevicePlannerState(i)
-                       for i in range(len(plan.devices))]
+                       for i in range(len(plan.stages))]
         self.ladders: List[List[OffloadPlanStep]] = [
             self._build_ladder(i, horizon_tokens)
-            for i in range(len(plan.devices))]
+            for i in range(len(plan.stages))]
 
     # -- memory bookkeeping ---------------------------------------------------
     def _free_bytes(self, i: int, alpha: int, beta: int) -> float:
-        d = self.plan.devices[i]
+        d = self.plan.stages[i]
         w = self.work
         base = d.resident_bytes(w, self.plan.n_seg)
         freed = (alpha * w.attn_block_bytes + beta * w.mlp_block_bytes) \
@@ -85,7 +85,7 @@ class OnlinePlanner:
         return self.env.devices[i].mem_bytes - (base - freed)
 
     def _kv_per_token(self, i: int) -> float:
-        d = self.plan.devices[i]
+        d = self.plan.stages[i]
         return (d.layers_total(self.plan.n_seg)
                 * self.work.kv_bytes_per_token_layer())
 
@@ -93,7 +93,7 @@ class OnlinePlanner:
         """How many MHA/MLP blocks device i can still evict (per segment):
         its resident layers contribute both blocks; already-split layers
         contribute their pinned half."""
-        d = self.plan.devices[i]
+        d = self.plan.stages[i]
         res_seg = d.resident_total // max(self.plan.n_seg, 1)
         a_max = res_seg + d.off_mlp_only_seg      # resident MHA halves
         b_max = res_seg + d.off_attn_only_seg     # resident MLP halves

@@ -22,7 +22,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, List, Optional, Tuple
 
-from repro.core.cost_model import CostEnv, Plan
+from repro.core.cost_model import CostEnv, ExecutionPlan
 from repro.core.online_planner import OnlinePlanner
 from repro.core.kv_transfer import KVTransferProtocol
 
@@ -62,7 +62,7 @@ class SimResult:
 class InterleavedPipelineSim:
     """Simulates LIME decoding `n_tokens` with an allocation Plan."""
 
-    def __init__(self, env: CostEnv, plan: Plan, *,
+    def __init__(self, env: CostEnv, plan: ExecutionPlan, *,
                  use_planner: bool = True, use_kv_transfer: bool = True,
                  planner_full_layer_fallback: bool = False,
                  horizon_tokens: Optional[int] = None,
@@ -71,7 +71,7 @@ class InterleavedPipelineSim:
         self.env = env
         self.plan = plan
         self.w = env.work
-        self.D = len(plan.devices)
+        self.D = len(plan.stages)
         self.n_seg = max(plan.n_seg, 1)
         self.bw_schedule = bandwidth_schedule
         self.prompt = prompt_tokens
@@ -116,7 +116,7 @@ class InterleavedPipelineSim:
 
     # -- per-device per-segment quantities -------------------------------------
     def _layers_seg(self, i: int) -> float:
-        d = self.plan.devices[i]
+        d = self.plan.stages[i]
         return d.resident_total / self.n_seg + d.off_layers_seg()
 
     def _comp_seg_mb(self, i: int, ctx: int, q_len: int = 1) -> float:
@@ -130,7 +130,7 @@ class InterleavedPipelineSim:
         return self._layers_seg(i) * w.comp_layer(self.env.devices[i])
 
     def _load_bytes_seg(self, i: int) -> float:
-        d = self.plan.devices[i]
+        d = self.plan.stages[i]
         extra = self.planner.extra_load_bytes_seg(i) if self.planner else 0.0
         if self.full_layer_fallback and self.planner:
             st = self.planner.states[i]

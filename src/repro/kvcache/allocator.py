@@ -54,6 +54,17 @@ class PageAllocator:
     def can_alloc(self, n: int) -> bool:
         return len(self._free) >= n
 
+    def add_pages(self, n: int) -> None:
+        """Extend the pool with `n` fresh page ids (online adaptation:
+        HBM returned by weight retiering becomes KV pages — DESIGN.md
+        §13). Existing ids, refcounts, and tables are untouched."""
+        if n <= 0:
+            return
+        start = self.n_pages
+        self.n_pages += n
+        self._ref.extend([0] * n)
+        self._free.extend(range(start + n - 1, start - 1, -1))
+
     # -- alloc / refcount --------------------------------------------------------
     def alloc(self) -> int:
         if not self._free:

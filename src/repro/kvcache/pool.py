@@ -70,6 +70,7 @@ class PagePool:
         self.spilled_pages = 0
         self.fetched_pages = 0
         self.migrated_bytes = 0.0
+        self._spare = 0       # capacity withdrawn by shrink(), ids parked
 
     # -- capacity ----------------------------------------------------------------
     @property
@@ -88,6 +89,33 @@ class PagePool:
     def can_alloc(self, n_pages: int, tier: str = DEVICE) -> bool:
         return self.free_pages(tier) >= n_pages \
             and self.alloc.can_alloc(n_pages)
+
+    def grow(self, n_pages: int, tier: str = DEVICE) -> int:
+        """Raise a tier's capacity by `n_pages` pages (online memory
+        adaptation: retiered weights return their HBM as KV pages —
+        DESIGN.md §13). Capacity previously withdrawn by shrink() is
+        reused before minting fresh allocator ids, so grow/shrink
+        oscillation is bounded by the high-water mark. Returns the pages
+        added."""
+        if n_pages <= 0:
+            return 0
+        reuse = min(self._spare, n_pages)
+        self._spare -= reuse
+        fresh = n_pages - reuse
+        if fresh:
+            self.alloc.add_pages(fresh)
+        self._cap[tier] += n_pages
+        return n_pages
+
+    def shrink(self, n_pages: int, tier: str = DEVICE) -> int:
+        """Lower a tier's capacity (promotion reclaims its HBM). Only free
+        capacity can be withdrawn — pages in use stay until released; the
+        orphaned allocator ids are parked for the next grow() (capacity,
+        not identity, gates usage). Returns the pages withdrawn."""
+        take = max(min(n_pages, self.free_pages(tier)), 0)
+        self._cap[tier] -= take
+        self._spare += take
+        return take
 
     # -- allocation --------------------------------------------------------------
     def alloc_pages(self, n: int, tier: str = DEVICE) -> List[int]:

@@ -42,6 +42,20 @@ def main(argv=None):
     ap.add_argument("--spec-k", type=int, default=4)
     ap.add_argument("--spec-draft", default="ngram",
                     choices=("ngram", "model"))
+    ap.add_argument("--plan", choices=("uniform", "hetero"),
+                    default="uniform",
+                    help="uniform: hand-built homogeneous split; hetero: "
+                         "run the offline allocation scheduler over "
+                         "per-stage device profiles and execute its "
+                         "heterogeneous ExecutionPlan (DESIGN.md §13)")
+    ap.add_argument("--adapt", action="store_true",
+                    help="online memory adaptation: an OnlinePlanner walks "
+                         "KV page occupancy and retiers the live engine — "
+                         "resident layers demote to the streamed tier, "
+                         "their HBM becomes KV pages (DESIGN.md §13)")
+    ap.add_argument("--retier-headroom", type=int, default=1,
+                    help="streamed-store slots per stage reserved for "
+                         "runtime demotions (--adapt)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="radix prefix cache over real KV pages "
                          "(single-device fallback only — DESIGN.md §12)")
@@ -69,19 +83,63 @@ def main(argv=None):
     params = M.init_params(cfg, jax.random.PRNGKey(0))
 
     engine = None
+    planner = None
     if use_engine:
         mesh = jax.make_mesh((args.stages, args.tp), ("data", "model"))
-        # pad layers to a chunk grid; one streamed layer per chunk
-        import math
-        n_seg = 2
-        k = math.ceil(cfg.n_layers / (n_seg * args.stages))
-        plan = UniformPlan(args.stages, n_seg, max(k - 1, 0),
-                           1 if k >= 1 else 0)
         n_mb = args.stages if args.pattern != "sporadic" else 1
-        engine = InterleavedEngine(cfg, mesh, plan, n_mb=n_mb, mb=1,
-                                   max_len=args.max_len)
+        env = None
+        if args.plan == "hetero" or args.adapt:
+            # per-stage profiles scaled to the model so the offline
+            # scheduler actually offloads (real 16 GB chips would hold a
+            # smoke model outright); --plan hetero varies the memory per
+            # stage, so the emitted ExecutionPlan has unequal splits
+            import dataclasses as _dc
+
+            from repro.core.cost_model import CostEnv, Workload
+            from repro.core.profiles import TPU_V5E, mbps
+            base = cfg.total_params() * 2.0 / args.stages
+            fracs = ([2.0, 1.2, 1.6, 1.0] if args.plan == "hetero"
+                     else [1.5])
+
+            def mk_env(scale):
+                devs = [_dc.replace(TPU_V5E, name=f"stage{i}",
+                                    mem_bytes=base * scale
+                                    * fracs[i % len(fracs)])
+                        for i in range(args.stages)]
+                return CostEnv(devs, mbps(200.0),
+                               Workload(cfg, mb=1, ctx=args.prompt_len,
+                                        n_micro=n_mb))
+            env = mk_env(1.0)
+        if args.plan == "hetero":
+            from repro.core.offline_scheduler import allocate
+            r = allocate(env, cfg.n_layers, n_emp=args.max_len)
+            scale = 1.0
+            while not r.feasible and scale < 16.0:
+                scale *= 1.4          # too tight for ANY allocation: relax
+                env = mk_env(scale)
+                r = allocate(env, cfg.n_layers, n_emp=args.max_len)
+            if not r.feasible:
+                raise SystemExit(f"hetero allocation infeasible: {r.reason}")
+            plan = r.plan
+            print(f"hetero plan: seg={plan.n_seg} "
+                  f"k_res={plan.k_res_list} k_off={plan.k_off_list}")
+        else:
+            # pad layers to a chunk grid; one streamed layer per chunk
+            import math
+            n_seg = 2
+            k = math.ceil(cfg.n_layers / (n_seg * args.stages))
+            plan = UniformPlan(args.stages, n_seg, max(k - 1, 0),
+                               1 if k >= 1 else 0)
+        engine = InterleavedEngine(
+            cfg, mesh, plan, n_mb=n_mb, mb=1, max_len=args.max_len,
+            retier_headroom=args.retier_headroom if args.adapt else 0)
+        if args.adapt:
+            from repro.core.online_planner import OnlinePlanner
+            planner = OnlinePlanner(env, plan,
+                                    horizon_tokens=4 * n_mb * args.max_len)
         print(f"engine: {args.stages} stages x tp{args.tp}, "
-              f"plan seg={plan.n_seg} k_res={plan.k_res} k_off={plan.k_off}")
+              f"plan seg={plan.n_seg} chunks k_res={plan.k_res_list} "
+              f"k_off={plan.k_off_list} adapt={args.adapt}")
     else:
         print("single-device fallback (no engine)")
 
@@ -97,7 +155,8 @@ def main(argv=None):
                      spec=spec,
                      prefix_cache=args.prefix_cache,
                      prefill_chunk_tokens=args.prefill_chunk,
-                     page_size=args.page_size)
+                     page_size=args.page_size,
+                     planner=planner)
 
     arrivals = cli_arrivals(args.pattern, args.requests, seed=args.seed,
                             prompt_len=args.prompt_len,
@@ -107,7 +166,11 @@ def main(argv=None):
                             prefix_len=args.prefix_len, turns=args.turns,
                             trace=args.trace)
 
-    sched = ContinuousBatchingScheduler(srv.make_backend(), SchedulerConfig())
+    # adaptation rides page-granular admission: note_kv_pages feeds the
+    # planner, and the scheduler can reclaim retier headroom pre-preempt
+    scfg = SchedulerConfig(kv_policy="paged", page_size=args.page_size) \
+        if args.adapt else SchedulerConfig()
+    sched = ContinuousBatchingScheduler(srv.make_backend(), scfg)
     done = sched.serve(requests_from_arrivals(arrivals,
                                               vocab_size=cfg.vocab_size))
     for r in sorted(done, key=lambda r: r.rid):

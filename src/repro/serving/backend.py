@@ -55,7 +55,7 @@ class SimBackend:
 
     def __init__(self, env: CostEnv, plan=None, *, n_slots: int = 0,
                  use_planner: bool = True, use_kv_transfer: bool = True,
-                 prompt_tokens: int = 64, spec=None):
+                 prompt_tokens: int = 64, spec=None, adapt: bool = False):
         if plan is None:
             from repro.core.offline_scheduler import allocate
             r = allocate(env, env.work.cfg.n_layers,
@@ -71,6 +71,16 @@ class SimBackend:
             use_kv_transfer=use_kv_transfer, prompt_tokens=prompt_tokens)
         self._ctx: Dict[int, int] = {}        # slot -> prompt + generated
         self._kv_pages = None                 # (pages_in_use, page_size)
+        # adaptation telemetry (DESIGN.md §13): planner (α, β) moves are
+        # reported in whole-layer equivalents; scheduler-driven reclaims
+        # (reclaim_kv_pages) force-advance the TS ladder and credit the
+        # freed bytes to the admission page pool. `adapt` gates the
+        # reclaim hook — with it off (default) admission pressure behaves
+        # exactly as the static plan (preempt, never retier).
+        self.adapt = adapt
+        self._pool = None
+        self._adapt = {"retier_events": 0, "layers_demoted": 0,
+                       "layers_promoted": 0, "hbm_returned_bytes": 0.0}
         # speculative decoding (DESIGN.md §11): the simulator has no real
         # tokens to verify, so a spec config prices each decode round as a
         # (k+1)-query verify pass and draws per-slot accepted counts from
@@ -123,8 +133,98 @@ class SimBackend:
 
     def attach_page_pool(self, pool) -> None:
         """Expose a PagePool to the simulator so Eq. 8 volumes move real
-        pages (core/kv_transfer.sync_pool) every step."""
+        pages (core/kv_transfer.sync_pool) every step, and to the
+        adaptation path so retiered weight bytes grow its device tier."""
         self.sim.attach_page_pool(pool)
+        self._pool = pool
+
+    # -- online memory adaptation (DESIGN.md §13) --------------------------------
+    def _planner_snapshot(self):
+        pl = self.sim.planner
+        return [(st.alpha, st.beta) for st in pl.states] if pl else None
+
+    def _note_planner_delta(self, before) -> None:
+        """Fold planner (α, β) moves since `before` into the adaptation
+        telemetry (whole-layer equivalents: a layer = 1 MHA + 1 MLP).
+        Gated on `adapt`: a static run's report keeps the documented
+        'zero when --adapt is off' contract even on workloads where the
+        sim's own TS ladder fires."""
+        pl = self.sim.planner
+        if not self.adapt or pl is None or before is None:
+            return
+        w = self.env.work
+        factor = max(self.plan.n_seg - 1, 1)
+        for (a0, b0), st in zip(before, pl.states):
+            da, db = st.alpha - a0, st.beta - b0
+            if not (da or db):
+                continue
+            self._adapt["retier_events"] += 1
+            self._adapt["layers_demoted"] += max(max(da, db), 0)
+            self._adapt["layers_promoted"] += max(-min(da, db), 0)
+            self._adapt["hbm_returned_bytes"] += max(
+                (da * w.attn_block_bytes + db * w.mlp_block_bytes) * factor,
+                0.0)
+
+    def _sim_step(self, **kw):
+        before = self._planner_snapshot()
+        trace = self.sim.step_once(**kw)
+        self._note_planner_delta(before)
+        return trace
+
+    def reclaim_kv_pages(self, n_pages: int) -> int:
+        """Scheduler pressure hook: force-advance the TS ladder (demote
+        blocks ahead of their occupancy thresholds) and return the freed
+        bytes as device KV pages. The simulator prices the added
+        per-segment load on every subsequent step — adaptation trades
+        steady-state load for preemption churn. Returns pages granted."""
+        pl = self.sim.planner
+        if not self.adapt or pl is None or self._pool is None:
+            return 0
+        pb = self._pool.cfg.page_bytes
+        if pb <= 0:
+            return 0
+        w = self.env.work
+        factor = max(self.plan.n_seg - 1, 1)
+        snap = [(st.alpha, st.beta, st.plan_idx) for st in pl.states]
+        adapt_snap = dict(self._adapt)
+        freed = 0.0
+        need = n_pages * pb
+        advanced = True
+        while freed < need and advanced:
+            advanced = False
+            for st in pl.states:
+                lad = pl.ladders[st.dev_idx]
+                if st.plan_idx >= len(lad):
+                    continue
+                step = lad[st.plan_idx]
+                da, db = step.alpha - st.alpha, step.beta - st.beta
+                gain = (da * w.attn_block_bytes
+                        + db * w.mlp_block_bytes) * factor
+                st.alpha, st.beta = step.alpha, step.beta
+                st.plan_idx += 1
+                advanced = True
+                if gain > 0:
+                    freed += gain
+                    self._adapt["retier_events"] += 1
+                    self._adapt["layers_demoted"] += max(max(da, db), 0)
+                    self._adapt["hbm_returned_bytes"] += gain
+                if freed >= need:
+                    break
+        pages = int(freed // pb)
+        if pages <= 0:
+            # nothing granted: roll the ladder (and its telemetry) back —
+            # the preemption happens anyway; paying extra per-segment
+            # load for zero pages would be pure loss
+            for st, (a, b, i) in zip(pl.states, snap):
+                st.alpha, st.beta, st.plan_idx = a, b, i
+            self._adapt = adapt_snap
+            return 0
+        self._pool.grow(pages)
+        return pages
+
+    @property
+    def adapt_stats(self):
+        return dict(self._adapt)
 
     def charge_transfer(self, nbytes: float) -> None:
         """Preemption spill/fetch traffic: advances the virtual clock."""
@@ -153,7 +253,7 @@ class SimBackend:
         # prefill: one pipeline pass; each micro-batch carries its own
         # uncached-suffix query count (attention still reads the full
         # span, hence ctx = the longest context in the batch)
-        self.sim.step_once(ctx=max((self._prefill_span(r) for r in reqs),
+        self._sim_step(ctx=max((self._prefill_span(r) for r in reqs),
                                    default=1),
                            n_micro=max(len(reqs), 1),
                            kv_tokens=self._planner_tokens(),
@@ -168,7 +268,7 @@ class SimBackend:
         # own prompt span before it starts decoding with the others
         span = self._prefill_span(req)
         self._ctx[slot] = span
-        self.sim.step_once(ctx=max(span, 1), n_micro=1,
+        self._sim_step(ctx=max(span, 1), n_micro=1,
                            kv_tokens=self._planner_tokens(),
                            q_len=self._prefill_q(req))
         self._ctx[slot] += 1
@@ -206,7 +306,7 @@ class SimBackend:
                 q_lens.append(1)
         ctx = max(self._ctx[s] + (work[s][1] if work[s][0] == "prefill"
                                   else 1) for s in slots)
-        self.sim.step_once(ctx=ctx, n_micro=len(slots),
+        self._sim_step(ctx=ctx, n_micro=len(slots),
                            kv_tokens=self._planner_tokens(), q_lens=q_lens)
         for s in slots:
             w = work[s]
@@ -244,7 +344,7 @@ class SimBackend:
         ctx = max(self._ctx[s] for s in slots)
         if self.spec is not None:
             return self._decode_active_spec(slots, ctx)
-        self.sim.step_once(ctx=ctx, n_micro=len(slots),
+        self._sim_step(ctx=ctx, n_micro=len(slots),
                            kv_tokens=self._planner_tokens())
         for s in slots:
             self._ctx[s] += 1
@@ -254,7 +354,7 @@ class SimBackend:
         """One speculative round: price a (k+1)-query verify pass, then
         commit 1..k+1 tokens per slot from the acceptance model."""
         k = self.spec.k
-        self.sim.step_once(ctx=ctx, n_micro=len(slots),
+        self._sim_step(ctx=ctx, n_micro=len(slots),
                            kv_tokens=self._planner_tokens(), q_len=k + 1)
         return {s: [None] * self._spec_commit(s) for s in slots}
 
@@ -294,7 +394,7 @@ class EngineBackend:
                  max_len: int = 512, sampler=None, prompt_seed: int = 0,
                  paged: bool = False, page_size: int = 64, spec=None,
                  prefix_cache: bool = False, prefill_chunk_tokens: int = 0,
-                 cache_pages: int = 0):
+                 cache_pages: int = 0, planner=None):
         import jax
 
         from repro.models import model as M
@@ -304,6 +404,18 @@ class EngineBackend:
         self.params = params
         self.engine = engine
         self.max_len = max_len
+        # online memory adaptation (DESIGN.md §13): an OnlinePlanner walks
+        # its TS ladder on the scheduler's page occupancy (note_kv_pages)
+        # and fires retier events on the live engine — demoted resident
+        # layers return their HBM to the admission page pool. The
+        # scheduler may also force demotions (reclaim_kv_pages) before
+        # preempting a request.
+        self.planner = planner
+        self._pool = None                 # admission PagePool (scheduler's)
+        self._grants = []                 # reclaim-driven (stage, pages)
+        self._reclaim_dry = False         # retier slots too small to grant
+        self._adapt = {"retier_events": 0, "layers_demoted": 0,
+                       "layers_promoted": 0, "hbm_returned_bytes": 0.0}
         # radix prefix cache over the real paged pool (DESIGN.md §12):
         # prompts matched against cached pages, only the uncached suffix
         # prefilled, finished requests donate their pages back. Rides the
@@ -433,6 +545,123 @@ class EngineBackend:
         from repro.serving.sampling import sample
         self._key, k = jax.random.split(self._key)
         return sample(logits, self.sampler, k, self.cfg.vocab_size)
+
+    # -- online memory adaptation (DESIGN.md §13) --------------------------------
+    def attach_page_pool(self, pool) -> None:
+        """Scheduler hook: the admission PagePool that retiered weight HBM
+        is credited to (grow on demote, shrink on promote)."""
+        self._pool = pool
+
+    def _page_bytes(self) -> float:
+        pb = self._pool.cfg.page_bytes if self._pool is not None else 0.0
+        return pb or self.kv_bytes_per_token() * self.page_size
+
+    def _apply_retier(self, stage: int, delta: int) -> float:
+        """Move `delta` slots of `stage` across the tier boundary on the
+        live engine state (counter-only between epochs — init_state builds
+        the demoted layout). Returns HBM bytes freed (< 0 on promote)."""
+        eng = self.engine
+        before = eng.demoted(stage)
+        self._state, freed = eng.retier(self._state, stage, delta)
+        moved = abs(eng.demoted(stage) - before)
+        if moved:
+            self._adapt["retier_events"] += 1
+            key = "layers_demoted" if freed > 0 else "layers_promoted"
+            self._adapt[key] += moved
+            self._adapt["hbm_returned_bytes"] += max(freed, 0.0)
+        return freed
+
+    def _retier_to(self, stage: int, target_demoted: int) -> None:
+        """Planner-driven: demote until `stage` has target_demoted slots
+        streamed (whole-layer mapping of the planner's (α, β) blocks)."""
+        eng = self.engine
+        cap = min(eng.k_res_b[stage], eng.H)
+        delta = min(target_demoted, cap) - eng.demoted(stage)
+        if delta <= 0:
+            return
+        freed = self._apply_retier(stage, delta)
+        if self._pool is not None and freed > 0:
+            self._pool.grow(int(freed // self._page_bytes()))
+
+    def note_kv_pages(self, pages_in_use: int, page_size: int) -> None:
+        """Scheduler callback with page-granular KV occupancy: walk the
+        planner's TS ladder (paper Eq. 5) on what admission actually
+        holds, retier the live pipeline on fired plans, and promote
+        pressure-driven demotions back when occupancy leaves headroom."""
+        if self.engine is None:
+            return
+        if self.planner is not None:
+            for dev, step in self.planner.on_pages(pages_in_use, page_size):
+                if dev < self.engine.plan.n_stage:
+                    self._retier_to(dev, max(step.alpha, step.beta))
+        self._maybe_promote()
+
+    def reclaim_kv_pages(self, n_pages: int) -> int:
+        """Scheduler pressure hook: before preempting a request, demote
+        resident layers and return their HBM as device KV pages. Returns
+        pages made available (0 = no retier headroom left)."""
+        if self.engine is None or self._pool is None:
+            return 0
+        pb = self._page_bytes()
+        if pb <= 0:
+            return 0
+        if self._reclaim_dry:
+            return 0          # a slot frees < 1 page on this engine: the
+        eng = self.engine     # geometry is constant, retrying just churns
+        got = 0
+        while got < n_pages:
+            stage = max(range(eng.plan.n_stage), key=eng.demote_capacity)
+            if eng.demote_capacity(stage) <= 0:
+                break
+            snap = dict(self._adapt)
+            pages = int(self._apply_retier(stage, +1) // pb)
+            if pages <= 0:
+                # one slot frees less than a page: undo the demotion (a
+                # grant of nothing would permanently slow the stage) and
+                # its telemetry — no HBM was returned
+                self._apply_retier(stage, -1)
+                self._adapt = snap
+                self._reclaim_dry = True
+                break
+            self._pool.grow(pages)
+            self._grants.append((stage, pages))
+            got += pages
+        return got
+
+    def _planner_demote_target(self, stage: int) -> int:
+        """Slots the TS ladder currently demands demoted on `stage`."""
+        if self.planner is None or stage >= len(self.planner.states):
+            return 0
+        st = self.planner.states[stage]
+        return max(st.alpha, st.beta)
+
+    def _maybe_promote(self) -> None:
+        """Undo reclaim-driven demotions when pressure drops: withdraw the
+        granted pages (only free capacity can leave the pool) and promote
+        the layers back to residency. Planner-driven demotions stay — the
+        TS ladder is monotone in KV growth (paper §IV-D) — so promotion
+        stops at the ladder's current demote target even when a reclaim
+        grant is still outstanding on that stage (retier() promotes the
+        most recent demotion, which may be the planner's)."""
+        while self._grants and self._pool is not None:
+            stage, pages = self._grants[-1]
+            if self.engine.demoted(stage) - 1 \
+                    < self._planner_demote_target(stage):
+                break                    # would undo a ladder demotion
+            if self._pool.free_pages() < pages + 2 * self.n_slots:
+                break                    # still too close to the watermark
+            self._pool.shrink(pages)
+            self._apply_retier(stage, -1)
+            self._grants.pop()
+
+    @property
+    def adapt_stats(self):
+        stats = dict(self._adapt)
+        if self.engine is not None:
+            stats["layers_streamed_now"] = sum(
+                self.engine.demoted(d)
+                for d in range(self.engine.plan.n_stage))
+        return stats
 
     # -- radix prefix cache over real KV pages (DESIGN.md §12) -------------------
     def _engine_can_chunk(self) -> bool:

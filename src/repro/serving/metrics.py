@@ -71,6 +71,14 @@ class ServingReport:
     cached_tokens: int = 0         # tokens held by the radix tree at end
     prefill_tokens_saved: int = 0  # prompt tokens served from cache instead
                                    # of riding a prefill round
+    # online memory adaptation (DESIGN.md §13; zero when --adapt is off)
+    retier_events: int = 0         # tier moves fired (planner + reclaim)
+    layers_demoted: int = 0        # resident layers moved to the streamed
+                                   # tier (whole-layer equivalents)
+    layers_promoted: int = 0       # moved back when pressure dropped
+    hbm_returned_bytes: float = 0.0  # weight HBM credited to the KV pool
+    retier_reclaimed_pages: int = 0  # pages granted by scheduler-driven
+                                     # reclaim (before any preemption)
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -138,6 +146,11 @@ def summarize(requests: List, *, pattern: str = "", backend: str = "",
                          / max(float(stats.get("prefix_lookups", 0)), 1.0)),
         cached_tokens=int(stats.get("cached_tokens", 0)),
         prefill_tokens_saved=int(stats.get("prefill_tokens_saved", 0)),
+        retier_events=int(stats.get("retier_events", 0)),
+        layers_demoted=int(stats.get("layers_demoted", 0)),
+        layers_promoted=int(stats.get("layers_promoted", 0)),
+        hbm_returned_bytes=float(stats.get("hbm_returned_bytes", 0.0)),
+        retier_reclaimed_pages=int(stats.get("retier_reclaimed_pages", 0)),
         peak_active=int(stats.get("peak_active", 0)),
         peak_kv_pages=int(stats.get("peak_kv_pages", 0)),
         kv_pages_spilled=int(stats.get("kv_pages_spilled", 0)),

@@ -249,11 +249,48 @@ class ContinuousBatchingScheduler:
                     + active_count - self.mgr.pool.free_pages()
                 if short > 0 and self._evict_cached(short):
                     pages, _ = self._lookup(req)   # eviction may have
-                    return self.mgr.can_admit_prefix(   # pruned the match
+                    if self.mgr.can_admit_prefix(  # pruned the match
+                            need, pages, headroom_pages=active_count):
+                        return True
+                # same ordering as the cold path: retier headroom is the
+                # step between radix eviction and refusing admission.
+                # Shortfall from the PREFIX requirement — only the
+                # uncached suffix needs fresh pages (the cold bound would
+                # over-demote by the cached-prefix page count)
+                pages, _ = self._lookup(req)
+                short = self.mgr.pool.pages_for(need) - len(pages) \
+                    + active_count - self.mgr.pool.free_pages()
+                if short > 0 and self._reclaim(short):
+                    pages, _ = self._lookup(req)
+                    return self.mgr.can_admit_prefix(
                         need, pages, headroom_pages=active_count)
                 return False
-            return self.mgr.can_admit(need, headroom_pages=active_count)
+            if self.mgr.can_admit(need, headroom_pages=active_count):
+                return True
+            # retier headroom (DESIGN.md §13): before refusing, ask the
+            # backend to demote resident layers — their HBM grows the
+            # device tier, so a burst is absorbed without queueing
+            short = self.mgr.pool.pages_for(need) + active_count \
+                - self.mgr.pool.free_pages()
+            if short > 0 and self._reclaim(short):
+                return self.mgr.can_admit(need, headroom_pages=active_count)
+            return False
         return self._kv_in_use + req.kv_tokens <= self.kv_budget
+
+    def _reclaim(self, n_pages: int) -> int:
+        """Ask the backend for retier headroom (demote resident layers ->
+        device KV pages; no-op on backends without online adaptation).
+        Ordered after radix eviction and before preemption: cached pages
+        serve future hits, retiering costs steady-state load, preemption
+        costs a live request its progress."""
+        fn = getattr(self.backend, "reclaim_kv_pages", None)
+        if fn is None:
+            return 0
+        got = fn(n_pages)
+        if got:
+            self.stats["retier_reclaimed_pages"] = \
+                self.stats.get("retier_reclaimed_pages", 0) + got
+        return got
 
     def _evict_cached(self, n_pages: int) -> int:
         """Reclaim device-tier radix pages (the callers are starved for
@@ -363,6 +400,13 @@ class ContinuousBatchingScheduler:
                 need = self.mgr.pool.pages_for(grow_to) \
                     - self.mgr.pages_of(r.rid)
                 if self._evict_cached(need):
+                    continue
+                # reclaim only the SHORTFALL past the free pages — the
+                # gross requirement would over-demote resident layers
+                # (permanent extra per-segment load for pages the pool
+                # already had)
+                short = need - self.mgr.pool.free_pages()
+                if short > 0 and self._reclaim(short):
                     continue
                 victims = [s for s in sorted(active,
                                              key=lambda s: order.index(s),
@@ -624,4 +668,7 @@ class ContinuousBatchingScheduler:
         spec = getattr(self.backend, "spec_stats", None)
         if spec:                      # drafted/accepted counters -> report
             self.stats.update(spec)
+        adapt = getattr(self.backend, "adapt_stats", None)
+        if adapt:                     # retier telemetry (DESIGN.md §13)
+            self.stats.update(adapt)
         return done + shed

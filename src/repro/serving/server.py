@@ -68,7 +68,7 @@ class LimeServer:
                  max_len: int = 512, sampler: SamplerConfig = SamplerConfig(),
                  pattern: str = "sporadic", spec=None,
                  prefix_cache: bool = False, prefill_chunk_tokens: int = 0,
-                 page_size: int = 64):
+                 page_size: int = 64, planner=None):
         self.cfg = cfg
         self.params = params
         self.engine = engine
@@ -79,6 +79,7 @@ class LimeServer:
         self.prefix_cache = prefix_cache      # radix KV reuse (DESIGN §12)
         self.prefill_chunk_tokens = prefill_chunk_tokens
         self.page_size = page_size
+        self.planner = planner                # OnlinePlanner (DESIGN §13)
         self.queue = RequestQueue()
         self._backend: Optional[EngineBackend] = None
 
@@ -99,7 +100,7 @@ class LimeServer:
                 sampler=self.sampler, spec=self.spec,
                 prefix_cache=self.prefix_cache and self.engine is None,
                 prefill_chunk_tokens=self.prefill_chunk_tokens,
-                page_size=self.page_size)
+                page_size=self.page_size, planner=self.planner)
         return self._backend
 
     def serve_all(self) -> List[Request]:

@@ -123,6 +123,38 @@ def test_allocate_invariants(devs, nm, bw_mbps):
     assert p.t_total < float("inf")
 
 
+@given(fleets(), st.sampled_from([128, 512, 1024]),
+       st.sampled_from([100, 200, 500]))
+@settings(max_examples=40, deadline=None)
+def test_execution_plan_budget_and_coverage(devs, n_emp, bw_mbps):
+    """ISSUE 5 S3: every ExecutionPlan the offline scheduler emits over a
+    random heterogeneous fleet (i) covers exactly n_layers in its cost
+    view, (ii) keeps every stage's resident weights + KV reserve inside
+    that stage's memory budget (checked directly, not via mem_ok), and
+    (iii) presents engine-facing geometry whose padded grid covers the
+    model with per-stage splits consistent with the stage allocs."""
+    env = CostEnv(devs, mbps(bw_mbps), Workload(CFG, mb=1, ctx=n_emp))
+    r = allocate(env, CFG.n_layers, n_emp=n_emp)
+    if not r.feasible:
+        return
+    p = r.plan
+    w = env.work
+    assert p.layers_total() == CFG.n_layers
+    for i, stg in enumerate(p.stages):
+        used = (stg.resident_bytes(w, p.n_seg)
+                + stg.layers_total(p.n_seg) * n_emp
+                * w.kv_bytes_per_token_layer())
+        assert used <= devs[i].mem_bytes + 1e-6, (i, used, devs[i].mem_bytes)
+    # engine-facing geometry: the padded grid covers the model and each
+    # stage's chunk is its alloc's whole-layer view
+    assert p.n_layers >= CFG.n_layers
+    assert p.n_stage == len(devs)
+    for stg, kr, ko in zip(p.stages, p.k_res_list, p.k_off_list):
+        assert kr == -(-stg.resident_total // p.n_seg)
+        assert ko == stg.off_layers_seg()
+    assert p.k_max == max(r + o for r, o in zip(p.k_res_list, p.k_off_list))
+
+
 @given(st.integers(1, 8), st.integers(0, 8), st.integers(2, 6),
        st.floats(0.1, 4.0))
 @settings(max_examples=60, deadline=None)
