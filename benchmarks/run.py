@@ -19,6 +19,8 @@ SUITES = {
     "ablation": ("benchmarks.bench_ablation", "Tab V ablation"),
     "kernels": ("benchmarks.bench_kernels", "kernel microbench"),
     "specdec": ("benchmarks.bench_specdec", "speculative vs AR decode"),
+    "selfspec": ("benchmarks.bench_selfspec", "resident self-draft vs n-gram "
+                                              "across retier rungs"),
     "prefix": ("benchmarks.bench_prefix", "radix prefix cache + chunked "
                                           "prefill"),
     "adaptation": ("benchmarks.bench_adaptation", "online memory adaptation "

@@ -42,7 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -292,7 +292,7 @@ class InterleavedEngine:
         # compiled steps by query length: 1 = autoregressive decode,
         # q_len > 1 = speculative-decoding verification (DESIGN.md §11),
         # built lazily on first use
-        self._steps: Dict[int, Any] = {1: self._build_step(1)}
+        self._steps: Dict[Any, Any] = {1: self._build_step(1)}
         self._step = self._steps[1]
 
     # -- tier boundary (retier) inputs -----------------------------------------
@@ -534,16 +534,27 @@ class InterleavedEngine:
                                  check_vma=False))
 
     # -- the SPMD step -----------------------------------------------------------
-    def _build_step(self, q_len: int = 1):
+    def _build_step(self, q_len: int = 1, resident_only: bool = False):
         """q_len = 1: one autoregressive token (the historical step).
         q_len > 1: a speculative verification round — every micro-batch
         carries q_len query positions through the same slot schedule, so
         one pipeline traversal (one weight-stream) scores all of them;
-        logits come back per position (DESIGN.md §11)."""
+        logits come back per position (DESIGN.md §11).
+        resident_only (q_len must be 1): the self-draft step (DESIGN.md
+        §14) — the same slot schedule with the streamed tier skipped
+        entirely: no offload input, no weight fetch, the per-chunk layer
+        scan runs only the k_res_cap resident rows (masked at the LIVE
+        `kl` boundary, so retier needs no recompile), and the final norm
+        + LM head act as the early-exit draft head. K/V writes land in
+        resident rows only; the verify round overwrites every row at the
+        drafted positions before reading them, so drafts leak nothing."""
+        assert not (resident_only and q_len != 1), (q_len,)
+        res_only = resident_only
         cfg, plan = self.cfg, self.plan
         n_stage, n_seg = plan.n_stage, plan.n_seg
         k_res_cap, k_off_cap, H, K = (self.k_res_cap, self.k_off_cap,
                                       self.H, self.K)
+        KC = k_res_cap if res_only else K      # layer rows the scan runs
         # per-stage build-time tiers, baked as constants the traced stage
         # id selects from; the LIVE boundary arrives as the kl input
         KR_B = jnp.asarray(self.k_res_b, jnp.int32)
@@ -633,7 +644,7 @@ class InterleavedEngine:
                 lambda r: jax.lax.dynamic_index_in_dim(r[:, 0], s_d, 0,
                                                        keepdims=False),
                 res_local)                        # (k_res_cap, ...)
-            if k_off_cap == 0:
+            if k_off_cap == 0 or fetched is None:
                 return res_s
             return jax.tree.map(
                 lambda r, f: jnp.concatenate([r, f.astype(r.dtype)], axis=0),
@@ -664,12 +675,17 @@ class InterleavedEngine:
             # zero weights make them so numerically, the mask makes it
             # structural (and exact for every family)
             m_dem = KR_B[d] - kl[0]
-            jidx = jnp.arange(K)
-            live_d = (jidx < kl[0]) \
-                | ((jidx >= k_res_cap + H - m_dem)
-                   & (jidx < k_res_cap + H + KO_B[d]))
-            win_d = win_tab[0]                  # (n_seg, K)
-            real_d = real_tab[0]                # (n_seg, K) bool
+            jidx = jnp.arange(KC)
+            if res_only:
+                # only resident rows below the LIVE boundary run: demoted
+                # layers sit in the streamed store the draft never touches
+                live_d = jidx < kl[0]
+            else:
+                live_d = (jidx < kl[0]) \
+                    | ((jidx >= k_res_cap + H - m_dem)
+                       & (jidx < k_res_cap + H + KO_B[d]))
+            win_d = win_tab[0][:, :KC]          # (n_seg, KC)
+            real_d = real_tab[0][:, :KC]        # (n_seg, KC) bool
             pos = glob["pos"]
             pos_ids = glob.get("pos_ids")
             slot = jnp.int32(0)
@@ -691,7 +707,7 @@ class InterleavedEngine:
 
             x0 = jnp.zeros((mb, q_len, cfg.d_model), jnp.bfloat16)
             logits0 = jnp.zeros((n_mb, mb, q_len, PV), jnp.float32)
-            fetched0 = None if step_mode else \
+            fetched0 = None if (step_mode or res_only) else \
                 fetch_chunk_weights(offload, jnp.int32(0), d)
 
             def slot_body(carry, tau):
@@ -705,7 +721,10 @@ class InterleavedEngine:
                 s_d = jnp.clip(c_d // n_stage, 0, n_seg - 1)
 
                 # interleave: issue next slot's weight fetch BEFORE compute
-                if step_mode:
+                if res_only:
+                    # self-draft: zero weight streaming — the whole point
+                    nxt = cur = None
+                elif step_mode:
                     nxt = None
                     cur = None if k_off_cap == 0 else jax.tree.map(
                         lambda w: jax.lax.dynamic_index_in_dim(
@@ -729,6 +748,8 @@ class InterleavedEngine:
                 cache_mb = {kk: jax.lax.dynamic_index_in_dim(
                     v, jnp.clip(m_d, 0, n_mb - 1), 1, keepdims=False)
                     for kk, v in cache_chunk.items()}   # (k, mb, ...)
+                if res_only:
+                    cache_mb = {kk: v[:KC] for kk, v in cache_mb.items()}
 
                 moe_mesh = self.mesh if (cfg.family == Family.MOE
                                          and "model" in self.mesh.shape) \
@@ -764,7 +785,15 @@ class InterleavedEngine:
                     cur_s = jax.lax.dynamic_index_in_dim(old[:, 0], s_d, 0,
                                                          False)
                     prev = jax.lax.dynamic_index_in_dim(cur_s, m_c, 1, False)
-                    upd = jnp.where(valid, new.astype(old.dtype), prev)
+                    if res_only:
+                        # the draft scan produced KC rows: write them back
+                        # into the resident prefix, streamed rows untouched
+                        upd = jnp.where(valid, new.astype(old.dtype),
+                                        prev[:KC])
+                        upd = jax.lax.dynamic_update_slice_in_dim(
+                            prev, upd, 0, axis=0)
+                    else:
+                        upd = jnp.where(valid, new.astype(old.dtype), prev)
                     cur_s = jax.lax.dynamic_update_index_in_dim(
                         cur_s, upd, m_c, 1)
                     return jax.lax.dynamic_update_index_in_dim(
@@ -805,6 +834,25 @@ class InterleavedEngine:
             return logits, cache_f, new_glob, dbg_out
 
         proto = self._tree_proto()[0]
+        out_specs = (P(), {kk: P(None, ax) for kk in self._cache_keys()},
+                     {kk: P() for kk in self._glob_keys()}, P(ax))
+        if res_only:
+            # no offload leg at all: the draft program never sees the
+            # streamed store, so XLA cannot schedule a fetch for it
+            def draft_fn(resident, shared, cache, glob, tokens, stage_id,
+                         kl, win_tab, real_tab):
+                return step_fn(resident, None, shared, cache, glob, tokens,
+                               stage_id, kl, win_tab, real_tab)
+            in_specs = (jax.tree.map(lambda _: P(None, ax), proto,
+                                     is_leaf=is_sds),
+                        jax.tree.map(lambda _: P(), self._shared_proto()),
+                        {kk: P(None, ax) for kk in self._cache_keys()},
+                        {kk: P() for kk in self._glob_keys()},
+                        P(), P(ax), P(ax), P(ax), P(ax))
+            fn = shard_map(draft_fn, mesh=self.mesh, in_specs=in_specs,
+                           out_specs=out_specs, axis_names={ax},
+                           check_vma=False)
+            return jax.jit(fn, donate_argnums=(2,))
         if step_mode:
             off_in = jax.tree.map(lambda _: P(ax), proto, is_leaf=is_sds)
         else:
@@ -817,8 +865,6 @@ class InterleavedEngine:
                     {kk: P(None, ax) for kk in self._cache_keys()},
                     {kk: P() for kk in self._glob_keys()},
                     P(), P(ax), P(ax), P(ax), P(ax))
-        out_specs = (P(), {kk: P(None, ax) for kk in self._cache_keys()},
-                     {kk: P() for kk in self._glob_keys()}, P(ax))
         fn = shard_map(step_fn, mesh=self.mesh, in_specs=in_specs,
                        out_specs=out_specs, axis_names={ax},
                        check_vma=False)
@@ -993,6 +1039,49 @@ class InterleavedEngine:
         toks = jnp.where(active[:, None], tokens.astype(jnp.int32), 0)
         return self.verify_step(state, toks)
 
+    # -- resident-tier self-draft (DESIGN.md §14) --------------------------------
+    def draft_step(self, state, tokens):
+        """One decode step through ONLY the live resident tier: the same
+        slot schedule as decode_step with zero weight streaming (no
+        offload input at all), the final norm + LM head as the early-exit
+        draft head. tokens: (n_mb*mb, 1) int32 -> (logits, state) with pos
+        advanced by 1.
+
+        Snapshot-and-advance contract: k draft steps write resident-row
+        K/V at positions pos..pos+k-1, then rollback(state, pos) +
+        verify_step overwrite every row (resident AND streamed) at those
+        positions before attention reads them — drafting leaks nothing
+        into the verified stream, and never touches paged accounting
+        (note_committed after acceptance is what grows block tables)."""
+        if self.cfg.family not in (Family.DENSE, Family.MOE):
+            raise NotImplementedError(
+                f"resident self-draft needs pure-KV per-layer state "
+                f"(DENSE/MOE), not {self.cfg.family}")
+        if self.k_res_cap == 0:
+            raise ValueError(
+                "resident self-draft needs a resident tier (plan has "
+                "k_res == 0 on every stage)")
+        if "draft" not in self._steps:
+            self._steps["draft"] = self._build_step(1, resident_only=True)
+        t = tokens.reshape(self.n_mb, self.mb, 1)
+        logits, cache, glob, dbg = self._steps["draft"](
+            state["resident"], state["shared"], state["cache"],
+            state["glob"], t, self._stage_ids, self._kl_dev, self._win_dev,
+            self._live_dev)
+        new_state = dict(state)
+        new_state["cache"] = cache
+        new_state["glob"] = glob
+        self.last_debug = dbg
+        return logits.reshape(self.n_mb * self.mb, -1), new_state
+
+    def draft_requests(self, state, tokens, active):
+        """Slot-masked draft_step (serving entry): inactive slots ride as
+        padding with zeroed tokens. Deliberately NO paged extend — drafted
+        positions own no pages until verification commits them."""
+        active = jnp.asarray(active, bool)
+        toks = jnp.where(active[:, None], tokens.astype(jnp.int32), 0)
+        return self.draft_step(state, toks)
+
     def prefill_partial(self, state, tokens, *, chunk: int = 0):
         """Partial-context prefill through the interleaved pipeline
         (DESIGN.md §12): run `tokens` ((n_mb*mb, T) prompt positions
@@ -1067,6 +1156,17 @@ class InterleavedEngine:
         Eq. 7's (#Seg − 1) factor (n_seg == 1 degenerates to the single
         copy)."""
         return max(self.plan.n_seg - 1, 1) * self.cfg.layer_params() * 2.0
+
+    def resident_layer_ids(self) -> List[int]:
+        """Flat ids of real model layers currently in the resident tier
+        (the live boundary: demoted layers are excluded)."""
+        ids = np.unique(self._res_ids[self._res_ids < self.cfg.n_layers])
+        return [int(i) for i in ids]
+
+    def resident_fraction(self) -> float:
+        """Live resident share of the real layer stack — the draft-quality
+        signal the depth controller's rung priors scale with."""
+        return len(self.resident_layer_ids()) / max(self.cfg.n_layers, 1)
 
     def retier_stats(self) -> Dict[str, Any]:
         return {"k_res_build": list(self.k_res_b),

@@ -41,7 +41,10 @@ def main(argv=None):
                          "them in one pipeline round (DESIGN.md §11)")
     ap.add_argument("--spec-k", type=int, default=4)
     ap.add_argument("--spec-draft", default="ngram",
-                    choices=("ngram", "model"))
+                    choices=("ngram", "model", "resident"),
+                    help="draft provider; 'resident' self-drafts through "
+                         "the target's own resident tier with retier-"
+                         "adaptive depth (DESIGN.md §14)")
     ap.add_argument("--plan", choices=("uniform", "hetero"),
                     default="uniform",
                     help="uniform: hand-built homogeneous split; hetero: "

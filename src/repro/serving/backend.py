@@ -87,11 +87,26 @@ class SimBackend:
         # the acceptance-rate model (each draft token independently
         # accepted with prob spec.acceptance, stopping at the first
         # rejection — the geometric shape real rejection sampling has).
+        # draft="resident" (DESIGN.md §14) scales that acceptance by the
+        # LIVE resident fraction — the plan's resident share minus
+        # whatever the TS ladder has demoted — and adapts draft depth per
+        # rung through a DepthController, so planner demotions visibly
+        # thin the self-draft exactly as they do on the real engine.
         self.spec = spec
+        self._depth = None
         if spec is not None:
             from repro.specdec import SpecStats
             self._spec_rng = np.random.default_rng(spec.seed)
             self._spec_stats = SpecStats()
+            if spec.draft == "resident":
+                total = max(plan.layers_total(), 1)
+                self._res_frac0 = min(
+                    sum(st.resident_total for st in plan.stages) / total,
+                    1.0)
+                if spec.adapt_k:
+                    from repro.specdec import DepthController
+                    self._depth = DepthController(
+                        k_max=spec.k, prior=self._spec_acceptance())
 
     # -- clock -------------------------------------------------------------------
     def now(self) -> float:
@@ -294,7 +309,7 @@ class SimBackend:
         slots = sorted(work)
         q_lens, out = [], {}
         spec_slots = []
-        k = self.spec.k if self.spec is not None else 0
+        k = self._spec_k() if self.spec is not None else 0
         for s in slots:
             w = work[s]
             if w[0] == "prefill":
@@ -318,24 +333,61 @@ class SimBackend:
                 else:
                     out[s] = []
             elif s in spec_slots:
-                out[s] = [None] * self._spec_commit(s)
+                out[s] = [None] * self._spec_commit(s, k)
             else:
                 self._ctx[s] += 1
                 out[s] = [None]
         return out
 
-    def _spec_commit(self, s: int) -> int:
+    def _demoted_layers(self) -> int:
+        """Whole-layer equivalents the TS ladder currently holds demoted
+        (the sim's retier rung; max(α, β) per device, the convention
+        _note_planner_delta reports in)."""
+        pl = self.sim.planner
+        if pl is None:
+            return 0
+        return sum(max(st.alpha, st.beta) for st in pl.states)
+
+    def _resident_frac(self) -> float:
+        """Live resident share: the plan's static fraction minus ladder
+        demotions."""
+        total = max(self.plan.layers_total(), 1)
+        return min(max(self._res_frac0 - self._demoted_layers() / total,
+                       0.0), 1.0)
+
+    def _spec_acceptance(self) -> float:
+        """Per-token acceptance of the model: flat for ngram/model drafts;
+        for the resident self-draft it scales with the live resident
+        fraction (a thinner draft stack proposes worse tokens)."""
+        if self.spec.draft != "resident":
+            return self.spec.acceptance
+        return min(max(self.spec.acceptance * self._resident_frac(),
+                       0.02), 0.98)
+
+    def _spec_k(self) -> int:
+        """Round depth: spec.k, or the DepthController's rung-adapted k
+        for the resident draft (rung = ladder-demoted layers)."""
+        if self._depth is None:
+            return self.spec.k
+        self._depth.note_rung(self._demoted_layers(),
+                              prior=self._spec_acceptance())
+        return self._depth.k()
+
+    def _spec_commit(self, s: int, k: Optional[int] = None) -> int:
         """Draw one slot's committed count from the acceptance model and
         advance its context (shared by decode_active and mixed rounds)."""
-        k = self.spec.k
+        k = self.spec.k if k is None else k
+        a = self._spec_acceptance()
         acc = 0
-        while acc < k and self._spec_rng.random() < self.spec.acceptance:
+        while acc < k and self._spec_rng.random() < a:
             acc += 1
         committed = acc + 1          # accepted prefix + correction/bonus
         self._ctx[s] += committed
         self._spec_stats.rounds += 1
         self._spec_stats.drafted += k
         self._spec_stats.accepted += acc
+        if self._depth is not None:
+            self._depth.note_round(k, acc)
         return committed
 
     def decode_active(self, slots: Sequence[int]):
@@ -353,10 +405,10 @@ class SimBackend:
     def _decode_active_spec(self, slots: Sequence[int], ctx: int):
         """One speculative round: price a (k+1)-query verify pass, then
         commit 1..k+1 tokens per slot from the acceptance model."""
-        k = self.spec.k
+        k = self._spec_k()
         self._sim_step(ctx=ctx, n_micro=len(slots),
                            kv_tokens=self._planner_tokens(), q_len=k + 1)
-        return {s: [None] * self._spec_commit(s) for s in slots}
+        return {s: [None] * self._spec_commit(s, k) for s in slots}
 
     @property
     def spec_stats(self):
@@ -446,12 +498,30 @@ class EngineBackend:
         self.spec = spec
         self._ctl = None
         self._pos = 0                         # host mirror of cache pos
+        # resident self-draft (DESIGN.md §14): with an engine, k tokens
+        # are drafted ON the pipeline itself (draft_requests — resident
+        # tier only, zero weight streaming) and the host providers are
+        # skipped; without one, each slot gets a ResidentDraft over the
+        # bottom spec.resident_layers of the target's own stack. Depth
+        # adapts per retier rung through a DepthController.
+        self._resident_engine = (spec is not None
+                                 and spec.draft == "resident"
+                                 and engine is not None)
+        self._depth = None
         if spec is not None:
             from repro.configs.base import Family
             if cfg.family not in (Family.DENSE, Family.MOE):
                 raise ValueError(
                     f"speculative decoding needs pure-KV per-layer state "
                     f"(DENSE/MOE), not {cfg.family}")
+            if self._resident_engine and engine.k_res_cap == 0:
+                raise ValueError(
+                    "draft='resident' needs a resident tier; this "
+                    "engine's plan streams every layer (k_res == 0)")
+            if spec.draft == "resident" and spec.adapt_k:
+                from repro.specdec import DepthController
+                self._depth = DepthController(k_max=spec.k,
+                                              prior=spec.acceptance)
             # verify windows must not wrap the cache ring: cap rounds at
             # the ACTUAL KV length (sliding-window caches have
             # S_c = window < max_len), not max_len. Past the ring end the
@@ -569,7 +639,20 @@ class EngineBackend:
             key = "layers_demoted" if freed > 0 else "layers_promoted"
             self._adapt[key] += moved
             self._adapt["hbm_returned_bytes"] += max(freed, 0.0)
+            self._sync_depth_rung()
         return freed
+
+    def _sync_depth_rung(self) -> None:
+        """Tell the DepthController the tier boundary moved: the new rung
+        (total demoted slots) starts from an acceptance prior scaled by
+        the LIVE resident fraction — a demotion shrinks k immediately
+        instead of waiting for rejections to pile up (DESIGN.md §14)."""
+        if self._depth is None or self.engine is None:
+            return
+        eng = self.engine
+        rung = sum(eng.demoted(d) for d in range(eng.plan.n_stage))
+        self._depth.note_rung(
+            rung, prior=self.spec.acceptance * eng.resident_fraction())
 
     def _retier_to(self, stage: int, target_demoted: int) -> None:
         """Planner-driven: demote until `stage` has target_demoted slots
@@ -809,8 +892,10 @@ class EngineBackend:
         if self.spec is not None:
             from repro.specdec import SpecDecodeController
             if self._ctl is None:
-                self._ctl = SpecDecodeController(self.spec, self.sampler,
-                                                 self.cfg, self.batch_width)
+                self._ctl = SpecDecodeController(
+                    self.spec, self.sampler, self.cfg, self.batch_width,
+                    target_params=self.params,
+                    external_drafts=self._resident_engine)
             self._pos = int(toks.shape[1])    # left-padded prompt span
             for slot, p in enumerate(prompts):
                 # drafts see the real (unpadded) prompt + first token
@@ -823,7 +908,10 @@ class EngineBackend:
         # speculative round when a draft fits before the cache/ring end
         # (the last position is reserved for the committed-token write)
         if self.spec is not None:
-            k = min(self.spec.k, self._spec_cap - self._pos - 1)
+            if self._depth is not None:
+                self._sync_depth_rung()
+            k_cap = self.spec.k if self._depth is None else self._depth.k()
+            k = min(k_cap, self._spec_cap - self._pos - 1)
             if slots and k >= 1:
                 return self._decode_active_spec(slots, k)
         active = np.zeros(self.batch_width, bool)
@@ -862,13 +950,22 @@ class EngineBackend:
         import jax.numpy as jnp
         cur = np.array(self._cur, np.int32)             # (B, 1) host copy
         mat = np.tile(cur, (1, 1 + k))                  # padding: replicas
-        proposals = {}
-        for s in slots:
-            toks, qp = self._ctl.propose(s, k)
-            proposals[s] = (toks, qp)
-            mat[s, 1:] = toks
         active = np.zeros(self.batch_width, bool)
         active[list(slots)] = True
+        proposals = {}
+        if self._resident_engine:
+            # self-draft on the pipeline: k resident-only steps (zero
+            # weight streaming) batched across ALL live slots, then the
+            # drafted positions roll back before the full verify pass
+            draft = self._draft_resident(active, k)
+            for s in slots:
+                proposals[s] = (draft[s], None)         # greedy point-mass
+                mat[s, 1:] = draft[s]
+        else:
+            for s in slots:
+                toks, qp = self._ctl.propose(s, k)
+                proposals[s] = (toks, qp)
+                mat[s, 1:] = toks
         if self.engine is not None:
             lg, self._state = self.engine.verify_requests(
                 self._state, jnp.asarray(mat), jnp.asarray(active))
@@ -890,6 +987,10 @@ class EngineBackend:
             # accepted AND committed drafts only (out = accepted drafts +
             # one correction/bonus; truncated tokens re-draft next round)
             self._ctl.note_round(k, min(c, len(committed[s]) - 1))
+        if self._depth is not None:
+            self._depth.note_round(
+                k * len(slots),
+                sum(min(c, len(committed[s]) - 1) for s in slots))
         committed = {s: v[:c] for s, v in committed.items()}
         new_pos = self._pos + c
         if self.engine is not None:
@@ -912,6 +1013,25 @@ class EngineBackend:
                 self._donate_slot(s)
         self._cur = jnp.asarray(cur)
         return committed
+
+    def _draft_resident(self, active: np.ndarray, k: int) -> np.ndarray:
+        """Propose k greedy tokens per slot via the engine's resident-only
+        step (DESIGN.md §14): the draft rides the live tier boundary and
+        the real slot caches, then rolls back to self._pos so the verify
+        pass overwrites every drafted position. Returns (B, k) int32."""
+        import jax.numpy as jnp
+        eng = self.engine
+        act = jnp.asarray(active)
+        st = self._state
+        cur = jnp.asarray(np.array(self._cur, np.int32))
+        out = np.empty((self.batch_width, k), np.int32)
+        for i in range(k):
+            lg, st = eng.draft_requests(st, cur, act)
+            cur = jnp.argmax(lg[:, :self.cfg.vocab_size],
+                             -1)[:, None].astype(jnp.int32)
+            out[:, i] = np.asarray(cur)[:, 0]
+        self._state = eng.rollback(st, self._pos)
+        return out
 
     @property
     def spec_stats(self):

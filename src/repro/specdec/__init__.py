@@ -8,15 +8,21 @@ equals autoregressive sampling from the target. The rejected suffix rolls
 back by resetting the decode position (dense caches) or truncating block
 tables (paged KV).
 
-  draft.py       pluggable proposers: n-gram/prompt-lookup self-draft
-                 (no extra weights), small-model draft (any registered
-                 config)
-  sampler.py     exact greedy + stochastic acceptance-rejection
-  controller.py  SpecConfig + the per-slot propose/verify/commit loop
+  draft.py          pluggable proposers: n-gram/prompt-lookup self-draft
+                    (no extra weights), small-model draft (any registered
+                    config)
+  resident_draft.py resident-tier self-draft (DESIGN.md §14): truncated
+                    forward through the target's own resident layers +
+                    DepthController (retier-adaptive k)
+  sampler.py        exact greedy + stochastic acceptance-rejection
+  controller.py     SpecConfig + the per-slot propose/verify/commit loop
 """
 from repro.specdec.controller import (SpecConfig,  # noqa: F401
                                       SpecDecodeController, SpecStats)
 from repro.specdec.draft import (NgramDraft, SmallModelDraft,  # noqa: F401
                                  make_draft_provider)
+from repro.specdec.resident_draft import (DepthController,  # noqa: F401
+                                          ResidentDraft,
+                                          default_resident_ids)
 from repro.specdec.sampler import (greedy_verify,  # noqa: F401
                                    rejection_verify, target_probs)

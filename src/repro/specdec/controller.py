@@ -26,16 +26,28 @@ from repro.specdec.sampler import (greedy_verify, rejection_verify,
 class SpecConfig:
     """Knobs for speculative decoding, shared by both backends.
 
-    k                 drafted tokens per round (verify scores k+1)
-    draft             "ngram" (prompt-lookup self-draft, no weights) or
+    k                 drafted tokens per round (verify scores k+1); with
+                      adapt_k this is the CAP the depth controller adapts
+                      under (the scheduler reserves k+1 tokens per round)
+    draft             "ngram" (prompt-lookup self-draft, no weights),
                       "model" (small-model draft from a registered config)
+                      or "resident" (truncated forward through the target's
+                      own resident tier — DESIGN.md §14)
     max_ngram         longest tail n-gram the lookup draft matches
     draft_arch        registry arch for draft="model" (smoke-reduced)
     draft_temperature sampling temperature of the model draft (0 = greedy
                       point-mass proposals)
     acceptance        per-draft-token acceptance probability of the
                       SimBackend's acceptance-rate model (the simulator
-                      has no real tokens to verify)
+                      has no real tokens to verify); for draft="resident"
+                      it is the FULL-residency acceptance, scaled by the
+                      live resident fraction (sim) / used as the depth
+                      controller's rung prior (engine)
+    resident_layers   draft="resident" without an engine: how many bottom
+                      layers form the draft (default n_layers // 2); the
+                      engine path reads the live tier boundary instead
+    adapt_k           draft="resident": adapt depth per retier rung via
+                      DepthController (k stays the cap)
     seed              host-side rng (rejection sampling + sim model)
     """
     k: int = 4
@@ -44,6 +56,8 @@ class SpecConfig:
     draft_arch: Optional[str] = None
     draft_temperature: float = 0.0
     acceptance: float = 0.8
+    resident_layers: Optional[int] = None
+    adapt_k: bool = True
     seed: int = 0
 
 
@@ -67,23 +81,36 @@ class SpecDecodeController:
     """Per-slot drafting + lossless acceptance for one serving batch."""
 
     def __init__(self, spec: SpecConfig, sampler: SamplerConfig,
-                 target_cfg, n_slots: int):
+                 target_cfg, n_slots: int, *, target_params=None,
+                 resident_ids=None, external_drafts: bool = False):
+        """external_drafts: the backend proposes tokens itself (the
+        engine's on-device resident draft) and uses the controller only
+        for verification + stats; no host providers are built and
+        begin/observe are no-ops."""
         self.spec = spec
         self.sampler = sampler
         self.cfg = target_cfg
-        self.drafts = [make_draft_provider(spec, target_cfg)
-                       for _ in range(n_slots)]
+        if external_drafts:
+            self.drafts = None
+        else:
+            self.drafts = [
+                make_draft_provider(spec, target_cfg,
+                                    target_params=target_params,
+                                    resident_ids=resident_ids)
+                for _ in range(n_slots)]
         self._rng = np.random.default_rng(spec.seed)
         self.stats = SpecStats()
 
     # -- sequence lifecycle ------------------------------------------------------
     def begin(self, slot: int, tokens) -> None:
         """Start a sequence on `slot`: prompt + the first sampled token."""
-        self.drafts[slot].reset(tokens)
+        if self.drafts is not None:
+            self.drafts[slot].reset(tokens)
 
     def observe(self, slot: int, tokens) -> None:
         """Feed the round's committed tokens back to the draft."""
-        self.drafts[slot].observe(tokens)
+        if self.drafts is not None:
+            self.drafts[slot].observe(tokens)
 
     # -- one round ---------------------------------------------------------------
     def propose(self, slot: int,
@@ -91,6 +118,8 @@ class SpecDecodeController:
                                                   Optional[np.ndarray]]:
         """k: round cap from the backend (near the cache end it shrinks
         below spec.k — drafting past it would be discarded work)."""
+        assert self.drafts is not None, \
+            "external_drafts controller: the backend proposes"
         return self.drafts[slot].propose(self.spec.k if k is None else k)
 
     def verify(self, logits: np.ndarray, draft: np.ndarray,

@@ -130,10 +130,28 @@ class SmallModelDraft:
         return toks, probs
 
 
-def make_draft_provider(spec, target_cfg):
-    """Build one provider from a SpecConfig (controller.py)."""
+def make_draft_provider(spec, target_cfg, *, target_params=None,
+                        resident_ids=None):
+    """Build one provider from a SpecConfig (controller.py).
+
+    target_params / resident_ids only matter for draft="resident": the
+    resident draft truncates the TARGET's own stacked layers (early-exit
+    head), so it needs the real weights and, optionally, the live set of
+    resident layer ids (defaults to the bottom spec.resident_layers)."""
     if spec.draft == "ngram":
         return NgramDraft(max_ngram=spec.max_ngram)
+    if spec.draft == "resident":
+        from repro.specdec.resident_draft import (ResidentDraft,
+                                                  default_resident_ids)
+        if target_params is None:
+            raise ValueError(
+                "draft='resident' needs the target params (the draft IS "
+                "the target's resident tier)")
+        ids = (resident_ids if resident_ids is not None else
+               default_resident_ids(target_cfg, spec.resident_layers))
+        return ResidentDraft(target_cfg, target_params, ids,
+                             temperature=spec.draft_temperature,
+                             seed=spec.seed)
     if spec.draft == "model":
         import jax
 

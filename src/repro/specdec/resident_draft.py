@@ -1,0 +1,164 @@
+"""Resident-tier self-speculative drafting (DESIGN.md §14).
+
+LIME's offload split leaves a *resident* tier permanently in device HBM
+while the streamed tier pays a weight-fetch round per decoded token. That
+split is a free draft model: run a truncated forward pass through only the
+resident layers (skip every streamed layer; apply the final norm + LM head
+as an early-exit head) and the proposal costs zero extra weight HBM and no
+streaming round. Verification still goes through the full interleaved
+pipeline with the rejection sampler, so output stays lossless — the draft
+only sets the acceptance rate.
+
+Two pieces live here:
+
+  ResidentDraft    host-side DraftProvider over a truncated layer stack
+                   (the single-device analogue of the engine's
+                   ``draft_step``, sharing embed/final-norm/unembed with
+                   the target as the early-exit head). The engine path
+                   drafts on-device instead (``InterleavedEngine.
+                   draft_step``) and never builds this class.
+  DepthController  retier-adaptive draft depth: per-rung acceptance-rate
+                   EMA, where a rung is the number of currently demoted
+                   layers. Demotions thin the draft and shrink k;
+                   promotions restore it. k = round(a/(1-a)) clipped to
+                   [k_min, spec.k] — the expected accepted run of a
+                   geometric(a) acceptance stream, never exceeding the
+                   scheduler's per-round token reservation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.specdec.draft import SmallModelDraft
+
+
+def default_resident_ids(cfg, n: Optional[int] = None) -> List[int]:
+    """First-n layer ids for an engine-less resident draft (the bottom of
+    the stack is what allocate() keeps resident in a uniform plan)."""
+    if n is None:
+        n = max(1, cfg.n_layers // 2)
+    return list(range(min(max(int(n), 1), cfg.n_layers)))
+
+
+def truncate_stack(cfg, params, resident_ids: Sequence[int]):
+    """(cfg, params) restricted to ``resident_ids`` of the stacked layer
+    pytree; embeddings, final norm and LM head are shared (early exit)."""
+    import jax
+    import jax.numpy as jnp
+    ids = sorted({int(i) for i in resident_ids})
+    if not ids:
+        raise ValueError("resident draft needs at least one resident layer")
+    if any(i < 0 or i >= cfg.n_layers for i in ids):
+        raise ValueError(f"resident ids {ids} outside 0..{cfg.n_layers - 1}")
+    if "dense_layers" in params:
+        raise NotImplementedError(
+            "resident draft supports homogeneous stacked layers only")
+    idx = jnp.asarray(ids, jnp.int32)
+    sub = {k: (jax.tree.map(lambda a: a[idx], v) if k == "layers" else v)
+           for k, v in params.items()}
+    sub_cfg = dataclasses.replace(cfg, n_layers=len(ids))
+    return sub_cfg, sub
+
+
+class ResidentDraft(SmallModelDraft):
+    """DraftProvider running the target's own resident layers as the draft.
+
+    Snapshot-and-advance semantics are inherited from SmallModelDraft (the
+    truncated stack keeps its own committed-only cache; propose() decodes
+    from an immutable snapshot). On top of that it tracks the committed
+    token history so ``retier()`` can rebuild the truncated stack when the
+    live tier boundary moves, replaying the history through the new stack.
+
+    Window-pattern note: LOCAL_GLOBAL / sliding configs index their window
+    pattern by position in the (truncated) stack, so a truncated model may
+    see a different local/global mix than the same layers inside the full
+    model. That only shifts draft quality — verification is lossless.
+    """
+
+    def __init__(self, cfg, params, resident_ids: Sequence[int], *,
+                 max_len: int = 512, temperature: float = 0.0,
+                 seed: int = 0):
+        self._full_cfg = cfg
+        self._full_params = params
+        self.resident_ids = tuple(sorted({int(i) for i in resident_ids}))
+        sub_cfg, sub_params = truncate_stack(cfg, params, self.resident_ids)
+        super().__init__(sub_cfg, sub_params, max_len=max_len,
+                         temperature=temperature, seed=seed)
+        self._tokens: List[int] = []
+
+    def reset(self, tokens) -> None:
+        self._tokens = [int(t) for t in tokens]
+        super().reset(tokens)
+
+    def observe(self, tokens) -> None:
+        self._tokens.extend(int(t) for t in tokens)
+        super().observe(tokens)
+
+    def retier(self, resident_ids: Sequence[int]) -> None:
+        """The live tier boundary moved: rebuild the truncated stack and
+        replay the committed history through it."""
+        ids = tuple(sorted({int(i) for i in resident_ids}))
+        if ids == self.resident_ids:
+            return
+        self.resident_ids = ids
+        sub_cfg, sub_params = truncate_stack(self._full_cfg,
+                                             self._full_params, ids)
+        import functools
+
+        import jax
+        self.cfg = sub_cfg
+        self.params = sub_params
+        self._decode = jax.jit(functools.partial(self._M.decode_step,
+                                                 sub_cfg))
+        self._prefill = jax.jit(functools.partial(self._M.prefill, sub_cfg))
+        if self._tokens:
+            super().reset(self._tokens)
+
+
+class DepthController:
+    """Adapts draft depth k to the live tier boundary (DESIGN.md §14).
+
+    State is an acceptance-rate EMA *per ladder rung* (rung = number of
+    demoted layers): retier events switch rungs rather than polluting one
+    global average, so a rung revisited after a promotion remembers what
+    the draft was worth there. Unseen rungs start from a prior — callers
+    pass ``acceptance x resident_fraction`` so a demotion immediately
+    shrinks k instead of waiting for rejections to pile up."""
+
+    def __init__(self, k_max: int, *, k_min: int = 1, decay: float = 0.7,
+                 prior: float = 0.6):
+        self.k_max = max(int(k_max), 1)
+        self.k_min = min(max(int(k_min), 1), self.k_max)
+        self.decay = float(decay)
+        self.prior = min(max(float(prior), 0.0), 0.99)
+        self._ema: Dict[int, float] = {}
+        self._rung = 0
+
+    @property
+    def rung(self) -> int:
+        return self._rung
+
+    def note_rung(self, rung: int, prior: Optional[float] = None) -> None:
+        """Switch to ``rung``; seed its EMA from ``prior`` if unseen."""
+        self._rung = int(rung)
+        if self._rung not in self._ema:
+            p = self.prior if prior is None else float(prior)
+            self._ema[self._rung] = min(max(p, 0.0), 0.99)
+
+    def note_round(self, drafted: int, accepted: int) -> None:
+        if drafted <= 0:
+            return
+        rate = min(max(accepted / drafted, 0.0), 1.0)
+        e = self._ema.get(self._rung, self.prior)
+        self._ema[self._rung] = self.decay * e + (1.0 - self.decay) * rate
+
+    @property
+    def acceptance(self) -> float:
+        return self._ema.get(self._rung, self.prior)
+
+    def k(self) -> int:
+        """Expected accepted-run length of a geometric(a) stream."""
+        a = self.acceptance
+        k = int(round(a / max(1.0 - a, 1e-6)))
+        return min(max(k, self.k_min), self.k_max)

@@ -1,0 +1,294 @@
+"""DraftProvider conformance + sampler losslessness properties
+(DESIGN.md §11/§14).
+
+Every provider — n-gram, small-model, resident-tier — must satisfy one
+contract: propose(k) returns exactly k in-vocab tokens WITHOUT mutating
+committed state (propose is a snapshot), observe() is the only way to
+advance, and reset(h1 + h2) is indistinguishable from reset(h1) +
+observe(h2). A rejected proposal must leave no trace (snapshot/advance
+with rollback). ResidentDraft additionally survives retier() — the live
+tier boundary moving under it — by replaying its committed history, and
+spec rollback over paged KV must hold exactly the pages a non-spec decode
+of the same committed tokens holds (no page leaks).
+
+The sampler half: hypothesis properties pinning greedy_verify to the
+argmax-chain prefix and rejection_verify to the accepted-prefix shape.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.specdec import (DepthController, NgramDraft, ResidentDraft,
+                           SmallModelDraft, default_resident_ids,
+                           greedy_verify, rejection_verify)
+from repro.specdec.resident_draft import truncate_stack
+
+HIST = [3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5]
+KINDS = ("ngram", "model", "resident")
+
+
+@pytest.fixture(params=KINDS)
+def provider_factory(request, smoke_model):
+    """Fresh-provider factory for one kind, with .kind/.vocab attached."""
+    cfg, params = smoke_model
+    kind = request.param
+
+    def make(temperature=0.0):
+        if kind == "ngram":
+            return NgramDraft(max_ngram=3)
+        if kind == "model":
+            return SmallModelDraft(cfg, params, max_len=64,
+                                   temperature=temperature)
+        return ResidentDraft(cfg, params, default_resident_ids(cfg),
+                             max_len=64, temperature=temperature)
+
+    make.kind = kind
+    make.vocab = cfg.vocab_size
+    return make
+
+
+# ----------------------------------------------------------------------------
+# the shared provider contract
+# ----------------------------------------------------------------------------
+def test_propose_exact_length_and_vocab(provider_factory):
+    d = provider_factory()
+    d.reset(HIST)
+    for k in (1, 3, 5):
+        toks, probs = d.propose(k)
+        toks = np.asarray(toks)
+        assert toks.shape == (k,)
+        assert toks.dtype == np.int32
+        assert bool(((toks >= 0) & (toks < provider_factory.vocab)).all())
+        assert probs is None            # temperature 0: point-mass draft
+
+
+def test_stochastic_propose_probs_are_distributions(provider_factory):
+    if provider_factory.kind == "ngram":
+        pytest.skip("n-gram drafts are always point-mass")
+    d = provider_factory(temperature=0.8)
+    d.reset(HIST)
+    toks, probs = d.propose(4)
+    assert probs.shape == (4, provider_factory.vocab)
+    assert bool((probs >= 0).all())
+    assert np.allclose(probs.sum(-1), 1.0, atol=1e-6)
+    # each proposed token must be drawable under its own row of q
+    assert all(probs[i, int(t)] > 0 for i, t in enumerate(toks))
+
+
+def test_propose_is_snapshot(provider_factory):
+    d = provider_factory()
+    d.reset(HIST)
+    a, _ = d.propose(4)
+    b, _ = d.propose(4)
+    assert list(a) == list(b)
+
+
+def test_rejected_proposal_never_pollutes(provider_factory):
+    """propose(), then commit something the draft did NOT predict: the
+    provider must behave exactly like a twin that never proposed."""
+    a, b = provider_factory(), provider_factory()
+    a.reset(HIST)
+    b.reset(HIST)
+    drafted, _ = a.propose(4)
+    committed = [(int(drafted[0]) + 1) % provider_factory.vocab,
+                 (int(drafted[0]) + 2) % provider_factory.vocab]
+    a.observe(committed)
+    b.observe(committed)
+    pa, _ = a.propose(4)
+    pb, _ = b.propose(4)
+    assert list(pa) == list(pb)
+
+
+def test_reset_equals_reset_plus_observe(provider_factory):
+    a, b = provider_factory(), provider_factory()
+    a.reset(HIST)
+    b.reset(HIST[:5])
+    b.observe(HIST[5:])
+    pa, _ = a.propose(4)
+    pb, _ = b.propose(4)
+    assert list(pa) == list(pb)
+
+
+# ----------------------------------------------------------------------------
+# ResidentDraft specifics: truncation + retier replay
+# ----------------------------------------------------------------------------
+def test_truncate_stack_validates_and_shares_head(smoke_model):
+    cfg, params = smoke_model
+    with pytest.raises(ValueError):
+        truncate_stack(cfg, params, [])
+    with pytest.raises(ValueError):
+        truncate_stack(cfg, params, [cfg.n_layers])
+    sub_cfg, sub = truncate_stack(cfg, params, [0])
+    assert sub_cfg.n_layers == 1
+    # embeddings / final norm / LM head are SHARED (early-exit head), not
+    # copied: every non-layer leaf must be the same object
+    for k, v in params.items():
+        if k != "layers":
+            assert sub[k] is v, k
+
+
+def test_default_resident_ids_bottom_of_stack(smoke_model):
+    cfg, _ = smoke_model
+    assert default_resident_ids(cfg) == \
+        list(range(max(1, cfg.n_layers // 2)))
+    assert default_resident_ids(cfg, 1) == [0]
+    assert default_resident_ids(cfg, 10 ** 6) == list(range(cfg.n_layers))
+
+
+def test_resident_retier_replays_history(smoke_model):
+    """A retier event mid-sequence rebuilds the truncated stack and
+    replays the committed history: afterwards the provider is
+    indistinguishable from one built with the new tier from scratch."""
+    cfg, params = smoke_model
+    a = ResidentDraft(cfg, params, [0], max_len=64)
+    a.reset(HIST)
+    a.observe([7, 7])
+    a.propose(3)                        # a pending (soon stale) snapshot
+    a.retier(range(cfg.n_layers))       # promotion: full stack resident
+    fresh = ResidentDraft(cfg, params, range(cfg.n_layers), max_len=64)
+    fresh.reset(HIST + [7, 7])
+    pa, _ = a.propose(4)
+    pf, _ = fresh.propose(4)
+    assert list(pa) == list(pf)
+    # no-op retier must not re-jit the decode callables
+    dec = a._decode
+    a.retier(range(cfg.n_layers))
+    assert a._decode is dec
+
+
+# ----------------------------------------------------------------------------
+# paged KV: spec rollback leaks no pages, and stays lossless
+# ----------------------------------------------------------------------------
+def test_resident_spec_paged_rollback_no_page_leak(smoke_model):
+    """Greedy spec decode with ResidentDraft proposals over paged KV: the
+    committed stream equals plain autoregressive decode, and after every
+    partial-commit rollback the cache holds exactly the pages a non-spec
+    twin decoding the same committed tokens holds."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kvcache.paged_decode import PagedDecodeCache
+    from repro.models import model as M
+    cfg, params = smoke_model
+    toks = jnp.asarray([HIST], jnp.int32)
+    cache = M.init_cache(cfg, 1, 64)
+    logits, cache = jax.jit(functools.partial(M.prefill, cfg))(
+        params, toks, cache)
+    first = int(jnp.argmax(logits[0, -1, :cfg.vocab_size]))
+
+    # dense autoregressive reference
+    c1 = dict(cache)
+    cur = jnp.asarray([[first]], jnp.int32)
+    want = [first]
+    for _ in range(8):
+        lg, c1 = M.decode_step(cfg, params, c1, cur)
+        cur = jnp.argmax(lg[:, 0, :cfg.vocab_size], -1)[:, None] \
+            .astype(jnp.int32)
+        want.append(int(cur[0, 0]))
+
+    draft = ResidentDraft(cfg, params, [0], max_len=64)
+    draft.reset(HIST + [first])
+    spec_pc = PagedDecodeCache(cfg, 1, 64, page_size=4)
+    spec_pc.seed(cache)
+    twin_pc = PagedDecodeCache(cfg, 1, 64, page_size=4)
+    twin_pc.seed(cache)
+
+    got, cur = [first], first
+    while len(got) < 9:
+        d, _ = draft.propose(3)
+        mat = np.concatenate([np.array([[cur]], np.int32),
+                              np.asarray(d)[None, :]], 1)
+        lg = np.asarray(spec_pc.verify(params, mat), np.float32)
+        committed = greedy_verify(lg[0], d, cfg.vocab_size)
+        spec_pc.commit(len(committed))
+        tcur = cur
+        for t in committed:             # twin: plain decode, same tokens
+            twin_pc.step(params, np.array([[tcur]], np.int32))
+            tcur = t
+        assert spec_pc.pages_in_use == twin_pc.pages_in_use
+        draft.observe(committed)
+        got.extend(committed)
+        cur = committed[-1]
+    assert got[:9] == want, (got, want)
+    spec_pc.release()
+    twin_pc.release()
+    assert spec_pc.pool.alloc.used_pages == 0
+    assert twin_pc.pool.alloc.used_pages == 0
+
+
+# ----------------------------------------------------------------------------
+# DepthController: retier-adaptive draft depth
+# ----------------------------------------------------------------------------
+def test_depth_controller_maps_acceptance_to_depth():
+    d = DepthController(k_max=6, k_min=1)
+    d.note_rung(0, prior=0.9)
+    assert d.k() == 6                   # 0.9/0.1 = 9, clipped to k_max
+    d.note_rung(1, prior=0.5)
+    assert d.k() == 1                   # expected run of geometric(0.5)
+    d.note_rung(2, prior=0.05)
+    assert d.k() == 1                   # never below k_min
+
+
+def test_depth_controller_remembers_revisited_rungs():
+    d = DepthController(k_max=8, decay=0.5, prior=0.5)
+    d.note_rung(0, prior=0.95)
+    assert d.k() == 8
+    for _ in range(8):
+        d.note_round(8, 1)              # rung 0 turns out terrible
+    shrunk = d.k()
+    assert shrunk < 8
+    d.note_rung(3, prior=0.9)           # demotion: unseen rung seeds high
+    assert d.k() > shrunk
+    d.note_rung(0)                      # revisit: EMA kept, prior ignored
+    assert d.k() == shrunk
+    d.note_round(0, 0)                  # empty round: no-op
+    assert d.k() == shrunk
+
+
+# ----------------------------------------------------------------------------
+# sampler properties (hypothesis; deterministic stub when not installed)
+# ----------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 6), st.integers(2, 33))
+def test_greedy_verify_commits_exact_argmax_chain(seed, k, V):
+    """Greedy rejection commits precisely the argmax chain: accepted
+    drafts up to the first mismatch, then the correction (or the bonus
+    after full acceptance) — never more, never fewer, never a padded-
+    vocab token."""
+    r = np.random.default_rng(seed)
+    lg = r.normal(size=(k + 1, V + 2))
+    lg[:, V:] = 99.0                    # poisoned padding must be cut
+    draft = r.integers(0, V, k)
+    got = greedy_verify(lg, draft, V)
+    am = lg[:, :V].argmax(-1)
+    want = []
+    for i in range(k):
+        want.append(int(am[i]))
+        if int(draft[i]) != int(am[i]):
+            break
+    else:
+        want.append(int(am[k]))
+    assert got == want
+    assert 1 <= len(got) <= k + 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 6), st.integers(2, 17),
+       st.sampled_from([True, False]))
+def test_rejection_verify_commit_shape(seed, k, V, point_mass):
+    """Stochastic rejection commits 1..k+1 in-vocab tokens whose prefix
+    (all but the last) is exactly the accepted draft prefix."""
+    r = np.random.default_rng(seed)
+    p = r.random((k + 1, V)) + 1e-3
+    p /= p.sum(-1, keepdims=True)
+    draft = r.integers(0, V, k)
+    q = None
+    if not point_mass:
+        q = r.random((k, V)) + 1e-3
+        q /= q.sum(-1, keepdims=True)
+    got = rejection_verify(np.random.default_rng(seed + 1), p, draft, q)
+    assert 1 <= len(got) <= k + 1
+    assert all(0 <= t < V for t in got)
+    assert got[:-1] == [int(d) for d in draft[:len(got) - 1]]

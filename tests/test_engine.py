@@ -79,6 +79,7 @@ sys.exit(1 if fails else 0)
 
 
 @pytest.mark.slow
+@pytest.mark.subprocess
 def test_engine_lossless_all_families():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -143,6 +144,7 @@ sys.exit(0 if worst < 5e-4 else 1)
 
 
 @pytest.mark.slow
+@pytest.mark.subprocess
 def test_engine_lossless_multipod():
     """Decode through the 3-axis production mesh shape (pod, data, model):
     pod shards the bursty replicas, data is the pipeline, model is TP."""
@@ -253,6 +255,7 @@ sys.exit(0 if worst < 5e-4 else 1)
 
 
 @pytest.mark.slow
+@pytest.mark.subprocess
 def test_engine_paged_kv_lossless_and_accounted():
     """Paged engine contract: block-table adoption is lossless and slot
     page counts track seed / extend / free exactly."""
@@ -267,6 +270,7 @@ def test_engine_paged_kv_lossless_and_accounted():
 
 
 @pytest.mark.slow
+@pytest.mark.subprocess
 def test_engine_lossless_ring_buffer_long_mode():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

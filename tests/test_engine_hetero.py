@@ -6,10 +6,6 @@ token-identical to the uniform path at bf16, on both the ref and Pallas
 attention impls. Distributed cases re-exec in a subprocess with a forced
 host device count (the test_engine.py convention).
 """
-import os
-import subprocess
-import sys
-
 import numpy as np
 import pytest
 
@@ -84,18 +80,115 @@ sys.exit(1 if fails else 0)
 
 
 @pytest.mark.slow
-def test_engine_hetero_and_retier_token_identical():
+@pytest.mark.subprocess
+def test_engine_hetero_and_retier_token_identical(run_worker):
     """Heterogeneous ExecutionPlan (unequal per-stage k_res/k_off) and
     mid-stream retier events are token-identical to the uniform path at
     bf16, ref + Pallas."""
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    r = subprocess.run([sys.executable, "-c", WORKER], env=env,
-                       capture_output=True, text=True, timeout=900)
-    sys.stdout.write(r.stdout)
-    sys.stderr.write(r.stderr[-2000:])
+    r = run_worker(WORKER)
     assert r.returncode == 0 and "HETERO_OK" in r.stdout
+
+
+# ----------------------------------------------------------------------------
+# retier DURING speculative decoding (DESIGN.md §14): a demotion between
+# spec rounds must not disturb losslessness — the resident self-draft
+# thins, the verify pass still corrects everything
+# ----------------------------------------------------------------------------
+SPEC_RETIER_WORKER = r"""
+import jax, jax.numpy as jnp, numpy as np, sys
+import repro.core.engine as E
+from repro.core.cost_model import ExecutionPlan, StageAlloc
+from repro.configs.base import ModelConfig, Family
+from repro.models import model as M
+from repro.specdec import greedy_verify
+
+cfg = ModelConfig(name="d", family=Family.DENSE, n_layers=8, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                  head_dim=16)
+key = jax.random.PRNGKey(0)
+HET = ExecutionPlan(n_seg=2, stages=[StageAlloc(2, 1), StageAlloc(0, 1),
+                                     StageAlloc(2, 0), StageAlloc(0, 1)])
+STEPS = 12
+
+
+def make(mesh, impl):
+    params = M.init_params(cfg, key)
+    eng = E.InterleavedEngine(cfg, mesh, HET, n_mb=1, mb=2, max_len=48,
+                              impl=impl, retier_headroom=1)
+    return eng, eng.init_state(params)
+
+
+def greedy(lg):
+    return jnp.argmax(lg[:, :cfg.vocab_size], -1)[:, None].astype(jnp.int32)
+
+
+fails = []
+for impl, shape, axes in (("ref", (4, 2), ("data", "model")),
+                          ("pallas", (4,), ("data",))):
+    mesh = jax.make_mesh(shape, axes)
+    tok0 = jax.random.randint(key, (2, 1), 0, cfg.vocab_size)
+
+    # plain autoregressive greedy reference on the SAME hetero plan
+    eng, st = make(mesh, impl)
+    t, ref = tok0, []
+    for _ in range(STEPS):
+        lg, st = eng.decode_step(st, t)
+        t = greedy(lg)
+        ref.append(np.asarray(t)[:, 0].copy())
+    ref = np.stack(ref)
+
+    # resident self-spec loop, retiering stage 0 BETWEEN spec rounds:
+    # demote after round 2 (the draft loses a resident layer mid-stream),
+    # promote it back after round 4
+    eng, st = make(mesh, impl)
+    t = np.array(tok0, np.int32)
+    out = [[], []]
+    pos, rounds = 0, 0
+    while min(len(o) for o in out) < STEPS:
+        cur = jnp.asarray(t)
+        drafts = np.zeros((2, 3), np.int32)
+        for i in range(3):
+            lg, st = eng.draft_step(st, cur)
+            cur = greedy(lg)
+            drafts[:, i] = np.asarray(cur)[:, 0]
+        st = eng.rollback(st, pos)
+        lg, st = eng.verify_step(st, jnp.asarray(
+            np.concatenate([t, drafts], 1)))
+        lgn = np.asarray(lg, np.float32)
+        committed = [greedy_verify(lgn[b], drafts[b], cfg.vocab_size)
+                     for b in range(2)]
+        c = min(len(x) for x in committed)
+        pos += c
+        st = eng.rollback(st, pos)
+        for b in range(2):
+            out[b].extend(committed[b][:c])
+            t[b, 0] = committed[b][c - 1]
+        rounds += 1
+        if rounds == 2:
+            st, freed = eng.retier(st, 0, +1)
+            assert freed > 0, freed
+        if rounds == 4:
+            st, freed = eng.retier(st, 0, -1)
+            assert freed < 0, freed
+    got = np.stack([np.asarray(o[:STEPS]) for o in out], 1)
+    ok = (got == ref).all()
+    print(f"{impl}: retier x spec tokens "
+          f"{'identical' if ok else 'MISMATCH'} ({rounds} rounds)")
+    if not ok:
+        fails.append(impl)
+print("SPEC_RETIER_OK" if not fails else f"FAILS {fails}")
+sys.exit(1 if fails else 0)
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.subprocess
+def test_engine_retier_during_spec_token_identical(run_worker):
+    """Mid-stream demotion AND promotion between resident-draft spec
+    rounds leave the committed stream token-identical to plain greedy
+    decode on the same heterogeneous plan, ref + Pallas."""
+    r = run_worker(SPEC_RETIER_WORKER)
+    assert r.returncode == 0 and "SPEC_RETIER_OK" in r.stdout
 
 
 # ----------------------------------------------------------------------------

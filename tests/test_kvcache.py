@@ -425,6 +425,7 @@ sys.exit(1 if fails else 0)
 
 
 @pytest.mark.slow
+@pytest.mark.subprocess
 def test_paged_decode_lossless_vs_decode_step():
     """Engine-tier losslessness: paged decode (pool + block tables +
     paged attention) == the dense decode_step, with page accounting."""

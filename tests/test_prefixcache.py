@@ -3,10 +3,6 @@ invariants, COW admission through the paged manager, scheduler integration
 (hits, chunked prefill, leak-freedom), and the engine-tier losslessness
 contract (prefix-hit decode token-identical to cold; chunked prefill
 bitwise-equal to monolithic)."""
-import os
-import subprocess
-import sys
-
 import pytest
 
 from repro.kvcache import BlockTable, PagedKVConfig, PagedKVManager, PagePool
@@ -218,22 +214,10 @@ def test_evict_tier_aware_skips_host_pages():
 
 
 # ----------------------------------------------------------------------------
-# scheduler integration over the simulator
+# scheduler integration over the simulator (sim_backend: conftest factory)
 # ----------------------------------------------------------------------------
-def _sim_backend(slots: int, prompt: int = 64):
-    from repro.configs.registry import get_config
-    from repro.core.cost_model import CostEnv, Workload
-    from repro.core.profiles import env_E3, mbps
-    from repro.serving import SimBackend
-
-    cfg = get_config("llama2-13b")
-    w = Workload(cfg, mb=1, ctx=prompt, n_micro=slots)
-    return SimBackend(CostEnv(env_E3(), mbps(200), w), n_slots=slots,
-                      prompt_tokens=prompt)
-
-
-def _serve_shared(prefix: bool, chunk=None, budget_pages=None, n_req=16,
-                  prompt=256, prefix_len=192, max_new=16):
+def _serve_shared(sim_backend, prefix: bool, chunk=None, budget_pages=None,
+                  n_req=16, prompt=256, prefix_len=192, max_new=16):
     from repro.serving import (ContinuousBatchingScheduler, SchedulerConfig,
                                make_arrivals, requests_from_arrivals,
                                summarize)
@@ -243,7 +227,7 @@ def _serve_shared(prefix: bool, chunk=None, budget_pages=None, n_req=16,
                         max_new_tokens=max_new, rate_rps=2.0)
     budget = (budget_pages * 32) if budget_pages \
         else 6 * (prompt + max_new)
-    sched = ContinuousBatchingScheduler(_sim_backend(4, prompt),
+    sched = ContinuousBatchingScheduler(sim_backend(4, prompt=prompt),
                                         SchedulerConfig(
         kv_budget_tokens=budget, kv_policy="paged", page_size=32,
         prefix_cache=prefix, prefill_chunk_tokens=chunk))
@@ -253,8 +237,8 @@ def _serve_shared(prefix: bool, chunk=None, budget_pages=None, n_req=16,
     return sched, done, rep
 
 
-def test_prefix_cache_hits_and_no_leaks():
-    sched, done, rep = _serve_shared(True)
+def test_prefix_cache_hits_and_no_leaks(sim_backend):
+    sched, done, rep = _serve_shared(sim_backend, True)
     assert all(r.done and r.generated == r.max_new_tokens for r in done
                if not r.rejected)
     assert rep.prefix_hit_rate > 0.5
@@ -268,22 +252,22 @@ def test_prefix_cache_hits_and_no_leaks():
     assert pool.alloc.used_pages == 0
 
 
-def test_prefix_cache_improves_prefill_latency():
-    _, _, cold = _serve_shared(False)
-    _, _, warm = _serve_shared(True)
+def test_prefix_cache_improves_prefill_latency(sim_backend):
+    _, _, cold = _serve_shared(sim_backend, False)
+    _, _, warm = _serve_shared(sim_backend, True)
     assert warm.ttft_prefill_p50_s < cold.ttft_prefill_p50_s
     assert warm.ttft_p50_s < cold.ttft_p50_s
 
 
-def test_prefix_cache_requires_paged_policy():
+def test_prefix_cache_requires_paged_policy(sim_backend):
     from repro.serving import ContinuousBatchingScheduler, SchedulerConfig
 
     with pytest.raises(ValueError):
-        ContinuousBatchingScheduler(_sim_backend(2), SchedulerConfig(
+        ContinuousBatchingScheduler(sim_backend(2), SchedulerConfig(
             kv_policy="reserve", prefix_cache=True))
 
 
-def test_admission_accounts_cached_pages():
+def test_admission_accounts_cached_pages(sim_backend):
     """The _admits fix: a prefix hit must be admitted where a cold request
     of the same length would not fit — cached pages don't count against
     the free pool."""
@@ -291,7 +275,7 @@ def test_admission_accounts_cached_pages():
                                SchedulerConfig)
     from repro.serving.traffic import template_tokens
 
-    be = _sim_backend(2, prompt=96)
+    be = sim_backend(2, prompt=96)
     # budget: 5 pages of 32 = 160 tokens; a 96+4=100-token request needs
     # 4 pages cold
     sched = ContinuousBatchingScheduler(be, SchedulerConfig(
@@ -316,11 +300,12 @@ def test_admission_accounts_cached_pages():
     assert sched.mgr.pool.alloc.used_pages == 0
 
 
-def test_cached_pages_evicted_before_preemption():
+def test_cached_pages_evicted_before_preemption(sim_backend):
     """Pool pressure reclaims unpinned radix pages first: with the tree
     holding most of a tiny pool, a burst must still complete without the
     tree deadlocking admission, and eviction must actually fire."""
-    sched, done, rep = _serve_shared(True, budget_pages=22, n_req=12)
+    sched, done, rep = _serve_shared(sim_backend, True, budget_pages=22,
+                                     n_req=12)
     assert all(r.done and r.generated == r.max_new_tokens for r in done
                if not r.rejected)
     assert sched.prefix.evicted_pages > 0
@@ -328,11 +313,11 @@ def test_cached_pages_evicted_before_preemption():
     assert pool.alloc.used_pages == sched.prefix.n_pages
 
 
-def test_chunked_prefill_same_results_and_mixed_rounds():
+def test_chunked_prefill_same_results_and_mixed_rounds(sim_backend):
     """Chunked prefill completes every request with its exact token count
     and emits first tokens only after the full prompt drained."""
-    schedm, donem, repm = _serve_shared(False, chunk=None)
-    schedc, donec, repc = _serve_shared(False, chunk=64)
+    schedm, donem, repm = _serve_shared(sim_backend, False, chunk=None)
+    schedc, donec, repc = _serve_shared(sim_backend, False, chunk=64)
     for done in (donem, donec):
         assert all(r.done and r.generated == r.max_new_tokens
                    for r in done if not r.rejected)
@@ -343,8 +328,8 @@ def test_chunked_prefill_same_results_and_mixed_rounds():
                                                   for r in donem)
 
 
-def test_chunked_prefill_with_prefix_hits():
-    sched, done, rep = _serve_shared(True, chunk=64)
+def test_chunked_prefill_with_prefix_hits(sim_backend):
+    sched, done, rep = _serve_shared(sim_backend, True, chunk=64)
     assert all(r.done and r.generated == r.max_new_tokens for r in done
                if not r.rejected)
     assert rep.prefix_hit_rate > 0.5
@@ -352,14 +337,14 @@ def test_chunked_prefill_with_prefix_hits():
     assert pool.alloc.used_pages == sched.prefix.n_pages
 
 
-def test_multiturn_traffic_hits_grow_over_turns():
+def test_multiturn_traffic_hits_grow_over_turns(sim_backend):
     from repro.serving import (ContinuousBatchingScheduler, SchedulerConfig,
                                make_arrivals, requests_from_arrivals,
                                summarize)
 
     arr = make_arrivals("multiturn", 9, seed=1, turns=3, prompt_len=64,
                         max_new_tokens=8, rate_rps=1.0)
-    sched = ContinuousBatchingScheduler(_sim_backend(2, 64),
+    sched = ContinuousBatchingScheduler(sim_backend(2, prompt=64),
                                         SchedulerConfig(
         kv_policy="paged", page_size=16, prefix_cache=True))
     done = sched.serve(requests_from_arrivals(arr))
@@ -475,32 +460,24 @@ sys.exit(0 if ok else 1)
 
 
 @pytest.mark.slow
-def test_engine_prefill_partial_matches_dense_prefill():
+@pytest.mark.subprocess
+def test_engine_prefill_partial_matches_dense_prefill(run_worker):
     """Partial-context prefill rounds through the interleaved pipeline
     (chunked verify steps) build the same cache the classic dense
     prefill + seed_cache adoption does: same last-position logits, same
     subsequent decode."""
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    r = subprocess.run([sys.executable, "-c", ENGINE_CHUNK_WORKER], env=env,
-                       capture_output=True, text=True, timeout=900)
-    sys.stdout.write(r.stdout)
-    sys.stderr.write(r.stderr[-2000:])
+    r = run_worker(ENGINE_CHUNK_WORKER)
     assert r.returncode == 0
 
 
 @pytest.mark.slow
+@pytest.mark.subprocess
 @pytest.mark.parametrize("impl", ["ref", "pallas"])
-def test_engine_prefix_hit_lossless_and_chunk_bitwise(impl):
+def test_engine_prefix_hit_lossless_and_chunk_bitwise(impl, run_worker):
     """The §12 losslessness contract on real KV: a prefix-hit decode emits
     token-identical output to a cold run of the same prompt, and chunked
     prefill is bitwise-equal to monolithic (bf16), for both the blocked
-    jnp reference and the Pallas kernel (interpret on CPU)."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    r = subprocess.run([sys.executable, "-c", PREFIX_LOSSLESS_WORKER, impl],
-                       env=env, capture_output=True, text=True, timeout=900)
-    sys.stdout.write(r.stdout)
-    sys.stderr.write(r.stderr[-2000:])
+    jnp reference and the Pallas kernel (interpret on CPU).
+    (devices=None: this worker needs the real 1-device CPU.)"""
+    r = run_worker(PREFIX_LOSSLESS_WORKER, impl, devices=None)
     assert r.returncode == 0

@@ -1,10 +1,6 @@
 """Speculative decoding (DESIGN.md §11): acceptance-rejection losslessness,
 draft providers, multi-query kernels, verify/rollback through every decode
 path, and serving integration."""
-import os
-import subprocess
-import sys
-
 import numpy as np
 import pytest
 
@@ -117,17 +113,14 @@ def test_ngram_draft_fallback_repeats_last():
     assert list(toks) == [7, 7, 7, 7]
 
 
-def test_small_model_draft_propose_is_snapshot():
+def test_small_model_draft_propose_is_snapshot(smoke_model):
     """propose() must not advance the committed cache: two proposals from
-    the same state are identical, and observe() actually moves it."""
-    import jax
-
-    from repro.configs.registry import get_smoke_config
-    from repro.models import model as M
+    the same state are identical, and observe() actually moves it.
+    (The full cross-provider contract lives in test_draft_conformance.py;
+    this pins the shift-by-one behaviour of the greedy model draft.)"""
     from repro.specdec import SmallModelDraft
 
-    cfg = get_smoke_config("gemma3-1b")
-    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    cfg, params = smoke_model
     d = SmallModelDraft(cfg, params, max_len=32)
     d.reset([3, 1, 4, 1, 5])
     a, _ = d.propose(3)
@@ -226,21 +219,14 @@ def test_mq_contiguous_matches_einsum_ref():
 # ----------------------------------------------------------------------------
 # model.verify_step: multi-token scoring == sequential decode + rollback
 # ----------------------------------------------------------------------------
-def _dense_cfg():
-    from repro.configs.base import Family, ModelConfig
-    return ModelConfig(name="d", family=Family.DENSE, n_layers=2,
-                       d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
-                       vocab_size=64, head_dim=8)
-
-
-def test_verify_step_equals_sequential_decode_and_rolls_back():
+def test_verify_step_equals_sequential_decode_and_rolls_back(tiny_dense_cfg):
     import functools
 
     import jax
     import jax.numpy as jnp
 
     from repro.models import model as M
-    cfg = _dense_cfg()
+    cfg = tiny_dense_cfg
     key = jax.random.PRNGKey(0)
     params = M.init_params(cfg, key)
     toks = jax.random.randint(key, (2, 5), 0, cfg.vocab_size)
@@ -312,7 +298,7 @@ def test_block_table_truncate_frees_only_rejected_pages():
     assert mgr.truncate(0, 8) == 1 and mgr.pages_of(0) == 2
 
 
-def test_paged_decode_verify_commit_lossless_vs_dense():
+def test_paged_decode_verify_commit_lossless_vs_dense(tiny_dense_cfg):
     """Spec decode over PagedDecodeCache (verify + truncating commit)
     emits token-for-token the dense autoregressive sequence."""
     import functools
@@ -322,7 +308,7 @@ def test_paged_decode_verify_commit_lossless_vs_dense():
 
     from repro.kvcache.paged_decode import PagedDecodeCache
     from repro.models import model as M
-    cfg = _dense_cfg()
+    cfg = tiny_dense_cfg
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     toks = jax.random.randint(jax.random.PRNGKey(1), (2, 5), 0,
                               cfg.vocab_size)
@@ -369,27 +355,16 @@ def test_paged_decode_verify_commit_lossless_vs_dense():
 
 
 # ----------------------------------------------------------------------------
-# serving integration
+# serving integration (sim_backend: the conftest E3 fleet factory)
 # ----------------------------------------------------------------------------
-def _sim_backend(slots, spec=None, prompt=64):
-    from repro.configs.registry import get_config
-    from repro.core.cost_model import CostEnv, Workload
-    from repro.core.profiles import env_E3, mbps
-    from repro.serving import SimBackend
-    cfg = get_config("llama2-13b")
-    w = Workload(cfg, mb=1, ctx=prompt, n_micro=slots)
-    env = CostEnv(env_E3(), mbps(200), w)
-    return SimBackend(env, n_slots=slots, prompt_tokens=prompt, spec=spec)
-
-
-def test_sim_spec_exact_counts_and_counters():
+def test_sim_spec_exact_counts_and_counters(sim_backend):
     from repro.serving import (ContinuousBatchingScheduler, SchedulerConfig,
                                make_arrivals, requests_from_arrivals,
                                summarize)
     arr = make_arrivals("bursty", 8, seed=0, burst_size=4, gap_s=4.0,
                         prompt_len=64, max_new_tokens=19)
     sched = ContinuousBatchingScheduler(
-        _sim_backend(4, SpecConfig(k=4, acceptance=0.6, seed=0)),
+        sim_backend(4, spec=SpecConfig(k=4, acceptance=0.6, seed=0)),
         SchedulerConfig())
     done = sched.serve(requests_from_arrivals(arr))
     assert all(r.done and r.generated == 19 for r in done)
@@ -401,7 +376,7 @@ def test_sim_spec_exact_counts_and_counters():
     assert np.isfinite(rep.decode_tok_s_p50)
 
 
-def test_sim_spec_beats_autoregressive_throughput():
+def test_sim_spec_beats_autoregressive_throughput(sim_backend):
     """The bench_specdec acceptance invariant, in-suite."""
     from repro.serving import (ContinuousBatchingScheduler, SchedulerConfig,
                                make_arrivals, requests_from_arrivals,
@@ -411,7 +386,7 @@ def test_sim_spec_beats_autoregressive_throughput():
                        ("spec", SpecConfig(k=4, acceptance=0.6, seed=0))):
         arr = make_arrivals("sporadic", 4, seed=0, gap_s=4.0,
                             prompt_len=64, max_new_tokens=24)
-        sched = ContinuousBatchingScheduler(_sim_backend(1, spec),
+        sched = ContinuousBatchingScheduler(sim_backend(1, spec=spec),
                                             SchedulerConfig())
         done = sched.serve(requests_from_arrivals(arr))
         out[name] = summarize(done, pattern="sporadic", backend="sim",
@@ -419,18 +394,59 @@ def test_sim_spec_beats_autoregressive_throughput():
     assert out["spec"].throughput_tok_s > out["ar"].throughput_tok_s
 
 
-@pytest.mark.parametrize("paged", [False, True])
-def test_engine_backend_spec_lossless_single_device(paged):
-    """Greedy spec serving == autoregressive serving, token for token,
-    through the dense and paged single-device paths."""
-    import jax
+def test_sim_resident_spec_acceptance_and_depth_follow_tier(sim_backend):
+    """draft='resident' in the simulator: acceptance scales with the
+    plan's resident fraction and the DepthController shrinks k with it
+    (DESIGN.md §14). E3/llama2-13b allocates fully resident, so the base
+    plan sits at the configured acceptance; a fully demoted plan drops to
+    the clipped floor and k collapses to 1."""
+    import dataclasses
 
-    from repro.configs.registry import get_smoke_config
-    from repro.models import model as M
+    from repro.core.cost_model import ExecutionPlan
+
+    full = sim_backend(1, spec=SpecConfig(k=6, draft="resident",
+                                          acceptance=0.9, seed=0))
+    assert full._res_frac0 == pytest.approx(1.0)
+    assert full._spec_acceptance() == pytest.approx(0.9)
+    assert full._spec_k() == 6          # 0.9/(1-0.9) = 9, clipped to k
+
+    base = full.plan
+    stages = [dataclasses.replace(
+        st, resident_total=0,
+        off_full_seg=st.off_full_seg + st.resident_total // base.n_seg)
+        for st in base.stages]
+    thin = sim_backend(1, spec=SpecConfig(k=6, draft="resident",
+                                          acceptance=0.9, seed=0),
+                       plan=ExecutionPlan(n_seg=base.n_seg, stages=stages))
+    assert thin._res_frac0 == pytest.approx(0.0)
+    assert thin._spec_acceptance() == pytest.approx(0.02)   # clip floor
+    assert thin._spec_k() == 1
+
+
+def test_controller_external_drafts_mode(tiny_dense_cfg):
+    """The engine backend drafts on-device: the controller must build no
+    host providers, treat begin/observe as no-ops, and refuse propose."""
+    from repro.specdec import SpecDecodeController
+    ctl = SpecDecodeController(SpecConfig(k=3, draft="resident"),
+                               SamplerConfig(), tiny_dense_cfg, 2,
+                               external_drafts=True)
+    assert ctl.drafts is None
+    ctl.begin(0, [1, 2, 3])
+    ctl.observe(0, [4])
+    with pytest.raises(AssertionError):
+        ctl.propose(0, 3)
+
+
+@pytest.mark.parametrize("draft", ["ngram", "resident"])
+@pytest.mark.parametrize("paged", [False, True])
+def test_engine_backend_spec_lossless_single_device(paged, draft,
+                                                    smoke_model):
+    """Greedy spec serving == autoregressive serving, token for token,
+    through the dense and paged single-device paths, for both the n-gram
+    and the resident-tier self-draft (DESIGN.md §14)."""
     from repro.serving import (ContinuousBatchingScheduler, EngineBackend,
                                Request, SchedulerConfig)
-    cfg = get_smoke_config("gemma3-1b")
-    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    cfg, params = smoke_model
 
     def run(spec):
         be = EngineBackend(cfg, params, n_slots=2, max_len=48, paged=paged,
@@ -442,22 +458,17 @@ def test_engine_backend_spec_lossless_single_device(paged):
         return {r.rid: list(r.output) for r in done}, be
 
     base, _ = run(None)
-    spec_out, be = run(SpecConfig(k=3, draft="ngram"))
+    spec_out, be = run(SpecConfig(k=3, draft=draft))
     assert base == spec_out
     assert be.spec_stats["spec_rounds"] > 0
 
 
-def test_engine_backend_spec_model_draft_accepts():
+def test_engine_backend_spec_model_draft_accepts(smoke_model):
     """A draft that shares the target's weights accepts most tokens —
     the accept path (not just rejection) is exercised end to end."""
-    import jax
-
-    from repro.configs.registry import get_smoke_config
-    from repro.models import model as M
     from repro.serving import (ContinuousBatchingScheduler, EngineBackend,
                                Request, SchedulerConfig)
-    cfg = get_smoke_config("gemma3-1b")
-    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    cfg, params = smoke_model
 
     def run(spec):
         be = EngineBackend(cfg, params, n_slots=1, max_len=48, spec=spec)
@@ -472,19 +483,14 @@ def test_engine_backend_spec_model_draft_accepts():
     assert be.spec_stats["spec_accepted"] > 0
 
 
-def test_engine_backend_spec_stochastic_counts():
+def test_engine_backend_spec_stochastic_counts(smoke_model):
     """temperature > 0: the rejection sampler drives serving to exact
     per-request token counts (distribution-level losslessness is
     test_rejection_verify_matches_target_distribution)."""
-    import jax
-
-    from repro.configs.registry import get_smoke_config
-    from repro.models import model as M
     from repro.serving import (ContinuousBatchingScheduler, EngineBackend,
                                Request, SchedulerConfig)
     from repro.serving.sampling import SamplerConfig as SC
-    cfg = get_smoke_config("gemma3-1b")
-    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    cfg, params = smoke_model
     be = EngineBackend(cfg, params, n_slots=2, max_len=48,
                        sampler=SC(temperature=0.8, top_p=0.95),
                        spec=SpecConfig(k=3, draft="ngram", seed=7))
@@ -541,15 +547,10 @@ print("ENGINE_SPEC_OK")
 
 
 @pytest.mark.slow
-def test_engine_spec_decode_lossless_ref_and_pallas():
+@pytest.mark.subprocess
+def test_engine_spec_decode_lossless_ref_and_pallas(run_worker):
     """temperature=0 spec decoding through the InterleavedEngine equals
     autoregressive decoding token-for-token, on both the ref and Pallas
     attention paths (subprocess: needs >= 4 host devices)."""
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    r = subprocess.run([sys.executable, "-c", ENGINE_WORKER], env=env,
-                       capture_output=True, text=True, timeout=900)
-    sys.stdout.write(r.stdout)
-    sys.stderr.write(r.stderr[-2000:])
+    r = run_worker(ENGINE_WORKER)
     assert r.returncode == 0 and "ENGINE_SPEC_OK" in r.stdout
