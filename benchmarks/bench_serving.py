@@ -98,7 +98,17 @@ def build_engine_backend(args, slots: int, max_prompt: int = 0):
                          page_size=args.page_size)
 
 
-def run_pattern(args, pattern: str) -> dict:
+def trace_path(base: str, pattern: str, multi: bool) -> str:
+    """Per-pattern trace file when --pattern all: out.json ->
+    out.sporadic.json (one Perfetto file per run, not a concatenation)."""
+    if not multi:
+        return base
+    root, ext = os.path.splitext(base)
+    return f"{root}.{pattern}{ext or '.json'}"
+
+
+def run_pattern(args, pattern: str, trace_out: str = None) -> dict:
+    from repro.obs.trace import Tracer, set_tracer
     from repro.serving import (ContinuousBatchingScheduler, SchedulerConfig,
                                cli_arrivals, requests_from_arrivals,
                                summarize)
@@ -110,7 +120,7 @@ def run_pattern(args, pattern: str) -> dict:
                             burst_size=args.slots, rate_rps=args.rate_rps,
                             n_templates=args.n_templates,
                             prefix_len=args.prefix_len, turns=args.turns,
-                            trace=args.trace)
+                            trace=args.arrival_trace)
 
     backend = build_sim_backend(args, slots) if args.backend == "sim" \
         else build_engine_backend(args, slots,
@@ -118,18 +128,34 @@ def run_pattern(args, pattern: str) -> dict:
     kv_policy = args.kv_policy
     if args.prefix_cache and args.backend == "sim":
         kv_policy = "paged"             # the radix tree lives in the pool
-    sched = ContinuousBatchingScheduler(
-        backend, SchedulerConfig(
-            kv_policy=kv_policy, page_size=args.page_size,
-            prefix_cache=(args.prefix_cache and args.backend == "sim"),
-            prefill_chunk_tokens=args.prefill_chunk))
-    # template prompts materialize real ids: keep them inside the engine's
-    # (smoke) vocab so prefix keys equal what the model actually embeds
-    vocab = backend.cfg.vocab_size if args.backend == "engine" else 32768
-    served = sched.serve(requests_from_arrivals(arrivals, vocab_size=vocab,
-                                                seed=args.seed))
+    # flight recorder: install BEFORE the scheduler is built — it caches
+    # the tracer and binds its clock to backend.now at construction
+    tracer = None
+    if trace_out:
+        tracer = Tracer(capacity=args.trace_capacity)
+        set_tracer(tracer)
+    try:
+        sched = ContinuousBatchingScheduler(
+            backend, SchedulerConfig(
+                kv_policy=kv_policy, page_size=args.page_size,
+                prefix_cache=(args.prefix_cache and args.backend == "sim"),
+                prefill_chunk_tokens=args.prefill_chunk))
+        # template prompts materialize real ids: keep them inside the
+        # engine's (smoke) vocab so prefix keys equal what the model
+        # actually embeds
+        vocab = backend.cfg.vocab_size if args.backend == "engine" else 32768
+        served = sched.serve(requests_from_arrivals(arrivals,
+                                                    vocab_size=vocab,
+                                                    seed=args.seed))
+    finally:
+        if tracer is not None:
+            set_tracer(None)
     report = summarize(served, pattern=pattern, backend=args.backend,
                        stats=sched.stats)
+    if tracer is not None:
+        tracer.export(trace_out)
+        print(f"# trace: {trace_out} ({tracer.emitted} events, "
+              f"{tracer.dropped} dropped)", file=sys.stderr)
     return report.to_dict()
 
 
@@ -178,16 +204,27 @@ def main(argv=None) -> int:
                     help="shared_prefix: shared template span per prompt")
     ap.add_argument("--turns", type=int, default=3,
                     help="multiturn: conversation turns per session")
-    ap.add_argument("--trace", default=None,
+    ap.add_argument("--arrival-trace", default=None,
                     help="JSON arrival trace for --pattern trace")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="flight-recorder output (DESIGN.md §15): Chrome "
+                         "trace-event JSON loadable in Perfetto, or JSONL "
+                         "when PATH ends in .jsonl; --pattern all writes "
+                         "one file per pattern")
+    ap.add_argument("--trace-capacity", type=int, default=1 << 16,
+                    help="flight-recorder ring size (oldest events drop)")
     ap.add_argument("--out", default=None, help="also write JSON here")
     args = ap.parse_args(argv)
-    if args.pattern == "trace" and not args.trace:
-        ap.error("--pattern trace requires --trace <arrivals.json>")
+    if args.pattern == "trace" and not args.arrival_trace:
+        ap.error("--pattern trace requires --arrival-trace <arrivals.json>")
 
     patterns = ["sporadic", "bursty", "poisson"] if args.pattern == "all" \
         else [args.pattern]
-    results = [run_pattern(args, p) for p in patterns]
+    results = [run_pattern(args, p,
+                           trace_out=(trace_path(args.trace, p,
+                                                 len(patterns) > 1)
+                                      if args.trace else None))
+               for p in patterns]
     payload = results[0] if len(results) == 1 else results
     text = json.dumps(payload, indent=2)
     print(text)

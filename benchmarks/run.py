@@ -8,8 +8,14 @@ terms for the (arch x shape x mesh) grid come from the dry-run
 the paper-reproduction simulator (EXPERIMENTS.md §Repro).
 """
 import argparse
+import glob
+import json
+import os
 import sys
 import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
 
 SUITES = {
     "fig2a": ("benchmarks.bench_motivation", "Fig 2a motivation"),
@@ -28,6 +34,42 @@ SUITES = {
 }
 
 
+def check_baselines(baseline_dir=None):
+    """Schema sanity over benchmarks/baselines/*.json: a baseline written
+    by an older repo version carries an older (or no) schema_version —
+    warn and keep going instead of KeyError-ing deep inside a comparison
+    (serving/metrics.py SCHEMA_VERSION is the authority; report_from_dict
+    fills fields the old schema lacked)."""
+    from repro.obs.log import get_logger
+    from repro.serving.metrics import SCHEMA_VERSION
+    log = get_logger("benchmarks.run")
+    if baseline_dir is None:
+        baseline_dir = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                    "baselines")
+    stale = []
+    for path in sorted(glob.glob(os.path.join(baseline_dir, "*.json"))):
+        try:
+            with open(path) as f:
+                d = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            log.warning(f"baseline {os.path.basename(path)}: unreadable "
+                        f"({e}) — skipping")
+            stale.append(path)
+            continue
+        # list-shaped baselines stamp each report; dict-shaped ones carry
+        # one top-level version
+        heads = d if isinstance(d, list) else [d]
+        vers = {h.get("schema_version") for h in heads if isinstance(h, dict)}
+        if vers != {SCHEMA_VERSION}:
+            log.warning(
+                f"baseline {os.path.basename(path)}: schema_version="
+                f"{sorted(vers, key=str)} != current {SCHEMA_VERSION} — "
+                f"comparisons may miss newer fields; regenerate with the "
+                f"suite's --out flag")
+            stale.append(path)
+    return stale
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -35,6 +77,7 @@ def main(argv=None):
     ap.add_argument("--csv", default="benchmarks/results.csv")
     args = ap.parse_args(argv)
     names = args.only.split(",") if args.only else list(SUITES)
+    check_baselines()
 
     all_rows = []
     for name in names:

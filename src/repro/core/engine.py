@@ -56,6 +56,8 @@ from repro.core.cost_model import ExecutionPlan, StageAlloc  # noqa: F401
 from repro.kvcache import BlockTable, PagePool, PagedKVConfig
 from repro.models import model as M
 from repro.models import spec as pspec
+from repro.obs import trace as tr_ev
+from repro.obs.trace import get_tracer
 
 
 # cache entries stacked on the layer dim (everything else — pos, pos_ids —
@@ -923,6 +925,11 @@ class InterleavedEngine:
         back before the per-stage reshape, so the table indirection (not a
         contiguous memcpy) is what carries the bytes, and slot occupancy
         is page-granular from the first decode step."""
+        tr = get_tracer()
+        if tr is not None:
+            tr.instant(tr_ev.ENGINE_SEED, track=tr_ev.TRACK_ENGINE,
+                       args={"pos": int(cache["pos"]),
+                             "paged": self.paged})
         plan = self.plan
         paged_ctx = int(cache["pos"]) if self.paged else 0
         if self.paged:
@@ -984,6 +991,10 @@ class InterleavedEngine:
         for every occupancy level (recompiling per occupancy would defeat
         continuous batching).
         """
+        tr = get_tracer()
+        if tr is not None:
+            tr.instant(tr_ev.ENGINE_DECODE, track=tr_ev.TRACK_ENGINE,
+                       args={"live": int(np.asarray(active, bool).sum())})
         if self.paged:
             # page-granular occupancy: live slots grow one token (a new
             # page every page_size steps); released slots hold nothing.
@@ -1035,6 +1046,10 @@ class InterleavedEngine:
         Paged slot accounting is the caller's job (note_committed) —
         unlike decode_requests, the tokens actually kept are only known
         after acceptance."""
+        tr = get_tracer()
+        if tr is not None:
+            tr.instant(tr_ev.ENGINE_VERIFY, track=tr_ev.TRACK_ENGINE,
+                       args={"q_len": int(tokens.shape[1])})
         active = jnp.asarray(active, bool)
         toks = jnp.where(active[:, None], tokens.astype(jnp.int32), 0)
         return self.verify_step(state, toks)
@@ -1078,6 +1093,9 @@ class InterleavedEngine:
         """Slot-masked draft_step (serving entry): inactive slots ride as
         padding with zeroed tokens. Deliberately NO paged extend — drafted
         positions own no pages until verification commits them."""
+        tr = get_tracer()
+        if tr is not None:
+            tr.instant(tr_ev.ENGINE_DRAFT, track=tr_ev.TRACK_ENGINE)
         active = jnp.asarray(active, bool)
         toks = jnp.where(active[:, None], tokens.astype(jnp.int32), 0)
         return self.draft_step(state, toks)
@@ -1101,8 +1119,13 @@ class InterleavedEngine:
         T = int(tokens.shape[1])
         chunk = T if chunk <= 0 else min(chunk, T)
         assert chunk < max(self.S_c, 2), (chunk, self.S_c)
+        tr = get_tracer()
         logits = None
         for off in range(0, T, chunk):
+            if tr is not None:
+                tr.instant(tr_ev.ENGINE_PREFILL, track=tr_ev.TRACK_ENGINE,
+                           args={"offset": off,
+                                 "chunk": min(chunk, T - off)})
             logits, state = self.verify_step(state,
                                              tokens[:, off:off + chunk])
         if self.paged:

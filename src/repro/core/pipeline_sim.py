@@ -25,6 +25,8 @@ from typing import Callable, List, Optional, Tuple
 from repro.core.cost_model import CostEnv, ExecutionPlan
 from repro.core.online_planner import OnlinePlanner
 from repro.core.kv_transfer import KVTransferProtocol
+from repro.obs import trace as tr_ev
+from repro.obs.trace import dev_track, get_tracer, loader_track
 
 
 @dataclasses.dataclass
@@ -161,21 +163,45 @@ class InterleavedPipelineSim:
         dev_free = [t0] * D
         stall = 0.0
         comm = 0.0
+        # flight recorder (DESIGN.md §15): one stage.compute span per
+        # (device, segment) on "dev:<i>", one weight.fetch span per
+        # interleave fetch on "dev:<i>:loader" — the Perfetto view where
+        # load/compute overlap (the paper's whole argument) is *visible*
+        tr = get_tracer()
         # activation readiness per micro-batch (enters device 0, segment 0)
         ready = [t0] * n_micro
         for s in range(S):
             for i in range(D):
                 w_ready = self._load_done[i][s % S]
                 last_end = dev_free[i]
+                seg_start = None
+                seg_stall = 0.0
+                hop = 0.0
                 for m in range(n_micro):
                     hop = self._hop_time(bw, qs[m])
                     start = max(ready[m], dev_free[i], w_ready)
-                    stall += max(w_ready - max(ready[m], dev_free[i]), 0.0)
+                    if seg_start is None:
+                        seg_start = start
+                    mb_stall = max(w_ready - max(ready[m], dev_free[i]), 0.0)
+                    stall += mb_stall
+                    seg_stall += mb_stall
                     end = start + self._comp_seg_mb(i, ctx, qs[m])
                     dev_free[i] = end
                     ready[m] = end + hop
                     comm += hop
                     last_end = end
+                if tr is not None and seg_start is not None:
+                    tr.complete(tr_ev.STAGE_COMPUTE, ts=seg_start,
+                                dur=last_end - seg_start, track=dev_track(i),
+                                args={"segment": s, "n_micro": n_micro,
+                                      "stall_s": seg_stall})
+                    if seg_stall > 0:
+                        tr.instant(tr_ev.WEIGHT_STALL, ts=seg_start,
+                                   track=dev_track(i),
+                                   args={"stall_s": seg_stall})
+                    # last micro-batch's hand-off to the next device
+                    tr.complete(tr_ev.ACT_HOP, ts=last_end, dur=hop,
+                                track=dev_track(i), args={"segment": s})
                 # interleave: evict seg-s blocks, fetch seg-(s+1) blocks
                 lb = self._load_bytes_seg(i)
                 if lb > 0:
@@ -186,6 +212,12 @@ class InterleavedPipelineSim:
                     # it adds no loader-channel latency by construction.
                     self._loader_free[i] = ld_end
                     self._load_done[i][(s + 1) % S] = ld_end
+                    if tr is not None:
+                        tr.complete(tr_ev.WEIGHT_FETCH, ts=ld_start,
+                                    dur=ld_end - ld_start,
+                                    track=loader_track(i),
+                                    args={"segment": (s + 1) % S,
+                                          "bytes": lb})
         return max(max(dev_free), max(ready)), stall, comm
 
     # -- arrival-driven stepping (LIME-Serve) ------------------------------------
@@ -246,6 +278,12 @@ class InterleavedPipelineSim:
                     # recorded but adds no step latency
                     moved = self.kv.sync_pool(self.page_pool)
                     self.kv_moved_bytes += moved
+                    if moved > 0:
+                        tr = get_tracer()
+                        if tr is not None:
+                            tr.instant(tr_ev.KV_MIGRATE, ts=self.now,
+                                       track=tr_ev.TRACK_KV,
+                                       args={"bytes": moved})
             offsets = [self.kv.transferred_tokens(i)
                        for i in range(self.D)] if self.kv else None
             eff = ctx if kv_tokens is None else kv_tokens

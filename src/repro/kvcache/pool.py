@@ -22,6 +22,8 @@ import dataclasses
 from typing import Dict, Iterable, List
 
 from repro.kvcache.allocator import BlockTable, OutOfPages, PageAllocator
+from repro.obs import trace as tr_ev
+from repro.obs.trace import get_tracer
 
 DEVICE = "device"
 HOST = "host"
@@ -105,6 +107,10 @@ class PagePool:
         if fresh:
             self.alloc.add_pages(fresh)
         self._cap[tier] += n_pages
+        tr = get_tracer()
+        if tr is not None:
+            tr.instant(tr_ev.KV_GROW, track=tr_ev.TRACK_KV,
+                       args={"pages": n_pages, "tier": tier})
         return n_pages
 
     def shrink(self, n_pages: int, tier: str = DEVICE) -> int:
@@ -115,6 +121,11 @@ class PagePool:
         take = max(min(n_pages, self.free_pages(tier)), 0)
         self._cap[tier] -= take
         self._spare += take
+        if take:
+            tr = get_tracer()
+            if tr is not None:
+                tr.instant(tr_ev.KV_SHRINK, track=tr_ev.TRACK_KV,
+                           args={"pages": take, "tier": tier})
         return take
 
     # -- allocation --------------------------------------------------------------
@@ -194,6 +205,12 @@ class PagePool:
         else:
             self.fetched_pages += len(moving)
         self.migrated_bytes += nbytes
+        if moving:
+            tr = get_tracer()
+            if tr is not None:
+                tr.instant(tr_ev.KV_SPILL if dst == HOST else tr_ev.KV_FETCH,
+                           track=tr_ev.TRACK_KV,
+                           args={"pages": len(moving), "bytes": nbytes})
         return nbytes
 
     def migrate_any(self, n: int, dst: str) -> float:

@@ -32,8 +32,12 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--gap-s", type=float, default=2.0)
     ap.add_argument("--rate-rps", type=float, default=1.0)
-    ap.add_argument("--trace", default=None,
+    ap.add_argument("--arrival-trace", default=None,
                     help="JSON arrival trace for --pattern trace")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="flight-recorder output (DESIGN.md §15): Chrome "
+                         "trace-event JSON loadable in Perfetto, or JSONL "
+                         "when PATH ends in .jsonl")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--spec", action="store_true",
@@ -76,9 +80,13 @@ def main(argv=None):
     from repro.configs.registry import get_config, get_smoke_config
     from repro.core.engine import InterleavedEngine, UniformPlan
     from repro.models import model as M
+    from repro.obs.log import get_logger
+    from repro.obs.trace import Tracer, set_tracer
     from repro.serving import (ContinuousBatchingScheduler, LimeServer,
                                SamplerConfig, SchedulerConfig, cli_arrivals,
                                requests_from_arrivals, summarize)
+
+    log = get_logger("repro.launch.serve")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     n_dev = len(jax.devices())
@@ -124,8 +132,8 @@ def main(argv=None):
             if not r.feasible:
                 raise SystemExit(f"hetero allocation infeasible: {r.reason}")
             plan = r.plan
-            print(f"hetero plan: seg={plan.n_seg} "
-                  f"k_res={plan.k_res_list} k_off={plan.k_off_list}")
+            log.info(f"hetero plan: seg={plan.n_seg} "
+                     f"k_res={plan.k_res_list} k_off={plan.k_off_list}")
         else:
             # pad layers to a chunk grid; one streamed layer per chunk
             import math
@@ -140,11 +148,11 @@ def main(argv=None):
             from repro.core.online_planner import OnlinePlanner
             planner = OnlinePlanner(env, plan,
                                     horizon_tokens=4 * n_mb * args.max_len)
-        print(f"engine: {args.stages} stages x tp{args.tp}, "
-              f"plan seg={plan.n_seg} chunks k_res={plan.k_res_list} "
-              f"k_off={plan.k_off_list} adapt={args.adapt}")
+        log.info(f"engine: {args.stages} stages x tp{args.tp}, "
+                 f"plan seg={plan.n_seg} chunks k_res={plan.k_res_list} "
+                 f"k_off={plan.k_off_list} adapt={args.adapt}")
     else:
-        print("single-device fallback (no engine)")
+        log.info("single-device fallback (no engine)")
 
     spec = None
     if args.spec:
@@ -167,15 +175,29 @@ def main(argv=None):
                             burst_size=srv.slots, rate_rps=args.rate_rps,
                             n_templates=args.n_templates,
                             prefix_len=args.prefix_len, turns=args.turns,
-                            trace=args.trace)
+                            trace=args.arrival_trace)
 
     # adaptation rides page-granular admission: note_kv_pages feeds the
     # planner, and the scheduler can reclaim retier headroom pre-preempt
     scfg = SchedulerConfig(kv_policy="paged", page_size=args.page_size) \
         if args.adapt else SchedulerConfig()
-    sched = ContinuousBatchingScheduler(srv.make_backend(), scfg)
-    done = sched.serve(requests_from_arrivals(arrivals,
-                                              vocab_size=cfg.vocab_size))
+    # flight recorder: installed before the scheduler is built (it caches
+    # the tracer and binds its clock to the backend at construction)
+    tracer = None
+    if args.trace:
+        tracer = Tracer()
+        set_tracer(tracer)
+    try:
+        sched = ContinuousBatchingScheduler(srv.make_backend(), scfg)
+        done = sched.serve(requests_from_arrivals(arrivals,
+                                                  vocab_size=cfg.vocab_size))
+    finally:
+        if tracer is not None:
+            set_tracer(None)
+    if tracer is not None:
+        tracer.export(args.trace)
+        log.info(f"trace: {args.trace} ({tracer.emitted} events, "
+                 f"{tracer.dropped} dropped)")
     for r in sorted(done, key=lambda r: r.rid):
         status = "REJECTED" if r.rejected else \
             f"ttft {r.ttft_s:.2f}s total {r.latency_s:.2f}s " \

@@ -1,0 +1,19 @@
+"""repro.obs: flight-recorder tracing, metrics registry, structured
+logging (DESIGN.md §15).
+
+  trace      ring-buffered Tracer + the stable event vocabulary; zero
+             cost when no tracer is installed (get_tracer() -> None)
+  exporters  Chrome trace-event JSON (Perfetto) + JSONL round-trip +
+             schema validation
+  metrics    MetricsRegistry (counters/gauges/histograms) behind the
+             scheduler's stats — ServingReport is a derived view
+  log        level-gated structured logger (quiet under pytest)
+"""
+from repro.obs.exporters import (export_chrome, export_jsonl,  # noqa: F401
+                                 read_jsonl, to_chrome, validate_chrome,
+                                 validate_chrome_file)
+from repro.obs.log import get_logger  # noqa: F401
+from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401
+                               MetricsRegistry)
+from repro.obs.trace import (Tracer, get_tracer,  # noqa: F401
+                             set_tracer, tracing)

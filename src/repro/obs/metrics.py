@@ -1,0 +1,146 @@
+"""MetricsRegistry: counters / gauges / histograms for the serving path
+(DESIGN.md §15).
+
+Replaces the ad-hoc `stats` dicts that used to flow scheduler ->
+`serving.metrics.summarize()`: the scheduler now increments typed
+instruments and `ServingReport` is a *derived view* over the flattened
+registry (`to_stats_dict()` keeps the exact key vocabulary the legacy
+dicts used, so the report is field-identical either way — asserted in
+tests/test_obs.py).
+
+Instrument semantics:
+
+  Counter    monotonic; `inc(n)` adds, `set(v)` adopts an externally
+             accumulated total (the pool's spilled_pages etc. — counters
+             owned by a subsystem the scheduler reads at drain time).
+  Gauge      last-written value + high-water mark (`peak`): occupancy
+             style quantities where the report wants the max.
+  Histogram  raw observations + nearest-rank percentiles (small request
+             counts; same convention as serving.metrics.percentile).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List
+
+
+class Counter:
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        self.value += n
+
+    def set(self, v: float) -> None:
+        self.value = v
+
+
+class Gauge:
+    __slots__ = ("name", "value", "peak")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+        self.peak = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = v
+        if v > self.peak:
+            self.peak = v
+
+
+class Histogram:
+    __slots__ = ("name", "values")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.values: List[float] = []
+
+    def observe(self, v: float) -> None:
+        self.values.append(v)
+
+    @property
+    def count(self) -> int:
+        return len(self.values)
+
+    def percentile(self, p: float) -> float:
+        """Nearest-rank (serving.metrics convention); NaN when empty."""
+        if not self.values:
+            return float("nan")
+        xs = sorted(self.values)
+        k = max(math.ceil(p / 100.0 * len(xs)) - 1, 0)
+        return xs[min(k, len(xs) - 1)]
+
+
+class MetricsRegistry:
+    """Get-or-create instrument registry with a flat dict view."""
+
+    def __init__(self):
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._hists: Dict[str, Histogram] = {}
+
+    # -- instruments -------------------------------------------------------------
+    def counter(self, name: str) -> Counter:
+        c = self._counters.get(name)
+        if c is None:
+            c = self._counters[name] = Counter(name)
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        g = self._gauges.get(name)
+        if g is None:
+            g = self._gauges[name] = Gauge(name)
+        return g
+
+    def histogram(self, name: str) -> Histogram:
+        h = self._hists.get(name)
+        if h is None:
+            h = self._hists[name] = Histogram(name)
+        return h
+
+    # -- shorthands (the scheduler's hot-path calls) -----------------------------
+    def inc(self, name: str, n: float = 1.0) -> None:
+        self.counter(name).inc(n)
+
+    def set(self, name: str, v: float) -> None:
+        self.counter(name).set(v)
+
+    def set_gauge(self, name: str, v: float) -> None:
+        self.gauge(name).set(v)
+
+    def observe(self, name: str, v: float) -> None:
+        self.histogram(name).observe(v)
+
+    def update(self, stats: Dict[str, float]) -> None:
+        """Adopt a subsystem's counter dict (spec stats, adapt stats,
+        engine prefix stats — totals owned elsewhere, merged at drain)."""
+        for k, v in stats.items():
+            self.counter(k).set(v)
+
+    # -- views -------------------------------------------------------------------
+    def to_stats_dict(self) -> Dict[str, float]:
+        """The legacy flat `stats` vocabulary: counters under their own
+        name, gauges under their *peak* when the name says so ("peak_*")
+        else current value, histograms as "<name>_p50"/"<name>_p99"."""
+        out: Dict[str, float] = {}
+        for name, c in self._counters.items():
+            out[name] = c.value
+        for name, g in self._gauges.items():
+            out[name] = g.peak if name.startswith("peak_") else g.value
+        for name, h in self._hists.items():
+            out[f"{name}_p50"] = h.percentile(50)
+            out[f"{name}_p99"] = h.percentile(99)
+            out[f"{name}_count"] = h.count
+        return out
+
+    def get(self, name: str, default: float = 0.0) -> float:
+        if name in self._counters:
+            return self._counters[name].value
+        if name in self._gauges:
+            g = self._gauges[name]
+            return g.peak if name.startswith("peak_") else g.value
+        return default

@@ -35,6 +35,8 @@ from __future__ import annotations
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.kvcache.pool import PagePool
+from repro.obs import trace as tr_ev
+from repro.obs.trace import get_tracer
 
 
 class _Node:
@@ -104,6 +106,11 @@ class RadixPrefixCache:
         if pages:
             self.hits += 1
             self.hit_tokens += len(pages) * self.page_size
+            tr = get_tracer()
+            if tr is not None:
+                tr.instant(tr_ev.PREFIX_HIT, track=tr_ev.TRACK_PREFIX,
+                           args={"pages": len(pages),
+                                 "tokens": len(pages) * self.page_size})
         return pages, len(pages) * self.page_size
 
     # -- insert ------------------------------------------------------------------
@@ -129,6 +136,11 @@ class RadixPrefixCache:
             child.last_use = self._clock
             node = child
         self.inserted_pages += new
+        if new:
+            tr = get_tracer()
+            if tr is not None:
+                tr.instant(tr_ev.PREFIX_INSERT, track=tr_ev.TRACK_PREFIX,
+                           args={"pages": new, "total": self._n_pages})
         return new
 
     # -- evict -------------------------------------------------------------------
@@ -163,6 +175,11 @@ class RadixPrefixCache:
                 progress = True
             if not progress:
                 break
+        if freed:
+            tr = get_tracer()
+            if tr is not None:
+                tr.instant(tr_ev.PREFIX_EVICT, track=tr_ev.TRACK_PREFIX,
+                           args={"pages": freed, "total": self._n_pages})
         return freed
 
     def release_all(self) -> int:

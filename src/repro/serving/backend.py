@@ -36,6 +36,8 @@ import numpy as np
 
 from repro.core.cost_model import CostEnv
 from repro.core.pipeline_sim import InterleavedPipelineSim
+from repro.obs import trace as tr_ev
+from repro.obs.trace import get_tracer
 
 
 # ============================================================================
@@ -168,8 +170,9 @@ class SimBackend:
         if not self.adapt or pl is None or before is None:
             return
         w = self.env.work
+        tr = get_tracer()
         factor = max(self.plan.n_seg - 1, 1)
-        for (a0, b0), st in zip(before, pl.states):
+        for dev, ((a0, b0), st) in enumerate(zip(before, pl.states)):
             da, db = st.alpha - a0, st.beta - b0
             if not (da or db):
                 continue
@@ -179,11 +182,29 @@ class SimBackend:
             self._adapt["hbm_returned_bytes"] += max(
                 (da * w.attn_block_bytes + db * w.mlp_block_bytes) * factor,
                 0.0)
+            if tr is not None:
+                tr.instant(tr_ev.RETIER, track=tr_ev.TRACK_KV,
+                           args={"dev": dev,
+                                 "demoted": max(max(da, db), 0),
+                                 "promoted": max(-min(da, db), 0)})
 
     def _sim_step(self, **kw):
         before = self._planner_snapshot()
         trace = self.sim.step_once(**kw)
         self._note_planner_delta(before)
+        tr = get_tracer()
+        if tr is not None:
+            # StepTrace -> trace events: sim and engine render identically
+            # (one "step" span per pipeline round on the "pipeline" track)
+            t1 = self.sim.now
+            tr.complete(tr_ev.STEP, ts=t1 - trace.latency,
+                        dur=trace.latency, track=tr_ev.TRACK_PIPELINE,
+                        args={"load_stall": trace.load_stall,
+                              "comm_time": trace.comm_time,
+                              "kv_moved_bytes": trace.kv_moved_bytes})
+            if trace.planner_fired:
+                tr.instant(tr_ev.PLANNER_FIRED, ts=t1,
+                           track=tr_ev.TRACK_PIPELINE)
         return trace
 
     def reclaim_kv_pages(self, n_pages: int) -> int:
@@ -235,6 +256,10 @@ class SimBackend:
             self._adapt = adapt_snap
             return 0
         self._pool.grow(pages)
+        tr = get_tracer()
+        if tr is not None:
+            tr.instant(tr_ev.RETIER, track=tr_ev.TRACK_KV,
+                       args={"forced": True, "pages": pages})
         return pages
 
     @property
@@ -640,6 +665,13 @@ class EngineBackend:
             self._adapt[key] += moved
             self._adapt["hbm_returned_bytes"] += max(freed, 0.0)
             self._sync_depth_rung()
+            tr = get_tracer()
+            if tr is not None:
+                tr.instant(tr_ev.ENGINE_RETIER, track=tr_ev.TRACK_KV,
+                           args={"stage": stage, "moved": moved,
+                                 "direction": ("demote" if freed > 0
+                                               else "promote"),
+                                 "freed_bytes": freed})
         return freed
 
     def _sync_depth_rung(self) -> None:
@@ -849,6 +881,8 @@ class EngineBackend:
 
         from repro.models import model as M
 
+        tr = get_tracer()
+        t0 = tr.now() if tr is not None else 0.0
         prompts = [self._materialize_prompt(r) for r in reqs]
         toks = self._pad_prompts(prompts)
         if toks.shape[0] < self.batch_width:  # pad batch with replicas
@@ -885,6 +919,11 @@ class EngineBackend:
             else:
                 self._state = cache
         tok = self._sample(last)
+        if tr is not None:
+            tr.complete(tr_ev.ENGINE_PREFILL, ts=t0, dur=tr.now() - t0,
+                        track=tr_ev.TRACK_PIPELINE,
+                        args={"batch": len(reqs),
+                              "span": int(toks.shape[1])})
         if self.prefix_cache:
             for slot in range(len(reqs)):
                 self._slot_out[slot].append(int(tok[slot]))
@@ -914,6 +953,8 @@ class EngineBackend:
             k = min(k_cap, self._spec_cap - self._pos - 1)
             if slots and k >= 1:
                 return self._decode_active_spec(slots, k)
+        tr = get_tracer()
+        t0 = tr.now() if tr is not None else 0.0
         active = np.zeros(self.batch_width, bool)
         for s in slots:
             active[s] = True
@@ -940,6 +981,10 @@ class EngineBackend:
         # freed slots keep replaying their last token as pipeline padding
         self._cur = jnp.where(jnp.asarray(active)[:, None], tok[:, None],
                               self._cur)
+        if tr is not None:
+            tr.complete(tr_ev.ENGINE_DECODE, ts=t0, dur=tr.now() - t0,
+                        track=tr_ev.TRACK_PIPELINE,
+                        args={"slots": len(slots)})
         return {s: int(tok[s]) for s in slots}
 
     def _decode_active_spec(self, slots: Sequence[int], k: int):
@@ -948,6 +993,8 @@ class EngineBackend:
         weight-stream), commit the lockstep-min accepted prefix, roll the
         rejected suffix back (pos reset / table truncation)."""
         import jax.numpy as jnp
+        tr = get_tracer()
+        t0 = tr.now() if tr is not None else 0.0
         cur = np.array(self._cur, np.int32)             # (B, 1) host copy
         mat = np.tile(cur, (1, 1 + k))                  # padding: replicas
         active = np.zeros(self.batch_width, bool)
@@ -1012,6 +1059,11 @@ class EngineBackend:
                 self._slot_out[s].extend(int(t) for t in committed[s])
                 self._donate_slot(s)
         self._cur = jnp.asarray(cur)
+        if tr is not None:
+            tr.complete(tr_ev.ENGINE_VERIFY, ts=t0, dur=tr.now() - t0,
+                        track=tr_ev.TRACK_PIPELINE,
+                        args={"k": k, "committed": c,
+                              "slots": len(slots)})
         return committed
 
     def _draft_resident(self, active: np.ndarray, k: int) -> np.ndarray:
@@ -1020,6 +1072,8 @@ class EngineBackend:
         the real slot caches, then rolls back to self._pos so the verify
         pass overwrites every drafted position. Returns (B, k) int32."""
         import jax.numpy as jnp
+        tr = get_tracer()
+        t0 = tr.now() if tr is not None else 0.0
         eng = self.engine
         act = jnp.asarray(active)
         st = self._state
@@ -1031,6 +1085,9 @@ class EngineBackend:
                              -1)[:, None].astype(jnp.int32)
             out[:, i] = np.asarray(cur)[:, 0]
         self._state = eng.rollback(st, self._pos)
+        if tr is not None:
+            tr.complete(tr_ev.ENGINE_DRAFT, ts=t0, dur=tr.now() - t0,
+                        track=tr_ev.TRACK_PIPELINE, args={"k": k})
         return out
 
     @property

@@ -17,6 +17,12 @@ import json
 import math
 from typing import Dict, List, Optional, Sequence
 
+# Bump when ServingReport gains/loses/renames fields. Baseline JSONs under
+# benchmarks/baselines/ carry the version they were generated with;
+# report_from_dict warns on mismatch instead of KeyError-ing so old
+# baselines stay loadable across schema growth.
+SCHEMA_VERSION = 2
+
 
 def percentile(values: Sequence[float], p: float) -> float:
     """Nearest-rank percentile; NaN for empty input."""
@@ -79,6 +85,10 @@ class ServingReport:
     hbm_returned_bytes: float = 0.0  # weight HBM credited to the KV pool
     retier_reclaimed_pages: int = 0  # pages granted by scheduler-driven
                                      # reclaim (before any preemption)
+    # schema versioning (satellite of DESIGN.md §15): benchmark JSON is
+    # compared across PRs — a version stamp lets readers warn instead of
+    # KeyError when the field set moves under them
+    schema_version: int = SCHEMA_VERSION
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -91,10 +101,14 @@ def summarize(requests: List, *, pattern: str = "", backend: str = "",
               stats: Optional[Dict] = None) -> ServingReport:
     """Build a ServingReport from served request records (anything with
     arrival_s / first_token_s / finish_s / output / rejected attributes).
-    `stats`: the scheduler's counter dict (peak occupancy, page traffic)."""
+    `stats`: the scheduler's counters — a plain dict or a
+    repro.obs.MetricsRegistry (the report is a derived view either way,
+    field-identical by construction)."""
     served = [r for r in requests if not getattr(r, "rejected", False)
               and r.finish_s is not None]
     rejected = [r for r in requests if getattr(r, "rejected", False)]
+    if stats is not None and hasattr(stats, "to_stats_dict"):
+        stats = stats.to_stats_dict()
     stats = stats or {}
     total_tokens = sum(getattr(r, "generated", 0) or len(r.output)
                       for r in served)
@@ -120,6 +134,10 @@ def summarize(requests: List, *, pattern: str = "", backend: str = "",
              for r in served
              if r.first_token_s is not None
              and getattr(r, "generated", 0) > 1]
+    # acceptance is DERIVED from the raw counters (single source of
+    # truth) — a pre-computed stats entry is ignored, not trusted
+    spec_drafted = int(stats.get("spec_drafted", 0))
+    spec_accepted = int(stats.get("spec_accepted", 0))
     return ServingReport(
         pattern=pattern, backend=backend,
         n_requests=len(served), n_rejected=len(rejected),
@@ -139,9 +157,10 @@ def summarize(requests: List, *, pattern: str = "", backend: str = "",
         decode_tok_s_p99=percentile(rates, 99),
         n_preempted=sum(getattr(r, "preempted", 0) for r in requests),
         spec_rounds=int(stats.get("spec_rounds", 0)),
-        spec_drafted=int(stats.get("spec_drafted", 0)),
-        spec_accepted=int(stats.get("spec_accepted", 0)),
-        spec_acceptance_rate=float(stats.get("spec_acceptance_rate", 0.0)),
+        spec_drafted=spec_drafted,
+        spec_accepted=spec_accepted,
+        spec_acceptance_rate=(spec_accepted / spec_drafted
+                              if spec_drafted else 0.0),
         prefix_hit_rate=(float(stats.get("prefix_hits", 0))
                          / max(float(stats.get("prefix_lookups", 0)), 1.0)),
         cached_tokens=int(stats.get("cached_tokens", 0)),
@@ -156,3 +175,37 @@ def summarize(requests: List, *, pattern: str = "", backend: str = "",
         kv_pages_spilled=int(stats.get("kv_pages_spilled", 0)),
         kv_pages_fetched=int(stats.get("kv_pages_fetched", 0)),
         kv_migrated_bytes=float(stats.get("kv_migrated_bytes", 0.0)))
+
+
+def report_from_dict(d: Dict, *, source: str = "",
+                     warn=None) -> ServingReport:
+    """Rehydrate a ServingReport from benchmark/baseline JSON,
+    tolerantly: missing fields fall back to dataclass defaults, unknown
+    fields are dropped, and a schema_version mismatch warns (via `warn`
+    or repro.obs.log) instead of raising — old baselines stay readable
+    across schema growth (DESIGN.md §15 satellite)."""
+    if warn is None:
+        from repro.obs.log import get_logger
+        warn = get_logger("repro.metrics").warning
+    fields = {f.name: f for f in dataclasses.fields(ServingReport)}
+    ver = d.get("schema_version")
+    if ver != SCHEMA_VERSION:
+        warn("baseline schema mismatch", source=source or "<dict>",
+             baseline=ver, current=SCHEMA_VERSION)
+    unknown = sorted(set(d) - set(fields))
+    if unknown:
+        warn("baseline has unknown report fields (dropped)",
+             source=source or "<dict>", fields=",".join(unknown))
+    required = {"pattern", "backend", "n_requests", "n_rejected",
+                "total_tokens", "span_s", "ms_per_token",
+                "throughput_tok_s", "throughput_req_s", "ttft_p50_s",
+                "ttft_p99_s", "latency_p50_s", "latency_p99_s"}
+    missing = sorted(required - set(d))
+    if missing:
+        warn("baseline missing report fields (defaults used)",
+             source=source or "<dict>", fields=",".join(missing))
+    kw = {k: v for k, v in d.items() if k in fields}
+    fill = {"str": "", "int": 0, "float": float("nan")}
+    for name in required - set(kw):
+        kw[name] = fill.get(str(fields[name].type), 0)
+    return ServingReport(**kw)

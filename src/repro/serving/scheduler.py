@@ -38,6 +38,9 @@ from typing import Deque, Dict, List, Optional
 import numpy as np
 
 from repro.kvcache import PagedKVConfig, PagedKVManager, PagePool
+from repro.obs import MetricsRegistry
+from repro.obs import trace as tr_ev
+from repro.obs.trace import get_tracer, req_track
 
 
 @dataclasses.dataclass
@@ -201,14 +204,29 @@ class ContinuousBatchingScheduler:
             if self.chunk else None
         self._fill: Dict[int, int] = {}   # rid -> prefill tokens remaining
         # preemption events are counted on the Request records themselves
-        # (summarize sums Request.preempted — single source of truth)
-        self.stats: Dict[str, float] = {
-            "peak_active": 0, "peak_kv_pages": 0,
-            "kv_pages_spilled": 0, "kv_pages_fetched": 0,
-            "kv_migrated_bytes": 0.0,
-            "prefix_lookups": 0, "prefix_hits": 0,
-            "cached_tokens": 0, "prefill_tokens_saved": 0,
-            "prefix_pages": 0, "prefix_evicted_pages": 0}
+        # (summarize sums Request.preempted — single source of truth).
+        # Typed instruments (DESIGN.md §15); `stats` below keeps the
+        # legacy flat-dict view for tests/benches that read it directly.
+        self.metrics = MetricsRegistry()
+        for k in ("kv_pages_spilled", "kv_pages_fetched",
+                  "kv_migrated_bytes", "prefix_lookups", "prefix_hits",
+                  "cached_tokens", "prefill_tokens_saved",
+                  "prefix_pages", "prefix_evicted_pages"):
+            self.metrics.counter(k)
+        self.metrics.gauge("peak_active")
+        self.metrics.gauge("peak_kv_pages")
+        # flight recorder (DESIGN.md §15): when a tracer is installed,
+        # slave its clock to the backend's — virtual time for the
+        # simulator, wall time for the engine — so every event this run
+        # emits shares one timebase and both substrates render identically
+        self._tr = get_tracer()
+        if self._tr is not None:
+            self._tr.clock = backend.now
+
+    @property
+    def stats(self) -> Dict[str, float]:
+        """Legacy flat stats view (the registry is the source of truth)."""
+        return self.metrics.to_stats_dict()
 
     def _page_bytes(self) -> float:
         fn = getattr(self.backend, "kv_bytes_per_token", None)
@@ -288,8 +306,10 @@ class ContinuousBatchingScheduler:
             return 0
         got = fn(n_pages)
         if got:
-            self.stats["retier_reclaimed_pages"] = \
-                self.stats.get("retier_reclaimed_pages", 0) + got
+            self.metrics.inc("retier_reclaimed_pages", got)
+            if self._tr is not None:
+                self._tr.instant(tr_ev.RETIER_RECLAIM, track=tr_ev.TRACK_KV,
+                                 args={"pages": got, "asked": n_pages})
         return got
 
     def _evict_cached(self, n_pages: int) -> int:
@@ -300,7 +320,7 @@ class ContinuousBatchingScheduler:
             return 0
         from repro.kvcache.pool import DEVICE
         freed = self.prefix.evict(n_pages, tier=DEVICE)
-        self.stats["prefix_evicted_pages"] = self.prefix.evicted_pages
+        self.metrics.set("prefix_evicted_pages", self.prefix.evicted_pages)
         return freed
 
     def _on_admit(self, req: Request) -> None:
@@ -313,9 +333,9 @@ class ContinuousBatchingScheduler:
                 req.cached_tokens = ctok
                 # hit accounting per *admission* (the tree's own lookup
                 # counters also see head-of-line re-checks)
-                self.stats["prefix_lookups"] += 1
-                self.stats["prefix_hits"] += int(ctok > 0)
-                self.stats["prefill_tokens_saved"] += ctok
+                self.metrics.inc("prefix_lookups")
+                self.metrics.inc("prefix_hits", int(ctok > 0))
+                self.metrics.inc("prefill_tokens_saved", ctok)
             else:
                 self.mgr.admit(req.rid, req.prefill_tokens + 1)
         else:
@@ -361,12 +381,16 @@ class ContinuousBatchingScheduler:
         return req.kv_tokens > self.kv_budget
 
     def _note_occupancy(self, active_count: int) -> None:
-        self.stats["peak_active"] = max(self.stats["peak_active"],
-                                        active_count)
+        self.metrics.set_gauge("peak_active", active_count)
+        if self._tr is not None:
+            self._tr.counter("active_requests", track=tr_ev.TRACK_SCHED,
+                             active=active_count)
         if self.paged:
             pages = self.mgr.device_pages_in_use()
-            self.stats["peak_kv_pages"] = max(self.stats["peak_kv_pages"],
-                                              pages)
+            self.metrics.set_gauge("peak_kv_pages", pages)
+            if self._tr is not None:
+                self._tr.counter("kv_pages", track=tr_ev.TRACK_KV,
+                                 device=pages)
             note = getattr(self.backend, "note_kv_pages", None)
             if note:
                 note(pages, self.config.page_size)
@@ -424,6 +448,11 @@ class ContinuousBatchingScheduler:
         self._charge(moved)
         if not self.mgr.table(r.rid).pages:   # recompute (or spill fallback)
             r.restart_tokens = r.kv_tokens_now
+        if self._tr is not None:
+            mode = "spill" if self.mgr.table(r.rid).pages else "recompute"
+            self._tr.instant(tr_ev.REQ_PREEMPT, track=req_track(r.rid),
+                             args={"slot": slot, "mode": mode,
+                                   "moved_bytes": moved})
         suspended.append(r)
         self.backend.release(slot)
 
@@ -437,7 +466,41 @@ class ContinuousBatchingScheduler:
         # a spill kept the KV: the re-entry step prefills nothing (the
         # backend prices one query); recompute re-prefills the whole span
         req.cached_tokens = req.kv_tokens_now if kept else 0
+        if self._tr is not None:
+            self._tr.instant(tr_ev.REQ_RESUME, track=req_track(req.rid),
+                             args={"kept_kv": kept,
+                                   "moved_bytes": moved})
         return True
+
+    def _trace_lifecycle(self, r: Request) -> None:
+        """Emit `r`'s lifecycle spans at completion, rebuilt from the
+        timestamps the scheduler recorded anyway (arrival_s, admitted_s,
+        first_token_s, finish_s). Emitting at finish — not live — means a
+        long run's request spans survive ring wraparound: the flight
+        recorder keeps the *most recent* N events, and one span per phase
+        per request is cheap enough to always keep."""
+        tr = self._tr
+        track = req_track(r.rid)
+        if r.admitted_s is not None:
+            tr.complete(tr_ev.REQ_QUEUE, ts=r.arrival_s,
+                        dur=r.admitted_s - r.arrival_s, track=track)
+            if r.first_token_s is not None:
+                tr.complete(tr_ev.REQ_PREFILL, ts=r.admitted_s,
+                            dur=r.first_token_s - r.admitted_s,
+                            track=track,
+                            args={"prompt_len": r.prompt_len,
+                                  "cached_tokens": r.cached_tokens})
+        if r.first_token_s is not None and r.finish_s is not None:
+            tr.complete(tr_ev.REQ_DECODE, ts=r.first_token_s,
+                        dur=r.finish_s - r.first_token_s, track=track,
+                        args={"generated": r.generated})
+        if r.finish_s is not None:
+            tr.complete(tr_ev.REQ_SPAN, ts=r.arrival_s,
+                        dur=r.finish_s - r.arrival_s, track=track,
+                        args={"prompt_len": r.prompt_len,
+                              "generated": r.generated,
+                              "preempted": r.preempted})
+            tr.instant(tr_ev.REQ_FINISH, ts=r.finish_s, track=track)
 
     # -- main loop ---------------------------------------------------------------
     def serve(self, requests: List[Request]) -> List[Request]:
@@ -452,12 +515,25 @@ class ContinuousBatchingScheduler:
         done: List[Request] = []
         shed: List[Request] = []
 
+        tr = self._tr
+
+        def reject(r: Request):
+            r.rejected = True
+            shed.append(r)
+            if tr is not None:
+                tr.instant(tr_ev.REQ_REJECT, track=req_track(r.rid),
+                           args={"prompt_len": r.prompt_len})
+
         def intake(now: float):
             while pending and pending[0].arrival_s <= now:
                 r = pending.popleft()
+                if tr is not None:
+                    tr.instant(tr_ev.REQ_ARRIVE, ts=r.arrival_s,
+                               track=req_track(r.rid),
+                               args={"prompt_len": r.prompt_len,
+                                     "max_new": r.max_new_tokens})
                 if self._oversized(r) or len(queue) >= self.config.max_queue:
-                    r.rejected = True
-                    shed.append(r)
+                    reject(r)
                 else:
                     queue.append(r)
 
@@ -493,8 +569,16 @@ class ContinuousBatchingScheduler:
             else:
                 r = queue.popleft()
                 self._on_admit(r)
+                if tr is not None and r.cached_tokens > 0:
+                    tr.instant(tr_ev.REQ_PREFIX_HIT,
+                               track=req_track(r.rid),
+                               args={"cached_tokens": r.cached_tokens})
             if r.admitted_s is None:
                 r.admitted_s = self.backend.now()
+            if tr is not None:
+                tr.instant(tr_ev.REQ_ADMIT, track=req_track(r.rid),
+                           args={"resumed": kind == "suspended",
+                                 "cached_tokens": r.cached_tokens})
             if self._mixed is not None:
                 # chunked prefill: the uncached span drains chunk-by-chunk
                 # through mixed rounds instead of one monolithic pass
@@ -517,6 +601,8 @@ class ContinuousBatchingScheduler:
             done.append(r)
             del active[slot]
             self.backend.release(slot)
+            if tr is not None:
+                self._trace_lifecycle(r)
 
         while pending or queue or suspended or active:
             intake(self.backend.now())
@@ -544,8 +630,7 @@ class ContinuousBatchingScheduler:
                         self.mgr.release(r.rid)   # don't leak its pages
                     else:
                         r = queue.popleft()
-                    r.rejected = True
-                    shed.append(r)
+                    reject(r)
                     continue
                 order = list(range(len(batch)))
                 if self._mixed is not None:
@@ -654,21 +739,22 @@ class ContinuousBatchingScheduler:
 
         if self.paged:
             pool = self.mgr.pool
-            self.stats["kv_pages_spilled"] = pool.spilled_pages
-            self.stats["kv_pages_fetched"] = pool.fetched_pages
-            self.stats["kv_migrated_bytes"] = pool.migrated_bytes
+            self.metrics.set("kv_pages_spilled", pool.spilled_pages)
+            self.metrics.set("kv_pages_fetched", pool.fetched_pages)
+            self.metrics.set("kv_migrated_bytes", pool.migrated_bytes)
         if self.prefix is not None:
-            self.stats["cached_tokens"] = self.prefix.cached_tokens()
-            self.stats["prefix_pages"] = self.prefix.n_pages
-            self.stats["prefix_evicted_pages"] = self.prefix.evicted_pages
+            self.metrics.set("cached_tokens", self.prefix.cached_tokens())
+            self.metrics.set("prefix_pages", self.prefix.n_pages)
+            self.metrics.set("prefix_evicted_pages",
+                             self.prefix.evicted_pages)
         else:                         # engine-tier radix (real KV pages)
             bps = getattr(self.backend, "prefix_stats", None)
             if bps:
-                self.stats.update(bps)
+                self.metrics.update(bps)
         spec = getattr(self.backend, "spec_stats", None)
         if spec:                      # drafted/accepted counters -> report
-            self.stats.update(spec)
+            self.metrics.update(spec)
         adapt = getattr(self.backend, "adapt_stats", None)
         if adapt:                     # retier telemetry (DESIGN.md §13)
-            self.stats.update(adapt)
+            self.metrics.update(adapt)
         return done + shed

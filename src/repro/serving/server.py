@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.engine import InterleavedEngine
+from repro.obs.trace import Tracer, get_tracer, set_tracer
 from repro.serving.backend import EngineBackend
 from repro.serving.sampling import SamplerConfig, sample  # noqa: F401
 from repro.serving.scheduler import (ContinuousBatchingScheduler, Request,
@@ -68,7 +69,9 @@ class LimeServer:
                  max_len: int = 512, sampler: SamplerConfig = SamplerConfig(),
                  pattern: str = "sporadic", spec=None,
                  prefix_cache: bool = False, prefill_chunk_tokens: int = 0,
-                 page_size: int = 64, planner=None):
+                 page_size: int = 64, planner=None,
+                 trace: Optional[str] = None,
+                 trace_capacity: int = 1 << 16):
         self.cfg = cfg
         self.params = params
         self.engine = engine
@@ -80,6 +83,11 @@ class LimeServer:
         self.prefill_chunk_tokens = prefill_chunk_tokens
         self.page_size = page_size
         self.planner = planner                # OnlinePlanner (DESIGN §13)
+        # flight recorder (DESIGN.md §15): a path arms tracing for every
+        # serve_all() — Chrome trace-event JSON (Perfetto), or JSONL when
+        # the suffix is .jsonl
+        self.trace = trace
+        self.trace_capacity = trace_capacity
         self.queue = RequestQueue()
         self._backend: Optional[EngineBackend] = None
 
@@ -117,5 +125,17 @@ class LimeServer:
         base = backend.now()
         for r in reqs:
             r.arrival_s += base
-        sched = ContinuousBatchingScheduler(backend, SchedulerConfig())
-        return sched.serve(reqs)
+        # arm the flight recorder before the scheduler is built (it binds
+        # the tracer clock to backend.now at construction); an externally
+        # installed tracer wins — the caller owns its export then
+        tracer = None
+        if self.trace and get_tracer() is None:
+            tracer = Tracer(capacity=self.trace_capacity)
+            set_tracer(tracer)
+        try:
+            sched = ContinuousBatchingScheduler(backend, SchedulerConfig())
+            return sched.serve(reqs)
+        finally:
+            if tracer is not None:
+                set_tracer(None)
+                tracer.export(self.trace)

@@ -72,9 +72,11 @@ class SpecStats:
         return self.accepted / self.drafted if self.drafted else 0.0
 
     def to_dict(self) -> Dict[str, float]:
+        # raw counters only: the acceptance RATE is derived downstream
+        # (serving.metrics.summarize) — one source of truth, no stale
+        # pre-computed copy riding the stats dict
         return {"spec_rounds": self.rounds, "spec_drafted": self.drafted,
-                "spec_accepted": self.accepted,
-                "spec_acceptance_rate": self.acceptance_rate}
+                "spec_accepted": self.accepted}
 
 
 class SpecDecodeController:

@@ -108,7 +108,13 @@ class Trainer:
 
     def fit(self, params, opt_state, batches: Iterator[Dict[str, Any]],
             steps: int, log_every: int = 10,
-            log_fn: Callable[[str], None] = print):
+            log_fn: Optional[Callable[[str], None]] = None):
+        """Progress goes through the repro.obs structured logger by
+        default (level-gated: quiet under pytest, REPRO_LOG=debug to
+        see every line); pass log_fn to capture lines directly."""
+        if log_fn is None:
+            from repro.obs.log import get_logger
+            log_fn = get_logger("repro.training").info
         step_fn = self._step_fn or self.compile()
         history = []
         t0 = time.time()
