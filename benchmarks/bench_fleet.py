@@ -1,0 +1,258 @@
+"""Fleet layer: multi-replica routing vs a single pipeline
+(EXPERIMENTS.md §Fleet).
+
+Three headline claims, exit-code enforced on the paper's 4-device
+heterogeneous testbed (E3) over the discrete-event substrate:
+
+  goodput   at an arrival rate that saturates ONE pipeline, a 4-replica
+            fleet sustains >= 3x the single-replica aggregate goodput
+            (tokens/s over the arrival->last-completion span) — the
+            router spreads load instead of queueing it
+  affinity  on shared-prefix traffic, prefix-affinity routing beats
+            seeded-random routing on BOTH p50 TTFT and radix hit rate:
+            same-template requests concentrate where the pages already
+            are instead of warming four separate caches
+  drain     draining a replica mid-stream drops zero in-flight requests:
+            everything routed to it before the drain finishes, it
+            receives nothing after, and it retires
+
+  python benchmarks/bench_fleet.py
+  python benchmarks/bench_fleet.py --scenario affinity --n-requests 64
+  python benchmarks/bench_fleet.py --out benchmarks/baselines/fleet_sim.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+
+def make_replica(args, index: int, *, prefix: bool):
+    from repro.configs.registry import get_config
+    from repro.core.cost_model import CostEnv, Workload
+    from repro.core.profiles import env_E1, env_E2, env_E3, mbps
+    from repro.fleet import Replica
+    from repro.serving import SchedulerConfig, SimBackend
+
+    fleets = {"E1": env_E1, "E2": env_E2, "E3": env_E3}
+    cfg = get_config(args.arch)
+    w = Workload(cfg, mb=1, ctx=args.prompt_len, n_micro=args.slots)
+    env = CostEnv(fleets[args.fleet](), mbps(args.bw_mbps), w)
+    backend = SimBackend(env, n_slots=args.slots,
+                         prompt_tokens=args.prompt_len)
+    scfg = SchedulerConfig(kv_policy="paged", page_size=args.page_size,
+                           prefix_cache=prefix)
+    return Replica(index, backend, scfg)
+
+
+def build_fleet(args, n: int, policy: str, *, prefix: bool):
+    from repro.fleet import Fleet, RouterConfig
+    reps = [make_replica(args, i, prefix=prefix) for i in range(n)]
+    return Fleet(reps, config=RouterConfig(policy=policy, seed=args.seed))
+
+
+def run_goodput(args) -> dict:
+    """Same saturating poisson stream through 1 replica and through 4."""
+    from repro.serving import cli_arrivals, requests_from_arrivals
+
+    arrivals = cli_arrivals("poisson", args.goodput_requests,
+                            seed=args.seed, prompt_len=args.prompt_len,
+                            max_new_tokens=args.max_new,
+                            rate_rps=args.rate_rps)
+    reports = {}
+    for n in (1, args.replicas):
+        fleet = build_fleet(args, n, "prefix", prefix=False)
+        res = fleet.run(requests_from_arrivals(arrivals, seed=args.seed))
+        reports[n] = res.report(pattern="poisson",
+                                backend=f"sim/fleet{n}").to_dict()
+    single = reports[1]["aggregate"]
+    multi = reports[args.replicas]["aggregate"]
+    ratio = multi["throughput_tok_s"] / max(single["throughput_tok_s"],
+                                            1e-12)
+    return {"scenario": "goodput",
+            "single": reports[1], "fleet": reports[args.replicas],
+            "goodput_single_tok_s": single["throughput_tok_s"],
+            "goodput_fleet_tok_s": multi["throughput_tok_s"],
+            "goodput_ratio": ratio,
+            "ttft_p99_single_s": single["ttft_p99_s"],
+            "ttft_p99_fleet_s": multi["ttft_p99_s"]}
+
+
+def run_affinity(args) -> dict:
+    """Shared-prefix traffic: prefix-affinity routing vs seeded random."""
+    from repro.serving import cli_arrivals, requests_from_arrivals
+
+    arrivals = cli_arrivals("shared_prefix", args.n_requests,
+                            seed=args.seed, prompt_len=args.prompt_len,
+                            max_new_tokens=args.max_new,
+                            rate_rps=args.affinity_rate_rps,
+                            n_templates=args.n_templates,
+                            prefix_len=args.prefix_len)
+    reports = {}
+    for policy in ("prefix", "random"):
+        fleet = build_fleet(args, args.replicas, policy, prefix=True)
+        res = fleet.run(requests_from_arrivals(arrivals, seed=args.seed))
+        reports[policy] = res.report(pattern="shared_prefix",
+                                     backend=f"sim/{policy}").to_dict()
+    pa, ra = reports["prefix"]["aggregate"], reports["random"]["aggregate"]
+    return {"scenario": "affinity",
+            "prefix": reports["prefix"], "random": reports["random"],
+            "ttft_p50_prefix_s": pa["ttft_p50_s"],
+            "ttft_p50_random_s": ra["ttft_p50_s"],
+            "hit_rate_prefix": pa["prefix_hit_rate"],
+            "hit_rate_random": ra["prefix_hit_rate"]}
+
+
+def run_drain(args) -> dict:
+    """Drain one replica mid-stream; count its in-flight to completion."""
+    from repro.serving import cli_arrivals, requests_from_arrivals
+
+    arrivals = cli_arrivals("poisson", args.n_requests, seed=args.seed,
+                            prompt_len=args.prompt_len,
+                            max_new_tokens=args.max_new,
+                            rate_rps=args.rate_rps)
+    drain_at = arrivals[len(arrivals) // 2].time_s
+    fleet = build_fleet(args, args.replicas, "prefix", prefix=False)
+    victim = fleet.replicas[-1].name
+    fleet.drain(victim, at_s=drain_at)
+    res = fleet.run(requests_from_arrivals(arrivals, seed=args.seed))
+    rep = res.report(pattern="poisson", backend="sim/drain")
+    vrecs = res.per_replica[victim]
+    dropped = [r for r in vrecs if not r.done]
+    late = [r for r in vrecs if r.arrival_s > drain_at]
+    mem = rep.membership[victim]
+    return {"scenario": "drain", "report": rep.to_dict(),
+            "victim": victim, "drain_at_s": drain_at,
+            "victim_routed": mem["routed"],
+            "victim_dropped": len(dropped),
+            "victim_admits_after_drain": len(late),
+            "victim_retired_s": mem["retired_s"],
+            "fleet_done": sum(r.done for r in res.requests),
+            "fleet_total": len(res.requests)}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scenario", choices=("goodput", "affinity", "drain",
+                                           "all"), default="all")
+    ap.add_argument("--arch", default="llama2-13b")
+    ap.add_argument("--fleet", default="E3", choices=("E1", "E2", "E3"))
+    ap.add_argument("--bw-mbps", type=float, default=200.0)
+    ap.add_argument("--replicas", type=int, default=4)
+    ap.add_argument("--n-requests", type=int, default=48)
+    ap.add_argument("--goodput-requests", type=int, default=96,
+                    help="stream length for the goodput scenario — long "
+                         "enough that the drain tail (one replica "
+                         "finishing last while others idle) amortizes")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=256)
+    ap.add_argument("--prefix-len", type=int, default=192,
+                    help="shared template span (affinity scenario)")
+    ap.add_argument("--n-templates", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--rate-rps", type=float, default=2.0,
+                    help="poisson arrival rate — default saturates even "
+                         "the 4-replica fleet (goodput/drain scenarios)")
+    ap.add_argument("--affinity-rate-rps", type=float, default=1.0,
+                    help="arrival rate for the affinity scenario — "
+                         "moderate load, where routing quality (not raw "
+                         "queueing) dominates TTFT")
+    ap.add_argument("--page-size", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="also write JSON here")
+    args = ap.parse_args(argv)
+
+    results = []
+    comparison = {}
+    rc = 0
+    if args.scenario in ("goodput", "all"):
+        g = run_goodput(args)
+        results.append(g)
+        comparison["goodput_ratio"] = g["goodput_ratio"]
+        print(f"# goodput: {args.replicas}-replica "
+              f"{g['goodput_fleet_tok_s']:.2f} tok/s vs single "
+              f"{g['goodput_single_tok_s']:.2f} tok/s "
+              f"({g['goodput_ratio']:.2f}x); TTFT p99 "
+              f"{g['ttft_p99_fleet_s']:.1f}s vs "
+              f"{g['ttft_p99_single_s']:.1f}s", file=sys.stderr)
+        if g["goodput_ratio"] < 3.0:
+            print(f"# WARNING: {args.replicas}-replica goodput below 3x "
+                  f"single-replica — router not spreading load",
+                  file=sys.stderr)
+            rc = 1
+    if args.scenario in ("affinity", "all"):
+        a = run_affinity(args)
+        results.append(a)
+        comparison["affinity"] = {
+            "ttft_p50_prefix_s": a["ttft_p50_prefix_s"],
+            "ttft_p50_random_s": a["ttft_p50_random_s"],
+            "hit_rate_prefix": a["hit_rate_prefix"],
+            "hit_rate_random": a["hit_rate_random"]}
+        print(f"# affinity: TTFT p50 {a['ttft_p50_prefix_s']:.2f}s "
+              f"(prefix) vs {a['ttft_p50_random_s']:.2f}s (random); "
+              f"hit rate {a['hit_rate_prefix']:.2f} vs "
+              f"{a['hit_rate_random']:.2f}", file=sys.stderr)
+        if a["ttft_p50_prefix_s"] >= a["ttft_p50_random_s"]:
+            print("# WARNING: prefix routing did not beat random on "
+                  "p50 TTFT", file=sys.stderr)
+            rc = 1
+        if a["hit_rate_prefix"] <= a["hit_rate_random"]:
+            print("# WARNING: prefix routing did not beat random on "
+                  "radix hit rate", file=sys.stderr)
+            rc = 1
+    if args.scenario in ("drain", "all"):
+        d = run_drain(args)
+        results.append(d)
+        comparison["drain"] = {
+            "victim_routed": d["victim_routed"],
+            "victim_dropped": d["victim_dropped"],
+            "victim_admits_after_drain": d["victim_admits_after_drain"]}
+        print(f"# drain: {d['victim']} had {d['victim_routed']} routed, "
+              f"{d['victim_dropped']} dropped, "
+              f"{d['victim_admits_after_drain']} admits after drain; "
+              f"retired at {d['victim_retired_s']:.1f}s; fleet finished "
+              f"{d['fleet_done']}/{d['fleet_total']}", file=sys.stderr)
+        if d["victim_dropped"] or d["victim_admits_after_drain"]:
+            print("# WARNING: drain dropped in-flight requests or kept "
+                  "admitting", file=sys.stderr)
+            rc = 1
+        if d["victim_retired_s"] is None \
+                or d["fleet_done"] != d["fleet_total"]:
+            print("# WARNING: drain never completed or fleet shed "
+                  "requests", file=sys.stderr)
+            rc = 1
+
+    from repro.serving.metrics import SCHEMA_VERSION
+    payload = {"schema_version": SCHEMA_VERSION, "config": vars(args),
+               "results": results, "comparison": comparison}
+    text = json.dumps(payload, indent=2)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    return rc
+
+
+def run():
+    """benchmarks.run harness hook: fast sim-only smoke."""
+    class _Row:
+        def __init__(self, name, ms):
+            self.name, self.ms = name, ms
+
+        def csv(self):
+            return f"fleet,{self.name},{self.ms:.1f},ok"
+
+    rc = main(["--n-requests", "32", "--goodput-requests", "64",
+               "--prompt-len", "128", "--prefix-len", "64",
+               "--max-new", "8", "--rate-rps", "4.0"])
+    if rc:
+        raise SystemExit("bench_fleet smoke failed")
+    return [_Row("goodput_affinity_drain", 0.0)]
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

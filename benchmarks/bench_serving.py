@@ -122,47 +122,70 @@ def run_pattern(args, pattern: str, trace_out: str = None) -> dict:
                             prefix_len=args.prefix_len, turns=args.turns,
                             trace=args.arrival_trace)
 
+    if args.replicas > 1 and args.backend != "sim":
+        raise SystemExit("--replicas > 1 runs on --backend sim (the "
+                         "launcher serves engine-backed fleets)")
     backend = build_sim_backend(args, slots) if args.backend == "sim" \
         else build_engine_backend(args, slots,
                                   max(ev.prompt_len for ev in arrivals))
     kv_policy = args.kv_policy
     if args.prefix_cache and args.backend == "sim":
         kv_policy = "paged"             # the radix tree lives in the pool
-    # flight recorder: install BEFORE the scheduler is built — it caches
-    # the tracer and binds its clock to backend.now at construction
+    scfg = SchedulerConfig(
+        kv_policy=kv_policy, page_size=args.page_size,
+        prefix_cache=(args.prefix_cache and args.backend == "sim"),
+        prefill_chunk_tokens=args.prefill_chunk)
+    # flight recorder: install BEFORE schedulers are built — they cache
+    # the tracer and bind its clock to backend.now at construction
     tracer = None
     if trace_out:
         tracer = Tracer(capacity=args.trace_capacity)
         set_tracer(tracer)
     try:
-        sched = ContinuousBatchingScheduler(
-            backend, SchedulerConfig(
-                kv_policy=kv_policy, page_size=args.page_size,
-                prefix_cache=(args.prefix_cache and args.backend == "sim"),
-                prefill_chunk_tokens=args.prefill_chunk))
         # template prompts materialize real ids: keep them inside the
         # engine's (smoke) vocab so prefix keys equal what the model
         # actually embeds
         vocab = backend.cfg.vocab_size if args.backend == "engine" else 32768
-        served = sched.serve(requests_from_arrivals(arrivals,
-                                                    vocab_size=vocab,
+        reqs = requests_from_arrivals(arrivals, vocab_size=vocab,
+                                      seed=args.seed)
+        if args.replicas > 1:
+            # fleet mode (DESIGN.md §16): N replica pipelines behind the
+            # router; the report's `aggregate` carries the pooled metrics
+            from repro.fleet import Fleet, Replica, RouterConfig
+            reps = [Replica(0, backend, scfg)]
+            reps += [Replica(i, build_sim_backend(args, slots), scfg)
+                     for i in range(1, args.replicas)]
+            fleet = Fleet(reps, config=RouterConfig(policy=args.router,
                                                     seed=args.seed))
+            result = fleet.run(reqs)
+            out = result.report(
+                pattern=pattern,
+                backend=f"{args.backend}/fleet{args.replicas}").to_dict()
+        else:
+            sched = ContinuousBatchingScheduler(backend, scfg)
+            served = sched.serve(reqs)
+            out = summarize(served, pattern=pattern, backend=args.backend,
+                            stats=sched.stats).to_dict()
     finally:
         if tracer is not None:
             set_tracer(None)
-    report = summarize(served, pattern=pattern, backend=args.backend,
-                       stats=sched.stats)
     if tracer is not None:
         tracer.export(trace_out)
         print(f"# trace: {trace_out} ({tracer.emitted} events, "
               f"{tracer.dropped} dropped)", file=sys.stderr)
-    return report.to_dict()
+    return out
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--pattern", choices=PATTERN_CHOICES, default="all")
     ap.add_argument("--backend", choices=("sim", "engine"), default="sim")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="fleet mode (DESIGN.md §16): route the stream "
+                         "across N replica pipelines (sim backend)")
+    ap.add_argument("--router", default="prefix",
+                    choices=("prefix", "sticky", "random", "roundrobin"),
+                    help="fleet placement policy (--replicas > 1)")
     ap.add_argument("--arch", default="llama2-13b")
     ap.add_argument("--fleet", default="E3",
                     choices=("E1", "E2", "E3", "lowmem1", "tpu4"),
@@ -233,7 +256,7 @@ def main(argv=None) -> int:
             f.write(text + "\n")
 
     if args.pattern == "all":
-        by = {r["pattern"]: r for r in results}
+        by = {r["pattern"]: r.get("aggregate", r) for r in results}
         s, b = by["sporadic"], by["bursty"]
         ratio = b["throughput_tok_s"] / max(s["throughput_tok_s"], 1e-12)
         print(f"# bursty/sporadic throughput: {ratio:.2f}x "

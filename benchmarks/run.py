@@ -31,6 +31,8 @@ SUITES = {
                                           "prefill"),
     "adaptation": ("benchmarks.bench_adaptation", "online memory adaptation "
                                                   "vs static plan"),
+    "fleet": ("benchmarks.bench_fleet", "multi-replica router vs single "
+                                        "pipeline"),
 }
 
 

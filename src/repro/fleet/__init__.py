@@ -1,0 +1,16 @@
+"""Fleet layer: multi-replica serving behind a prefix-affine router
+(DESIGN.md §16).
+
+One LIME pipeline serves one model on one device subset; the fleet layer
+runs N of them — each a full Scheduler + InferenceBackend + ExecutionPlan
+stack (`Replica`) — behind a `FleetRouter` that places each request by
+prefix overlap (against per-replica radix digests), session stickiness,
+and load, with spillover and hysteresis. `Fleet` co-steps the replica
+clocks on one timeline and supports elastic drain/join; `FleetReport`
+merges the per-replica results exactly (pooled records + registry merge).
+"""
+from repro.fleet.fleet import Fleet  # noqa: F401
+from repro.fleet.replica import Replica  # noqa: F401
+from repro.fleet.report import FleetReport, FleetResult  # noqa: F401
+from repro.fleet.router import (POLICIES, FleetRouter,  # noqa: F401
+                                RouterConfig)

@@ -40,6 +40,14 @@ def main(argv=None):
                          "when PATH ends in .jsonl")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="fleet mode (DESIGN.md §16): N replica serving "
+                         "stacks behind the router, each its own backend "
+                         "(real execution, single-device fallback each — "
+                         "one engine cannot back N independent replicas)")
+    ap.add_argument("--router", default="prefix",
+                    choices=("prefix", "sticky", "random", "roundrobin"),
+                    help="fleet placement policy (--replicas > 1)")
     ap.add_argument("--spec", action="store_true",
                     help="speculative decoding: draft k tokens, verify "
                          "them in one pipeline round (DESIGN.md §11)")
@@ -187,10 +195,34 @@ def main(argv=None):
     if args.trace:
         tracer = Tracer()
         set_tracer(tracer)
+    fleet_report = None
     try:
-        sched = ContinuousBatchingScheduler(srv.make_backend(), scfg)
-        done = sched.serve(requests_from_arrivals(arrivals,
-                                                  vocab_size=cfg.vocab_size))
+        reqs = requests_from_arrivals(arrivals, vocab_size=cfg.vocab_size)
+        if args.replicas > 1:
+            # fleet mode (DESIGN.md §16): N real-execution replicas (each
+            # the single-device fallback backend — one InterleavedEngine
+            # cannot back N independent replicas) behind the router
+            from repro.fleet import Fleet, Replica, RouterConfig
+            from repro.serving import EngineBackend
+            if engine is not None:
+                log.info("fleet mode: replicas run the single-device "
+                         "fallback backend (engine ignored)")
+            reps = [Replica(i, EngineBackend(
+                        cfg, params, engine=None, n_slots=srv.slots,
+                        max_len=args.max_len, sampler=srv.sampler,
+                        spec=spec, prefix_cache=args.prefix_cache,
+                        prefill_chunk_tokens=args.prefill_chunk,
+                        page_size=args.page_size), scfg)
+                    for i in range(args.replicas)]
+            fleet = Fleet(reps, config=RouterConfig(policy=args.router,
+                                                    seed=args.seed))
+            result = fleet.run(reqs)
+            done = result.requests
+            fleet_report = result.report(
+                pattern=args.pattern, backend=f"fleet{args.replicas}")
+        else:
+            sched = ContinuousBatchingScheduler(srv.make_backend(), scfg)
+            done = sched.serve(reqs)
     finally:
         if tracer is not None:
             set_tracer(None)
@@ -203,10 +235,13 @@ def main(argv=None):
             f"ttft {r.ttft_s:.2f}s total {r.latency_s:.2f}s " \
             f"out[:8]={r.output[:8]}"
         print(f"req {r.rid}: {status}")
-    report = summarize(done, pattern=args.pattern,
-                       backend="engine" if engine else "fallback",
-                       stats=sched.stats)
-    print(json.dumps(report.to_dict(), indent=2))
+    if fleet_report is not None:
+        print(fleet_report.to_json())
+    else:
+        report = summarize(done, pattern=args.pattern,
+                           backend="engine" if engine else "fallback",
+                           stats=sched.stats)
+        print(json.dumps(report.to_dict(), indent=2))
     return 0
 
 

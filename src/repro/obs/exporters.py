@@ -32,18 +32,52 @@ JSONL_VERSION = 1
 _PHASES = ("i", "X", "B", "E", "C", "M")
 
 
+# pids 0-3 are the single-pipeline process groups; namespaced replica
+# tracks ("r<N>:...", Tracer.namespace) land at _REPLICA_PID_BASE + N so
+# Perfetto renders one process group per fleet replica
+_PID_NAMES = {0: "serving", 1: "fleet", 2: "requests", 3: "router"}
+_REPLICA_PID_BASE = 10
+
+
+def _replica_of(track: str):
+    """'r3:sched' -> 3; None for un-namespaced tracks ('req:5' included)."""
+    ns, sep, rest = track.partition(":")
+    if sep and rest and len(ns) > 1 and ns[0] == "r" and ns[1:].isdigit():
+        return int(ns[1:])
+    return None
+
+
 def _track_pids(tracks) -> Dict[str, Tuple[int, int]]:
     """Stable track -> (pid, tid) assignment. Request tracks get their
     own process so Perfetto renders one lane per request; device tracks
-    one lane per device/loader."""
+    one lane per device/loader; every replica-namespaced track (rN:...)
+    lands in that replica's own process group; router events get their
+    own fleet-level process."""
     out: Dict[str, Tuple[int, int]] = {}
-    next_tid = {0: 0, 1: 0, 2: 0}
+    next_tid: Dict[int, int] = {}
     for tr in sorted(set(tracks)):
-        pid = 2 if tr.startswith("req:") else 1 if tr.startswith("dev:") \
-            else 0
-        out[tr] = (pid, next_tid[pid])
-        next_tid[pid] += 1
+        rep = _replica_of(tr)
+        if rep is not None:
+            pid = _REPLICA_PID_BASE + rep
+        elif tr == "router" or tr.startswith("fleet"):
+            pid = 3
+        elif tr.startswith("req:"):
+            pid = 2
+        elif tr.startswith("dev:"):
+            pid = 1
+        else:
+            pid = 0
+        out[tr] = (pid, next_tid.get(pid, 0))
+        next_tid[pid] = next_tid.get(pid, 0) + 1
     return out
+
+
+def _pid_names(pids: Dict[str, Tuple[int, int]]) -> Dict[int, str]:
+    names = dict(_PID_NAMES)
+    for pid, _ in pids.values():
+        if pid >= _REPLICA_PID_BASE:
+            names[pid] = f"replica r{pid - _REPLICA_PID_BASE}"
+    return names
 
 
 def to_chrome(tracer: Tracer) -> dict:
@@ -51,7 +85,7 @@ def to_chrome(tracer: Tracer) -> dict:
     events = tracer.events()
     pids = _track_pids([e[EVT_TRACK] for e in events])
     out: List[dict] = []
-    for pid, pname in ((0, "serving"), (1, "fleet"), (2, "requests")):
+    for pid, pname in sorted(_pid_names(pids).items()):
         out.append({"name": "process_name", "ph": "M", "pid": pid, "tid": 0,
                     "args": {"name": pname}})
     for track, (pid, tid) in pids.items():

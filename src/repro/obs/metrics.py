@@ -121,6 +121,25 @@ class MetricsRegistry:
         for k, v in stats.items():
             self.counter(k).set(v)
 
+    def merge(self, other: "MetricsRegistry") -> "MetricsRegistry":
+        """Fold another registry into this one — the fleet aggregation
+        primitive (DESIGN.md §16). Counters sum (totals across replicas),
+        gauges take the max (a fleet's peak occupancy is the max of the
+        replicas' peaks, not their sum — each replica's pool is its own),
+        histograms concatenate raw samples so merged percentiles equal
+        percentiles over the pooled observations *exactly* (asserted in
+        tests; merging precomputed percentiles would not be). Returns self
+        so merges chain."""
+        for name, c in other._counters.items():
+            self.counter(name).inc(c.value)
+        for name, g in other._gauges.items():
+            mine = self.gauge(name)
+            mine.value = max(mine.value, g.value)
+            mine.peak = max(mine.peak, g.peak)
+        for name, h in other._hists.items():
+            self.histogram(name).values.extend(h.values)
+        return self
+
     # -- views -------------------------------------------------------------------
     def to_stats_dict(self) -> Dict[str, float]:
         """The legacy flat `stats` vocabulary: counters under their own

@@ -97,6 +97,12 @@ ENGINE_VERIFY = "engine.verify"
 ENGINE_DRAFT = "engine.draft"
 ENGINE_SEED = "engine.seed"
 ENGINE_RETIER = "engine.retier"
+# fleet router (DESIGN.md §16; track "router")
+FLEET_ROUTE = "fleet.route"
+FLEET_SPILLOVER = "fleet.spillover"
+FLEET_DRAIN = "fleet.drain"
+FLEET_DRAINED = "fleet.drained"
+FLEET_JOIN = "fleet.join"
 
 # tracks
 TRACK_SCHED = "sched"
@@ -104,6 +110,7 @@ TRACK_PIPELINE = "pipeline"
 TRACK_KV = "kv"
 TRACK_PREFIX = "prefix"
 TRACK_ENGINE = "engine"
+TRACK_ROUTER = "router"
 
 
 def req_track(rid: int) -> str:
@@ -124,11 +131,18 @@ class Tracer:
     clock so sim traces carry virtual time)."""
 
     def __init__(self, capacity: int = 1 << 16,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 namespace: Optional[str] = None):
         if capacity <= 0:
             raise ValueError(f"capacity must be positive, got {capacity}")
         self.capacity = capacity
         self.clock = clock
+        # track-name namespace: when N backends trace into ONE ring (the
+        # fleet layer) their "sched"/"kv"/"req:0" tracks collide — a
+        # namespace "r1" rewrites them to "r1:sched" etc. at push time,
+        # and the Chrome exporter maps each rN: group to its own Perfetto
+        # process. The fleet executor flips this per replica step.
+        self.namespace = namespace
         self.buf: deque = deque(maxlen=capacity)
         self.dropped = 0          # events the ring evicted (wraparound)
         self.emitted = 0          # events ever recorded
@@ -138,6 +152,10 @@ class Tracer:
         return self.clock()
 
     def _push(self, evt: Event) -> None:
+        ns = self.namespace
+        if ns is not None:
+            evt = (evt[0], evt[1], evt[2], evt[3],
+                   ns + ":" + evt[EVT_TRACK], evt[5])
         if len(self.buf) == self.capacity:
             self.dropped += 1
         self.emitted += 1

@@ -6,4 +6,5 @@ prefix copy-on-write into a request's BlockTable (only the uncached suffix
 is prefilled), insert on finish donates the request's committed pages back,
 and LRU eviction reclaims unpinned cached pages first under pool pressure.
 """
+from repro.prefixcache.digest import PrefixDigest, chain_hashes  # noqa: F401
 from repro.prefixcache.radix import RadixPrefixCache  # noqa: F401

@@ -37,12 +37,15 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.kvcache.pool import PagePool
 from repro.obs import trace as tr_ev
 from repro.obs.trace import get_tracer
+from repro.prefixcache.digest import ROOT_SEED, PrefixDigest, chain_hash
 
 
 class _Node:
     """One cached page: `key` is its page_size-token tuple, `page` the
-    physical page id the tree holds an incref on."""
-    __slots__ = ("key", "page", "children", "parent", "last_use")
+    physical page id the tree holds an incref on. `cum` is the cumulative
+    chain hash H(parent.cum, key) — it pins down the node's entire root
+    path in one integer and is what digest() exports (digest.py)."""
+    __slots__ = ("key", "page", "children", "parent", "last_use", "cum")
 
     def __init__(self, key: Optional[Tuple[int, ...]], page: Optional[int],
                  parent: Optional["_Node"]):
@@ -51,6 +54,8 @@ class _Node:
         self.parent = parent
         self.children: Dict[Tuple[int, ...], _Node] = {}
         self.last_use = 0
+        self.cum = ROOT_SEED if parent is None \
+            else chain_hash(parent.cum, key)
 
 
 class RadixPrefixCache:
@@ -62,6 +67,8 @@ class RadixPrefixCache:
         self._root = _Node(None, None, None)
         self._clock = 0
         self._n_pages = 0
+        self._cum: Dict[int, int] = {}  # chain hash -> node count (hash
+                                        # collisions keep both alive)
         # cumulative counters (benchmark / metrics surface)
         self.lookups = 0
         self.hits = 0
@@ -77,6 +84,12 @@ class RadixPrefixCache:
 
     def cached_tokens(self) -> int:
         return self._n_pages * self.page_size
+
+    def digest(self) -> PrefixDigest:
+        """Router-side snapshot: the cumulative chain hash of every cached
+        node (digest.py). O(cached pages) to build, O(prompt pages) to
+        query — no token tuples leave the tree."""
+        return PrefixDigest(self.page_size, self._cum)
 
     def _keys(self, tokens: Sequence[int], n_pages: int):
         ps = self.page_size
@@ -131,6 +144,7 @@ class RadixPrefixCache:
                 self.pool.incref_page(pages[j])
                 child = _Node(key, pages[j], node)
                 node.children[key] = child
+                self._cum[child.cum] = self._cum.get(child.cum, 0) + 1
                 self._n_pages += 1
                 new += 1
             child.last_use = self._clock
@@ -147,6 +161,11 @@ class RadixPrefixCache:
     def _drop(self, node: _Node) -> None:
         node.parent.children.pop(node.key)
         self.pool.decref_page(node.page)
+        left = self._cum.get(node.cum, 1) - 1
+        if left:
+            self._cum[node.cum] = left
+        else:
+            self._cum.pop(node.cum, None)
         self._n_pages -= 1
         self.evicted_pages += 1
 
@@ -190,6 +209,7 @@ class RadixPrefixCache:
             self.pool.decref_page(node.page)
             n += 1
         self._root.children.clear()
+        self._cum.clear()
         self._n_pages = 0
         return n
 

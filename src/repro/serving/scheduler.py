@@ -66,6 +66,9 @@ class Request:
     admitted_s: Optional[float] = None  # left the queue (TTFT split:
                                         # queue wait vs prefill compute)
     finish_s: Optional[float] = None
+    session_id: Optional[int] = None    # multiturn conversation id — the
+                                        # fleet router's stickiness key
+                                        # (traffic.py stamps it)
 
     def __post_init__(self):
         if self.prompt is not None:
@@ -122,7 +125,8 @@ def requests_from_arrivals(arrivals, *, start_rid: int = 0,
                                    vocab_size=vocab_size, seed=seed, salt=1)
             prompt = np.concatenate([shared, uniq])
         out.append(Request(rid, prompt, ev.max_new_tokens,
-                           arrival_s=ev.time_s, prompt_len=ev.prompt_len))
+                           arrival_s=ev.time_s, prompt_len=ev.prompt_len,
+                           session_id=getattr(ev, "session_id", None)))
     return out
 
 
@@ -222,6 +226,9 @@ class ContinuousBatchingScheduler:
         self._tr = get_tracer()
         if self._tr is not None:
             self._tr.clock = backend.now
+        # empty run state so load signals (queue_depth / in_flight /
+        # outstanding) read sanely before begin() installs a stream
+        self.begin([])
 
     @property
     def stats(self) -> Dict[str, float]:
@@ -503,240 +510,313 @@ class ContinuousBatchingScheduler:
             tr.instant(tr_ev.REQ_FINISH, ts=r.finish_s, track=track)
 
     # -- main loop ---------------------------------------------------------------
+    # serve() used to be one monolithic run-to-completion loop. It is now
+    # a resumable state machine — begin() installs the run state, step()
+    # executes ONE loop iteration (one admission wave or one decode
+    # round), submit() delivers a new arrival mid-run, finish_run() does
+    # the drain-time accounting — so a fleet executor (repro.fleet) can
+    # co-step N replica schedulers in virtual-time order and read live
+    # load signals (queue_depth / in_flight / free_kv_pages) between
+    # steps. serve() composes them and behaves exactly as before.
+
+    def begin(self, requests: List[Request]) -> None:
+        """Install a run: requests sorted by arrival, nothing admitted."""
+        self._pending: Deque[Request] = deque(
+            sorted(requests, key=lambda r: r.arrival_s))
+        self._q: Deque[Request] = deque()
+        self._susp: Deque[Request] = deque()  # preempted, resume first
+        self._active: Dict[int, Request] = {}  # slot -> request
+        self._order: List[int] = []            # admission order of slots
+        self._done: List[Request] = []
+        self._shed: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        """Deliver one arrival into a running serve (fleet routing):
+        keeps `_pending` sorted by arrival time."""
+        p = self._pending
+        if not p or req.arrival_s >= p[-1].arrival_s:
+            p.append(req)
+            return
+        # rare out-of-order delivery: rebuild sorted (streams are small)
+        items = sorted(list(p) + [req], key=lambda r: r.arrival_s)
+        self._pending = deque(items)
+
+    # -- live load signals (router scoring inputs) -------------------------------
+    @property
+    def queue_depth(self) -> int:
+        """Requests accepted but not yet (re-)running."""
+        return len(self._q) + len(self._susp)
+
+    @property
+    def in_flight(self) -> int:
+        """Requests occupying pipeline slots right now."""
+        return len(self._active)
+
+    @property
+    def outstanding(self) -> int:
+        """Everything submitted and not yet finished or shed."""
+        return len(self._pending) + len(self._q) + len(self._susp) \
+            + len(self._active)
+
+    def free_kv_pages(self) -> Optional[int]:
+        """Device-tier KV headroom in pages (None: not page-managed)."""
+        return self.mgr.pool.free_pages() if self.paged else None
+
+    @property
+    def has_live_work(self) -> bool:
+        """Anything past intake: a step() now does real work regardless
+        of the clock."""
+        return bool(self._q or self._susp or self._active)
+
+    @property
+    def next_pending_s(self) -> Optional[float]:
+        """Arrival time of the earliest not-yet-ingested request."""
+        return self._pending[0].arrival_s if self._pending else None
+
+    def now(self) -> float:
+        return self.backend.now()
+
+    # -- one-iteration helpers (instance-state versions of the old closures) -----
+    def _reject(self, r: Request) -> None:
+        r.rejected = True
+        self._shed.append(r)
+        if self._tr is not None:
+            self._tr.instant(tr_ev.REQ_REJECT, track=req_track(r.rid),
+                             args={"prompt_len": r.prompt_len})
+
+    def _intake(self, now: float) -> None:
+        while self._pending and self._pending[0].arrival_s <= now:
+            r = self._pending.popleft()
+            if self._tr is not None:
+                self._tr.instant(tr_ev.REQ_ARRIVE, ts=r.arrival_s,
+                                 track=req_track(r.rid),
+                                 args={"prompt_len": r.prompt_len,
+                                       "max_new": r.max_new_tokens})
+            if self._oversized(r) or len(self._q) >= self.config.max_queue:
+                self._reject(r)
+            else:
+                self._q.append(r)
+
+    def _next_candidate(self, batch):
+        """Head-of-line pick: suspended (resume) before fresh."""
+        n_resident = len(self._active) + len(batch)
+        if self._susp:
+            r = self._susp[0]
+            if not self.mgr.can_resume(r.rid, headroom_pages=n_resident):
+                return None
+            if self._fits_batch is not None and batch \
+                    and not self._fits_batch(batch, r):
+                return None
+            return "suspended"
+        if self._q:
+            r = self._q[0]
+            if not self._admits(r, n_resident):
+                return None
+            if self._fits_batch is not None and batch \
+                    and not self._fits_batch(batch, r):
+                return None
+            return "queue"
+        return None
+
+    def _pop_candidate(self, kind) -> Request:
+        tr = self._tr
+        if kind == "suspended":
+            r = self._susp.popleft()
+            self._try_resume(r)
+            # the re-entry step emits a token; make room for its KV
+            # (best effort — _grow_active preempts if this lost a race)
+            self.mgr.extend(r.rid, r.kv_tokens_now + 1)
+        else:
+            r = self._q.popleft()
+            self._on_admit(r)
+            if tr is not None and r.cached_tokens > 0:
+                tr.instant(tr_ev.REQ_PREFIX_HIT,
+                           track=req_track(r.rid),
+                           args={"cached_tokens": r.cached_tokens})
+        if r.admitted_s is None:
+            r.admitted_s = self.backend.now()
+        if tr is not None:
+            tr.instant(tr_ev.REQ_ADMIT, track=req_track(r.rid),
+                       args={"resumed": kind == "suspended",
+                             "cached_tokens": r.cached_tokens})
+        if self._mixed is not None:
+            # chunked prefill: the uncached span drains chunk-by-chunk
+            # through mixed rounds instead of one monolithic pass
+            fill_left = self._fill.get(r.rid, 0)
+            if kind == "suspended" and fill_left > 0 \
+                    and r.cached_tokens > 0:
+                # spill-resumed mid-prefill: the KV computed so far
+                # came back with the pages; only the un-prefilled
+                # remainder still rides mixed rounds
+                r.cached_tokens = max(r.prefill_tokens - fill_left, 0)
+            else:
+                self._fill[r.rid] = max(r.prefill_tokens
+                                        - r.cached_tokens, 0)
+        return r
+
+    def _finish_req(self, r: Request, slot: int, t: float) -> None:
+        r.done = True
+        r.finish_s = t
+        self._on_finish(r)
+        self._done.append(r)
+        del self._active[slot]
+        self.backend.release(slot)
+        if self._tr is not None:
+            self._trace_lifecycle(r)
+
+    def step(self) -> bool:
+        """One scheduler iteration: intake due arrivals, then either form
+        an admission batch or run one decode round. Returns False when
+        the run is drained (nothing pending, queued, or live)."""
+        pending, queue = self._pending, self._q
+        suspended, active = self._susp, self._active
+        tr = self._tr
+        if not (pending or queue or suspended or active):
+            return False
+        self._intake(self.backend.now())
+
+        if not active:
+            if not queue and not suspended:
+                if not pending:   # intake shed the last arrivals
+                    return False
+                # idle: jump to the next arrival
+                self.backend.advance_to(pending[0].arrival_s)
+                self._intake(self.backend.now())
+                return True
+            batch, slots = [], list(range(self.backend.n_slots))
+            while len(batch) < len(slots):
+                kind = self._next_candidate(batch)
+                if kind is None:
+                    break
+                batch.append(self._pop_candidate(kind))
+            if not batch:
+                # head-of-line blocked with nothing in flight: only
+                # reachable when budget < kv_tokens, which
+                # _oversized() already shed — defensive guard
+                if suspended:
+                    r = suspended.popleft()
+                    self.mgr.release(r.rid)   # don't leak its pages
+                else:
+                    r = queue.popleft()
+                self._reject(r)
+                return True
+            self._order = list(range(len(batch)))
+            if self._mixed is not None:
+                # chunked: register slots only — prompts drain through
+                # mixed rounds below, first tokens emitted when each
+                # request's last chunk lands
+                for slot, r in enumerate(batch):
+                    active[slot] = r
+                    self.backend.attach_slot(slot, r, r.cached_tokens)
+                self._note_occupancy(len(batch))
+                return True
+            first = self.backend.start_batch(batch)
+            t = self.backend.now()
+            for slot, (r, tok) in enumerate(zip(batch, first)):
+                active[slot] = r
+                if r.first_token_s is None:
+                    r.first_token_s = t
+                r.generated += 1
+                if tok is not None:
+                    r.output.append(tok)
+                if r.generated >= r.max_new_tokens:  # max_new == 1
+                    self._finish_req(r, slot, t)
+            self._note_occupancy(len(batch))
+            return True
+
+        # one decode step for every live slot
+        if self.paged:
+            self._grow_active(active, self._order, suspended)
+            self._note_occupancy(len(active))
+            if not active:
+                return True       # everyone preempted (defensive)
+        if self._mixed is not None:
+            # mixed round: prefilling slots consume one chunk each,
+            # decoding slots commit a round of tokens — all riding the
+            # same weight-stream (DESIGN.md §12)
+            work = {}
+            for slot in sorted(active):
+                r = active[slot]
+                rem = self._fill.get(r.rid, 0)
+                if rem > 0:
+                    n = min(self.chunk, rem)
+                    work[slot] = ("prefill", n, n == rem)
+                    self._fill[r.rid] = rem - n
+                else:
+                    work[slot] = ("decode",)
+            emitted = self._mixed(work)
+        else:
+            emitted = self.backend.decode_active(sorted(active))
+        t = self.backend.now()
+        for slot, toks in emitted.items():
+            r = active.get(slot)
+            if r is None:         # preempted out of this step
+                continue
+            # speculative backends emit several committed tokens per
+            # round (DESIGN.md §11); tokens past max_new are dropped
+            # (the backend over-decodes padding, never user output)
+            if not isinstance(toks, (list, tuple)):
+                toks = [toks]
+            for tok in toks:
+                r.generated += 1
+                if r.first_token_s is None:   # chunked: the prompt's
+                    r.first_token_s = t       # last chunk emits here
+                if tok is not None:
+                    r.output.append(tok)
+                if r.generated >= r.max_new_tokens:
+                    self._finish_req(r, slot, t)
+                    break
+        # spec-decode commit boundary (DESIGN.md §12): multi-token
+        # commits with real ids cross page boundaries mid-flight —
+        # donate completed pages now so concurrent same-prefix
+        # requests hit without waiting for this one to finish
+        if self.prefix is not None \
+                and getattr(self.backend, "spec", None) is not None:
+            for r in active.values():
+                if r.output:
+                    self._maybe_insert(r)
+
+        # continuous batching: refill freed slots mid-flight
+        if self.backend.can_join_running and active:
+            self._intake(self.backend.now())
+            free = [s for s in range(self.backend.n_slots)
+                    if s not in active]
+            for slot in free:
+                kind = self._next_candidate(list(active.values()))
+                if kind is None:
+                    break
+                r = self._pop_candidate(kind)
+                active[slot] = r
+                if slot in self._order:
+                    self._order.remove(slot)
+                self._order.append(slot)
+                if self._mixed is not None:
+                    # chunked: the joiner's prompt drains through the
+                    # coming mixed rounds — no monolithic join pass
+                    self.backend.attach_slot(slot, r, r.cached_tokens)
+                    continue
+                tok = self.backend.join(slot, r)
+                if r.first_token_s is None:
+                    r.first_token_s = self.backend.now()
+                r.generated += 1
+                if tok is not None:
+                    r.output.append(tok)
+                if r.generated >= r.max_new_tokens:  # max_new == 1
+                    self._finish_req(r, slot, self.backend.now())
+            self._note_occupancy(len(active))
+        return True
+
     def serve(self, requests: List[Request]) -> List[Request]:
         """Run every request to completion (or rejection); returns them
         all, completion order first, then rejected."""
-        pending: Deque[Request] = deque(
-            sorted(requests, key=lambda r: r.arrival_s))
-        queue: Deque[Request] = deque()
-        suspended: Deque[Request] = deque()   # preempted, resume first
-        active: Dict[int, Request] = {}       # slot -> request
-        order: List[int] = []                 # admission order of slots
-        done: List[Request] = []
-        shed: List[Request] = []
+        self.begin(requests)
+        while self.step():
+            pass
+        return self.finish_run()
 
-        tr = self._tr
-
-        def reject(r: Request):
-            r.rejected = True
-            shed.append(r)
-            if tr is not None:
-                tr.instant(tr_ev.REQ_REJECT, track=req_track(r.rid),
-                           args={"prompt_len": r.prompt_len})
-
-        def intake(now: float):
-            while pending and pending[0].arrival_s <= now:
-                r = pending.popleft()
-                if tr is not None:
-                    tr.instant(tr_ev.REQ_ARRIVE, ts=r.arrival_s,
-                               track=req_track(r.rid),
-                               args={"prompt_len": r.prompt_len,
-                                     "max_new": r.max_new_tokens})
-                if self._oversized(r) or len(queue) >= self.config.max_queue:
-                    reject(r)
-                else:
-                    queue.append(r)
-
-        def next_candidate(batch):
-            """Head-of-line pick: suspended (resume) before fresh."""
-            n_resident = len(active) + len(batch)
-            if suspended:
-                r = suspended[0]
-                if not self.mgr.can_resume(r.rid,
-                                           headroom_pages=n_resident):
-                    return None
-                if self._fits_batch is not None and batch \
-                        and not self._fits_batch(batch, r):
-                    return None
-                return "suspended"
-            if queue:
-                r = queue[0]
-                if not self._admits(r, n_resident):
-                    return None
-                if self._fits_batch is not None and batch \
-                        and not self._fits_batch(batch, r):
-                    return None
-                return "queue"
-            return None
-
-        def pop_candidate(kind) -> Request:
-            if kind == "suspended":
-                r = suspended.popleft()
-                self._try_resume(r)
-                # the re-entry step emits a token; make room for its KV
-                # (best effort — _grow_active preempts if this lost a race)
-                self.mgr.extend(r.rid, r.kv_tokens_now + 1)
-            else:
-                r = queue.popleft()
-                self._on_admit(r)
-                if tr is not None and r.cached_tokens > 0:
-                    tr.instant(tr_ev.REQ_PREFIX_HIT,
-                               track=req_track(r.rid),
-                               args={"cached_tokens": r.cached_tokens})
-            if r.admitted_s is None:
-                r.admitted_s = self.backend.now()
-            if tr is not None:
-                tr.instant(tr_ev.REQ_ADMIT, track=req_track(r.rid),
-                           args={"resumed": kind == "suspended",
-                                 "cached_tokens": r.cached_tokens})
-            if self._mixed is not None:
-                # chunked prefill: the uncached span drains chunk-by-chunk
-                # through mixed rounds instead of one monolithic pass
-                pending = self._fill.get(r.rid, 0)
-                if kind == "suspended" and pending > 0 \
-                        and r.cached_tokens > 0:
-                    # spill-resumed mid-prefill: the KV computed so far
-                    # came back with the pages; only the un-prefilled
-                    # remainder still rides mixed rounds
-                    r.cached_tokens = max(r.prefill_tokens - pending, 0)
-                else:
-                    self._fill[r.rid] = max(r.prefill_tokens
-                                            - r.cached_tokens, 0)
-            return r
-
-        def finish(r: Request, slot: int, t: float):
-            r.done = True
-            r.finish_s = t
-            self._on_finish(r)
-            done.append(r)
-            del active[slot]
-            self.backend.release(slot)
-            if tr is not None:
-                self._trace_lifecycle(r)
-
-        while pending or queue or suspended or active:
-            intake(self.backend.now())
-
-            if not active:
-                if not queue and not suspended:
-                    if not pending:   # intake shed the last arrivals
-                        break
-                    # idle: jump to the next arrival
-                    self.backend.advance_to(pending[0].arrival_s)
-                    intake(self.backend.now())
-                    continue
-                batch, slots = [], list(range(self.backend.n_slots))
-                while len(batch) < len(slots):
-                    kind = next_candidate(batch)
-                    if kind is None:
-                        break
-                    batch.append(pop_candidate(kind))
-                if not batch:
-                    # head-of-line blocked with nothing in flight: only
-                    # reachable when budget < kv_tokens, which
-                    # _oversized() already shed — defensive guard
-                    if suspended:
-                        r = suspended.popleft()
-                        self.mgr.release(r.rid)   # don't leak its pages
-                    else:
-                        r = queue.popleft()
-                    reject(r)
-                    continue
-                order = list(range(len(batch)))
-                if self._mixed is not None:
-                    # chunked: register slots only — prompts drain through
-                    # mixed rounds below, first tokens emitted when each
-                    # request's last chunk lands
-                    for slot, r in enumerate(batch):
-                        active[slot] = r
-                        self.backend.attach_slot(slot, r, r.cached_tokens)
-                    self._note_occupancy(len(batch))
-                    continue
-                first = self.backend.start_batch(batch)
-                t = self.backend.now()
-                for slot, (r, tok) in enumerate(zip(batch, first)):
-                    active[slot] = r
-                    if r.first_token_s is None:
-                        r.first_token_s = t
-                    r.generated += 1
-                    if tok is not None:
-                        r.output.append(tok)
-                    if r.generated >= r.max_new_tokens:  # max_new == 1
-                        finish(r, slot, t)
-                self._note_occupancy(len(batch))
-                continue
-
-            # one decode step for every live slot
-            if self.paged:
-                self._grow_active(active, order, suspended)
-                self._note_occupancy(len(active))
-                if not active:
-                    continue          # everyone preempted (defensive)
-            if self._mixed is not None:
-                # mixed round: prefilling slots consume one chunk each,
-                # decoding slots commit a round of tokens — all riding the
-                # same weight-stream (DESIGN.md §12)
-                work = {}
-                for slot in sorted(active):
-                    r = active[slot]
-                    rem = self._fill.get(r.rid, 0)
-                    if rem > 0:
-                        n = min(self.chunk, rem)
-                        work[slot] = ("prefill", n, n == rem)
-                        self._fill[r.rid] = rem - n
-                    else:
-                        work[slot] = ("decode",)
-                emitted = self._mixed(work)
-            else:
-                emitted = self.backend.decode_active(sorted(active))
-            t = self.backend.now()
-            for slot, toks in emitted.items():
-                r = active.get(slot)
-                if r is None:         # preempted out of this step
-                    continue
-                # speculative backends emit several committed tokens per
-                # round (DESIGN.md §11); tokens past max_new are dropped
-                # (the backend over-decodes padding, never user output)
-                if not isinstance(toks, (list, tuple)):
-                    toks = [toks]
-                for tok in toks:
-                    r.generated += 1
-                    if r.first_token_s is None:   # chunked: the prompt's
-                        r.first_token_s = t       # last chunk emits here
-                    if tok is not None:
-                        r.output.append(tok)
-                    if r.generated >= r.max_new_tokens:
-                        finish(r, slot, t)
-                        break
-            # spec-decode commit boundary (DESIGN.md §12): multi-token
-            # commits with real ids cross page boundaries mid-flight —
-            # donate completed pages now so concurrent same-prefix
-            # requests hit without waiting for this one to finish
-            if self.prefix is not None \
-                    and getattr(self.backend, "spec", None) is not None:
-                for r in active.values():
-                    if r.output:
-                        self._maybe_insert(r)
-
-            # continuous batching: refill freed slots mid-flight
-            if self.backend.can_join_running and active:
-                intake(self.backend.now())
-                free = [s for s in range(self.backend.n_slots)
-                        if s not in active]
-                for slot in free:
-                    kind = next_candidate(list(active.values()))
-                    if kind is None:
-                        break
-                    r = pop_candidate(kind)
-                    active[slot] = r
-                    if slot in order:
-                        order.remove(slot)
-                    order.append(slot)
-                    if self._mixed is not None:
-                        # chunked: the joiner's prompt drains through the
-                        # coming mixed rounds — no monolithic join pass
-                        self.backend.attach_slot(slot, r, r.cached_tokens)
-                        continue
-                    tok = self.backend.join(slot, r)
-                    if r.first_token_s is None:
-                        r.first_token_s = self.backend.now()
-                    r.generated += 1
-                    if tok is not None:
-                        r.output.append(tok)
-                    if r.generated >= r.max_new_tokens:  # max_new == 1
-                        finish(r, slot, self.backend.now())
-                self._note_occupancy(len(active))
-
+    def finish_run(self) -> List[Request]:
+        """Drain-time accounting: fold subsystem counters into the
+        registry and return every request record."""
         if self.paged:
             pool = self.mgr.pool
             self.metrics.set("kv_pages_spilled", pool.spilled_pages)
@@ -757,4 +837,4 @@ class ContinuousBatchingScheduler:
         adapt = getattr(self.backend, "adapt_stats", None)
         if adapt:                     # retier telemetry (DESIGN.md §13)
             self.metrics.update(adapt)
-        return done + shed
+        return self._done + self._shed

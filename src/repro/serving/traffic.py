@@ -46,6 +46,10 @@ class ArrivalEvent:
     max_new_tokens: int
     template_id: Optional[int] = None
     template_len: int = 0
+    session_id: Optional[int] = None   # conversation identity (multiturn):
+                                       # follow-up turns carry the same id,
+                                       # so routers can pin a session to a
+                                       # replica without inspecting tokens
 
 
 _STREAM_CHUNK = 4096
@@ -201,7 +205,8 @@ def multiturn(n_requests: int, *, turns: int = 3,
                 break
             mn = _sample_lengths(rng, 1, plen, max_new_tokens)[1][0]
             out.append(ArrivalEvent(t, plen, max(int(mn), 1),
-                                    template_id=s, template_len=plen))
+                                    template_id=s, template_len=plen,
+                                    session_id=s))
             plen += int(mn) + user_len     # next turn re-sends everything
             t += think_s * (0.5 + rng.random())
     return sorted(out, key=lambda e: e.time_s)

@@ -1,0 +1,463 @@
+"""Fleet layer (DESIGN.md §16): router determinism, elastic drain/join,
+exact metrics aggregation, the prefix-digest == radix-tree contract, the
+resumable scheduler surface the fleet co-steps on, and the per-replica
+trace namespacing the Chrome exporter renders as process groups."""
+import json
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_config
+from repro.core.cost_model import CostEnv, Workload
+from repro.core.profiles import env_E3, mbps
+from repro.fleet import (Fleet, FleetRouter, POLICIES, Replica,
+                         RouterConfig)
+from repro.kvcache import BlockTable, PagedKVConfig, PagePool
+from repro.obs.exporters import to_chrome, validate_chrome
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import EVT_TRACK, Tracer, set_tracer
+from repro.prefixcache import PrefixDigest, RadixPrefixCache
+from repro.serving import (ContinuousBatchingScheduler, SchedulerConfig,
+                           SimBackend, make_arrivals,
+                           requests_from_arrivals)
+from repro.serving.metrics import SCHEMA_VERSION, percentile
+
+
+# ----------------------------------------------------------------------------
+# rig: sim replicas over the E3 fleet (the serving tests' standard backend)
+# ----------------------------------------------------------------------------
+def _backend(slots=2, prompt=64):
+    cfg = get_config("llama2-13b")
+    w = Workload(cfg, mb=1, ctx=prompt, n_micro=slots)
+    return SimBackend(CostEnv(env_E3(), mbps(200), w), n_slots=slots,
+                      prompt_tokens=prompt)
+
+
+def _replica(i, slots=2, prefix=False, page=16):
+    scfg = SchedulerConfig(kv_policy="paged", page_size=page,
+                           prefix_cache=True) if prefix \
+        else SchedulerConfig()
+    return Replica(i, _backend(slots), scfg)
+
+
+def _fleet(n, policy, *, seed=0, slots=2, prefix=None):
+    if prefix is None:
+        prefix = policy == "prefix"
+    reps = [_replica(i, slots=slots, prefix=prefix) for i in range(n)]
+    return Fleet(reps, config=RouterConfig(policy=policy, seed=seed))
+
+
+def _reqs(pattern, n, *, seed=0, **kw):
+    return requests_from_arrivals(
+        make_arrivals(pattern, n, seed=seed, **kw), vocab_size=4096)
+
+
+def _partition(result):
+    """name -> sorted rids, only replicas that served anything."""
+    return {name: sorted(r.rid for r in recs)
+            for name, recs in result.per_replica.items() if recs}
+
+
+# ----------------------------------------------------------------------------
+# routing: determinism, stickiness, spillover, error paths
+# ----------------------------------------------------------------------------
+@settings(max_examples=5, deadline=None)
+@given(st.sampled_from(POLICIES), st.integers(min_value=0, max_value=999),
+       st.integers(min_value=6, max_value=12))
+def test_placement_deterministic_property(policy, seed, n):
+    """Same stream + same fleet config => identical placement AND
+    identical per-request timings, for every policy."""
+    outs = []
+    for _ in range(2):
+        fleet = _fleet(3, policy, seed=seed)
+        res = fleet.run(_reqs("shared_prefix", n, seed=seed, prompt_len=64,
+                              prefix_len=48, n_templates=2,
+                              max_new_tokens=4, rate_rps=2.0))
+        outs.append((_partition(res),
+                     {r.rid: (r.ttft_s, r.finish_s) for r in res.requests},
+                     dict(fleet.router.stats)))
+    assert outs[0] == outs[1]
+
+
+def test_scored_policies_balance_under_load():
+    """Load terms actually spread traffic: a scored 3-replica fleet under
+    poisson load leaves no replica idle and no replica owning the stream."""
+    fleet = _fleet(3, "sticky")
+    res = fleet.run(_reqs("poisson", 18, prompt_len=64,
+                          max_new_tokens=16, rate_rps=2.0))
+    counts = {name: len(recs) for name, recs in res.per_replica.items()}
+    assert sum(counts.values()) == 18
+    assert all(c > 0 for c in counts.values())
+    assert max(counts.values()) < 18
+
+
+def test_sticky_sessions_never_split():
+    """Multiturn sessions route to exactly one replica each under the
+    sticky policy (hysteresis holds at moderate load), and every turn
+    carries the session_id the router keyed on."""
+    reqs = _reqs("multiturn", 9, prompt_len=32, max_new_tokens=4,
+                 turns=3, rate_rps=0.3)
+    assert all(r.session_id is not None for r in reqs)
+    assert len({r.session_id for r in reqs}) == 3
+    fleet = _fleet(2, "sticky")
+    res = fleet.run(reqs)
+    homes = {}
+    for name, recs in res.per_replica.items():
+        for r in recs:
+            homes.setdefault(r.session_id, set()).add(name)
+    assert all(len(v) == 1 for v in homes.values())
+    assert fleet.router.stats["sticky_kept"] > 0
+    assert fleet.router.stats["sticky_moved"] == 0
+
+
+def test_prefix_policy_reuses_template_homes():
+    """Shared-prefix traffic under the prefix policy: requests of the
+    same template co-locate (optimistic digest makes even the second
+    request stick before the first finishes), driving radix hits."""
+    reqs = _reqs("shared_prefix", 12, prompt_len=96, prefix_len=64,
+                 n_templates=2, max_new_tokens=4, rate_rps=1.0)
+    fleet = _fleet(3, "prefix")
+    res = fleet.run(reqs)
+    assert fleet.router.stats["prefix_matched"] > 0
+    rep = res.report(pattern="shared_prefix", backend="sim3")
+    assert rep.aggregate.prefix_hit_rate > 0
+
+
+def test_router_error_paths():
+    with pytest.raises(ValueError):
+        RouterConfig(policy="bogus")
+    with pytest.raises(ValueError):
+        Fleet([_replica(0), Replica(1, _backend(), name="r0")])
+    fleet = _fleet(2, "roundrobin")
+    with pytest.raises(KeyError):
+        fleet.drain("nope")
+    with pytest.raises(ValueError):
+        fleet.join(_replica(0), at_s=1.0)       # name r0 already present
+    # all replicas draining -> route() sheds instead of crashing
+    fleet.drain("r0")
+    fleet.drain("r1")
+    res = fleet.run(_reqs("poisson", 3, prompt_len=32, max_new_tokens=2,
+                          rate_rps=1.0))
+    assert len(res.shed) == 3
+    assert all(r.rejected for r in res.shed)
+    assert fleet.router.stats["no_replica"] == 3
+
+
+# ----------------------------------------------------------------------------
+# elastic membership: drain / join
+# ----------------------------------------------------------------------------
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=99),
+       st.integers(min_value=9, max_value=15),
+       st.floats(min_value=0.3, max_value=0.7))
+def test_drain_property(seed, n, frac):
+    """drain(r) at any mid-stream time => r takes ZERO admits at or after
+    the drain, every request already routed to it finishes, and the
+    replica retires once its last request drains."""
+    reqs = _reqs("poisson", n, seed=seed, prompt_len=64, max_new_tokens=4,
+                 rate_rps=2.0)
+    drain_at = sorted(r.arrival_s for r in reqs)[int(frac * n)]
+    fleet = _fleet(3, "roundrobin", seed=seed)
+    fleet.drain("r2", at_s=drain_at)
+    res = fleet.run(reqs)
+    victim = res.per_replica["r2"]
+    assert all(r.arrival_s < drain_at for r in victim)   # no late admits
+    assert all(r.done and not r.rejected for r in victim)
+    rep = fleet.replica("r2")
+    assert not rep.live and rep.draining
+    assert rep.retired_s is not None
+    done = [r for r in res.requests if r.done]
+    assert len(done) == n and not res.shed               # zero dropped
+
+
+def test_join_receives_traffic_within_k_admits():
+    """join(r) mid-stream: the empty newcomer's load advantage pulls
+    traffic onto it within K admits of the join."""
+    reqs = _reqs("poisson", 20, prompt_len=64, max_new_tokens=16,
+                 rate_rps=2.0)
+    t_join = sorted(r.arrival_s for r in reqs)[10]
+    fleet = _fleet(2, "sticky")
+    fleet.join(_replica(2), at_s=t_join)
+    res = fleet.run(reqs)
+    joiner = fleet.replica("r2")
+    assert joiner.live and joiner.joined_s == t_join
+    assert joiner.routed >= 1
+    first = min(r.arrival_s for r in res.per_replica["r2"])
+    k = sum(1 for r in reqs if t_join <= r.arrival_s < first)
+    assert k <= 4                       # traffic within K=4 admits
+    assert len([r for r in res.requests if r.done]) == 20
+
+
+def test_drain_then_join_membership_in_report():
+    reqs = _reqs("poisson", 12, prompt_len=64, max_new_tokens=16,
+                 rate_rps=2.0)
+    mid = sorted(r.arrival_s for r in reqs)[6]
+    fleet = _fleet(2, "sticky")
+    fleet.drain("r1", at_s=mid)
+    fleet.join(_replica(2), at_s=mid)
+    res = fleet.run(reqs)
+    rep = res.report(pattern="poisson", backend="sim")
+    assert rep.n_replicas == 3          # retired members still reported
+    m = rep.membership
+    assert m["r1"]["retired_s"] is not None and not m["r1"]["live"]
+    assert m["r2"]["joined_s"] == mid and m["r2"]["routed"] >= 1
+    assert sum(v["routed"] for v in m.values()) == 12
+    # a drained replica's sessions/digest leave the router
+    assert "r1" not in fleet.router._optimistic
+    assert "r1" not in fleet.router._home.values()
+
+
+# ----------------------------------------------------------------------------
+# exact aggregation: MetricsRegistry.merge + FleetReport
+# ----------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.floats(min_value=0.0, max_value=1e3), min_size=1,
+                max_size=40),
+       st.lists(st.floats(min_value=0.0, max_value=1e3), min_size=0,
+                max_size=40))
+def test_merge_percentiles_equal_pooled_property(xs, ys):
+    """merge() concatenates raw histogram samples, so merged percentiles
+    equal percentiles over the pooled observations EXACTLY (nearest-rank,
+    same convention as serving.metrics.percentile); counters sum and
+    gauges take the max of value and peak."""
+    a, b = MetricsRegistry(), MetricsRegistry()
+    for v in xs:
+        a.observe("lat", v)
+        a.inc("tokens", v)
+        a.set_gauge("peak_active", v)
+    for v in ys:
+        b.observe("lat", v)
+        b.inc("tokens", v)
+        b.set_gauge("peak_active", v)
+    merged = MetricsRegistry().merge(a).merge(b)
+    pooled = xs + ys
+    for p in (0, 50, 90, 99, 100):
+        got = merged.histogram("lat").percentile(p)
+        want = percentile(pooled, p)
+        assert got == want or (math.isnan(got) and math.isnan(want))
+    assert merged.counter("tokens").value == pytest.approx(sum(pooled))
+    assert merged.gauge("peak_active").peak == max(pooled)
+
+
+def test_merge_returns_self_and_chains():
+    a = MetricsRegistry()
+    a.observe("h", 1.0)
+    b = MetricsRegistry()
+    b.observe("h", 2.0)
+    out = MetricsRegistry().merge(a).merge(b)
+    assert out.histogram("h").values == [1.0, 2.0]
+
+
+def test_fleet_report_aggregate_is_exact():
+    """The aggregate ServingReport comes from the POOLED request records
+    (not averaged replica percentiles): counts add up, percentiles equal
+    nearest-rank over the union, and the JSON round-trips with the
+    current schema."""
+    fleet = _fleet(3, "prefix")
+    res = fleet.run(_reqs("shared_prefix", 12, prompt_len=64,
+                          prefix_len=48, n_templates=2, max_new_tokens=4,
+                          rate_rps=2.0))
+    rep = res.report(pattern="shared_prefix", backend="sim3")
+    assert rep.schema_version == SCHEMA_VERSION
+    assert rep.aggregate.n_requests == 12
+    assert sum(r.n_requests for r in rep.replicas.values()) == 12
+    ttfts = [r.ttft_s for r in res.requests if r.ttft_s is not None]
+    assert rep.aggregate.ttft_p50_s == pytest.approx(percentile(ttfts, 50))
+    d = json.loads(rep.to_json())
+    assert d["schema_version"] == SCHEMA_VERSION
+    assert set(d["replicas"]) == {"r0", "r1", "r2"}
+    assert d["router"]["routed"] == 12
+
+
+# ----------------------------------------------------------------------------
+# prefix digest: the router-side radix summary is exact
+# ----------------------------------------------------------------------------
+def _pool(ps=4, dev=32, host=8):
+    return PagePool(PagedKVConfig(page_size=ps, device_pages=dev,
+                                  host_pages=host, page_bytes=8.0))
+
+
+def _insert(pool, tree, toks):
+    t = BlockTable(pool.page_size)
+    pool.extend_table(t, len(toks))
+    tree.insert(toks, t.pages)
+
+
+def test_digest_matches_tree_match():
+    pool = _pool()
+    tree = RadixPrefixCache(pool)
+    base = list(range(100, 116))                 # 16 toks = 4 pages
+    _insert(pool, tree, base)
+    probes = [base, base[:10], base[:7] + [999], [1, 2, 3],
+              base + [7, 8, 9, 10, 11]]
+    d = tree.digest()
+    for probe in probes:
+        assert d.match_tokens(probe) == tree.match(probe)[1]
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=50), min_size=4,
+                max_size=32),
+       st.integers(min_value=0, max_value=32),
+       st.integers(min_value=0, max_value=50))
+def test_digest_matches_tree_property(base, cut, tail_tok):
+    """Any inserted chain, any probe that diverges anywhere: the chain-
+    hash digest and the radix tree agree on matched token count."""
+    pool = _pool()
+    tree = RadixPrefixCache(pool)
+    _insert(pool, tree, base)
+    probe = base[:min(cut, len(base))] + [tail_tok] * 3
+    d = tree.digest()
+    assert d.match_tokens(probe) == tree.match(probe)[1]
+    assert d.match_tokens(base) == tree.match(base)[1]
+
+
+def test_digest_tracks_eviction():
+    """Dropping tree nodes shrinks the digest: no stale router affinity
+    toward pages the cache no longer holds."""
+    pool = _pool()
+    tree = RadixPrefixCache(pool)
+    _insert(pool, tree, list(range(16)))
+    d0 = tree.digest()
+    assert len(d0) == tree.n_pages > 0
+    tree.release_all()
+    assert len(tree.digest()) == 0
+    # the old snapshot still matches (it is a copy), the fresh one doesn't
+    assert d0.match_tokens(list(range(16))) == 16
+    assert tree.digest().match_tokens(list(range(16))) == 0
+
+
+def test_digest_standalone_optimistic():
+    """PrefixDigest without a tree (the router's optimistic digests):
+    add_prompt with max_pages caps exactly like radix admission."""
+    d = PrefixDigest(page_size=4)
+    toks = list(range(12))
+    d.add_prompt(toks, max_pages=2)              # 8 of 12 tokens
+    assert d.match_tokens(toks) == 8
+    assert d.match_tokens(toks[:4]) == 4
+    assert d.match_tokens([99] + toks) == 0
+
+
+# ----------------------------------------------------------------------------
+# resumable scheduler surface (what the fleet co-steps on)
+# ----------------------------------------------------------------------------
+def test_stepwise_scheduler_equals_serve():
+    """begin/step/finish_run produces bit-identical results to the
+    monolithic serve() loop on a fresh backend."""
+    kw = dict(prompt_len=64, max_new_tokens=4, rate_rps=2.0)
+    a = ContinuousBatchingScheduler(_backend(), SchedulerConfig())
+    done_a = a.serve(_reqs("poisson", 8, **kw))
+    b = ContinuousBatchingScheduler(_backend(), SchedulerConfig())
+    b.begin(_reqs("poisson", 8, **kw))
+    steps = 0
+    while b.step():
+        steps += 1
+        assert steps < 10_000           # the loop terminates
+    done_b = b.finish_run()
+
+    def key(rs):
+        return sorted((r.rid, r.ttft_s, r.finish_s) for r in rs)
+    assert key(done_a) == key(done_b)
+
+
+def test_submit_mid_run_and_load_signals():
+    sched = ContinuousBatchingScheduler(_backend(slots=2),
+                                        SchedulerConfig())
+    reqs = _reqs("poisson", 8, prompt_len=64, max_new_tokens=4,
+                 rate_rps=4.0)
+    sched.begin(reqs[:4])
+    assert sched.outstanding == 4 and sched.next_pending_s is not None
+    for _ in range(3):
+        sched.step()
+    for r in reqs[4:]:                  # late submissions keep time order
+        sched.submit(r)
+    while sched.step():
+        pass
+    assert not sched.has_live_work and sched.next_pending_s is None
+    assert sched.queue_depth == 0 and sched.in_flight == 0
+    done = sched.finish_run()
+    assert len(done) == 8 and all(r.done for r in done)
+
+
+# ----------------------------------------------------------------------------
+# observability: per-replica trace namespace -> Perfetto process groups
+# ----------------------------------------------------------------------------
+def test_tracer_namespace_rewrites_tracks():
+    tr = Tracer(clock=lambda: 0.0, namespace="r2")
+    tr.instant("x")                               # default track "sched"
+    tr.complete("y", ts=0.0, dur=1.0, track="req:5")
+    assert [e[EVT_TRACK] for e in tr.events()] == ["r2:sched", "r2:req:5"]
+    tr.namespace = None                           # the fleet restores it
+    tr.instant("z", track="router")
+    assert tr.events()[-1][EVT_TRACK] == "router"
+
+
+def test_chrome_export_groups_replicas_into_processes():
+    tr = Tracer(clock=lambda: 0.0)
+    tr.instant("fleet.route", track="router")
+    for ns in ("r0", "r1"):
+        tr.namespace = ns
+        tr.instant("sched.admit")
+        tr.complete("req.decode", ts=0.0, dur=0.5, track="req:3")
+    tr.namespace = None
+    doc = to_chrome(tr)
+    assert validate_chrome(doc) == []
+    names = {e["args"]["name"] for e in doc["traceEvents"]
+             if e.get("name") == "process_name"}
+    assert {"replica r0", "replica r1", "router"} <= names
+    pid_of = {e["args"]["name"]: e["pid"] for e in doc["traceEvents"]
+              if e.get("name") == "thread_name"}
+    assert pid_of["r0:sched"] == pid_of["r0:req:3"]       # same process
+    assert pid_of["r0:sched"] != pid_of["r1:sched"]       # per replica
+    assert pid_of["router"] not in (pid_of["r0:sched"], pid_of["r1:sched"])
+
+
+def test_fleet_run_emits_namespaced_trace():
+    tr = Tracer(clock=lambda: 0.0)
+    set_tracer(tr)
+    try:
+        fleet = _fleet(2, "sticky")
+        fleet.drain("r1", at_s=2.0)
+        fleet.run(_reqs("poisson", 6, prompt_len=32, max_new_tokens=2,
+                        rate_rps=2.0))
+    finally:
+        set_tracer(None)
+    tracks = {e[EVT_TRACK] for e in tr.events()}
+    names = {e[0] for e in tr.events()}
+    assert any(t.startswith("r0:") for t in tracks)
+    assert "router" in tracks
+    assert {"fleet.route", "fleet.drain", "fleet.drained"} <= names
+    assert tr.namespace is None                   # restored after run
+    assert validate_chrome(to_chrome(tr)) == []
+
+
+# ----------------------------------------------------------------------------
+# session ids: traffic -> Request -> router key
+# ----------------------------------------------------------------------------
+def test_multiturn_session_ids_stable():
+    evs = make_arrivals("multiturn", 12, seed=3, prompt_len=32,
+                        max_new_tokens=4, turns=3, rate_rps=0.5)
+    assert all(ev.session_id is not None for ev in evs)
+    assert len({ev.session_id for ev in evs}) == 4    # ceil(12/3) sessions
+    reqs = requests_from_arrivals(evs, vocab_size=4096)
+    assert [r.session_id for r in reqs] == [ev.session_id for ev in evs]
+    # non-session patterns stay unkeyed
+    assert all(r.session_id is None
+               for r in _reqs("poisson", 4, prompt_len=16,
+                              max_new_tokens=2, rate_rps=1.0))
+
+
+def test_router_scores_are_pure():
+    """score() has no side effects: calling it repeatedly (or in any
+    order) never changes placement — the determinism property's local
+    form."""
+    router = FleetRouter(RouterConfig(policy="prefix"))
+    reps = [_replica(i, prefix=True) for i in range(3)]
+    req = _reqs("shared_prefix", 1, prompt_len=64, prefix_len=48,
+                n_templates=1, max_new_tokens=2, rate_rps=1.0)[0]
+    before = [router.score(req, r) for r in reps]
+    for _ in range(3):
+        assert [router.score(req, r) for r in reps] == before
+    pick = router.route(req, reps)
+    assert pick.name == "r0"            # equal scores -> lowest index
