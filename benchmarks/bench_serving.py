@@ -148,6 +148,12 @@ def run_pattern(args, pattern: str, trace_out: str = None) -> dict:
         vocab = backend.cfg.vocab_size if args.backend == "engine" else 32768
         reqs = requests_from_arrivals(arrivals, vocab_size=vocab,
                                       seed=args.seed)
+        def mk_slo():
+            if not args.slo_report:
+                return None
+            from repro.obs.slo import SLOEngine
+            return SLOEngine()
+
         if args.replicas > 1:
             # fleet mode (DESIGN.md §16): N replica pipelines behind the
             # router; the report's `aggregate` carries the pooled metrics
@@ -155,6 +161,10 @@ def run_pattern(args, pattern: str, trace_out: str = None) -> dict:
             reps = [Replica(0, backend, scfg)]
             reps += [Replica(i, build_sim_backend(args, slots), scfg)
                      for i in range(1, args.replicas)]
+            for rep in reps:
+                slo = mk_slo()
+                if slo is not None:
+                    rep.sched.attach_slo(slo)
             fleet = Fleet(reps, config=RouterConfig(policy=args.router,
                                                     seed=args.seed))
             result = fleet.run(reqs)
@@ -163,9 +173,14 @@ def run_pattern(args, pattern: str, trace_out: str = None) -> dict:
                 backend=f"{args.backend}/fleet{args.replicas}").to_dict()
         else:
             sched = ContinuousBatchingScheduler(backend, scfg)
+            slo = mk_slo()
+            if slo is not None:
+                sched.attach_slo(slo)
             served = sched.serve(reqs)
             out = summarize(served, pattern=pattern, backend=args.backend,
                             stats=sched.stats).to_dict()
+            if slo is not None:
+                out["slo"] = slo.snapshot(sched.now())
     finally:
         if tracer is not None:
             set_tracer(None)
@@ -236,6 +251,11 @@ def main(argv=None) -> int:
                          "one file per pattern")
     ap.add_argument("--trace-capacity", type=int, default=1 << 16,
                     help="flight-recorder ring size (oldest events drop)")
+    ap.add_argument("--slo-report", action="store_true",
+                    help="attach the online SLO engine (DESIGN.md §17) "
+                         "and embed its burn-rate/breach snapshot in the "
+                         "report (fleet mode: per-replica under "
+                         "membership)")
     ap.add_argument("--out", default=None, help="also write JSON here")
     args = ap.parse_args(argv)
     if args.pattern == "trace" and not args.arrival_trace:

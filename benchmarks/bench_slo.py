@@ -1,0 +1,325 @@
+"""Online SLO engine benchmark: sketch accuracy, burn-rate shedding,
+critical-path conservation, and observability overhead
+(EXPERIMENTS.md §SLO, DESIGN.md §17).
+
+Four exit-code-enforced properties:
+
+  sketch        reservoir percentiles over pooled fleet samples (4
+                bounded registries merged) stay within the documented
+                rank-error bound eps = 2/sqrt(capacity) of the exact
+                nearest-rank answer.
+  overload      a 2-replica fleet with one degraded replica (10x slower
+                compute/memory/load) under tight TPOT targets: the
+                degraded replica fires a burn-rate breach (slo.breach
+                tracer event), its health drops below 1, and
+                health-weighted routing sheds load off it — it receives
+                strictly fewer requests than the same run scored with
+                w_health = 0.
+  conservation  critical-path buckets of every traced pipeline round sum
+                to the measured round time within 1% (memory-constrained
+                70B run, so the weight-stall bucket is actually
+                exercised).
+  overhead      tracer + bounded histograms + SLO engine all on moves
+                the sim's *virtual* ms/token by < 5% vs everything off
+                (the bench_obs convention: observability must not
+                perturb the discrete-event clock).
+
+  python benchmarks/bench_slo.py
+  python benchmarks/bench_slo.py --scenario overload
+  python benchmarks/bench_slo.py --out benchmarks/baselines/slo_sim.json
+"""
+from __future__ import annotations
+
+import argparse
+import bisect
+import dataclasses
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+OVERHEAD_TOL = 0.05              # 5% virtual ms/token budget
+CONSERVATION_TOL = 0.01          # buckets must sum to round time +-1%
+
+
+# ----------------------------------------------------------------------------
+# scenario: sketch accuracy on pooled fleet samples
+# ----------------------------------------------------------------------------
+def run_sketch(args) -> dict:
+    import numpy as np
+
+    from repro.obs.metrics import MetricsRegistry
+    from repro.obs.sketch import reservoir_rank_error
+
+    rng = np.random.default_rng(args.seed)
+    cap = args.sketch_capacity
+    pooled: list = []
+    merged = MetricsRegistry(hist_capacity=cap, seed=99)
+    for i in range(4):
+        # each replica sees a different latency regime, so the pooled
+        # population is multi-modal — the case naive per-replica
+        # percentile averaging gets wrong and reservoir merging must not
+        m = MetricsRegistry(hist_capacity=cap, seed=i)
+        vals = rng.lognormal(mean=-1.0 + 0.5 * i, sigma=0.6,
+                             size=args.sketch_samples)
+        for v in vals:
+            m.observe("lat", float(v))
+        pooled.extend(vals.tolist())
+        merged.merge(m)
+    xs = sorted(pooled)
+    n = len(xs)
+    eps = reservoir_rank_error(cap)
+    out = {"scenario": "sketch", "capacity": cap, "pooled_samples": n,
+           "eps_bound": eps, "percentiles": {}}
+    worst = 0.0
+    for p in (50, 90, 99):
+        est = merged.histogram("lat").percentile(p)
+        rank_err = abs(bisect.bisect_left(xs, est) / n - p / 100.0)
+        out["percentiles"][f"p{p}"] = {"estimate": est,
+                                       "rank_error": rank_err}
+        worst = max(worst, rank_err)
+    out["worst_rank_error"] = worst
+    out["ok"] = worst <= eps
+    return out
+
+
+# ----------------------------------------------------------------------------
+# scenario: induced overload -> breach -> health-weighted shedding
+# ----------------------------------------------------------------------------
+def _mk_backend(args, slow: bool):
+    from repro.configs.registry import get_config
+    from repro.core.cost_model import CostEnv, Workload
+    from repro.core.profiles import env_E3, mbps
+    from repro.serving import SimBackend
+
+    cfg = get_config(args.arch)
+    w = Workload(cfg, mb=1, ctx=args.prompt_len, n_micro=args.slots)
+    devs = env_E3()
+    if slow:
+        devs = [dataclasses.replace(d, flops=d.flops / 10.0,
+                                    mem_bw=d.mem_bw / 10.0,
+                                    load_bw=d.load_bw / 10.0)
+                for d in devs]
+    env = CostEnv(devs, mbps(20.0 if slow else args.bw_mbps), w)
+    return SimBackend(env, n_slots=args.slots,
+                      prompt_tokens=args.prompt_len)
+
+
+def _overload_targets():
+    from repro.obs.slo import SLOTarget
+    # tight TPOT objective with short windows so a benchmark-length run
+    # exercises breach promptly: the degraded replica's ~4 s/token blows
+    # the 1 s threshold on every finish (burn 2.0 >= threshold 1.5)
+    return [SLOTarget("tpot_p50", "tpot", threshold_s=1.0, target=0.5,
+                      fast_window_s=10.0, slow_window_s=30.0,
+                      burn_threshold=1.5)]
+
+
+def _run_overload_once(args, w_health: float) -> dict:
+    from repro.fleet import Fleet, Replica, RouterConfig
+    from repro.obs.slo import SLOEngine
+    from repro.obs.trace import tracing
+    from repro.serving import (SchedulerConfig, cli_arrivals,
+                               requests_from_arrivals)
+
+    reps = [Replica(0, _mk_backend(args, slow=False), SchedulerConfig()),
+            Replica(1, _mk_backend(args, slow=True), SchedulerConfig())]
+    for r in reps:
+        r.sched.attach_slo(SLOEngine(_overload_targets()))
+    fleet = Fleet(reps, config=RouterConfig(policy="prefix",
+                                            seed=args.seed,
+                                            w_health=w_health))
+    arrivals = cli_arrivals("poisson", args.overload_requests,
+                            seed=args.seed, prompt_len=args.prompt_len,
+                            max_new_tokens=4, rate_rps=2.0)
+    with tracing(clock=reps[0].now) as tr:
+        res = fleet.run(requests_from_arrivals(arrivals, seed=args.seed))
+        breach_ts = [e[2] for e in tr.events() if e[0] == "slo.breach"]
+    slow_rep = res.replicas[1]
+    snap = slow_rep.sched.slo.snapshot(slow_rep.now())
+    fast_snap = res.replicas[0].sched.slo.snapshot(res.replicas[0].now())
+    return {"w_health": w_health,
+            "routed": {r.name: r.routed for r in res.replicas},
+            "slow_breaches": snap["targets"]["tpot_p50"]["breaches"],
+            "fast_breaches": fast_snap["targets"]["tpot_p50"]["breaches"],
+            "slow_health": slow_rep.health(),
+            "first_breach_s": min(breach_ts) if breach_ts else None}
+
+
+def run_overload(args) -> dict:
+    shed = _run_overload_once(args, w_health=2.0)
+    ctrl = _run_overload_once(args, w_health=0.0)
+    slow_on = shed["routed"]["r1"]
+    slow_off = ctrl["routed"]["r1"]
+    return {"scenario": "overload", "health_on": shed, "health_off": ctrl,
+            "slow_routed_health_on": slow_on,
+            "slow_routed_health_off": slow_off,
+            "ok": (shed["slow_breaches"] >= 1
+                   and shed["first_breach_s"] is not None
+                   and shed["slow_health"] < 1.0
+                   and slow_on < slow_off)}
+
+
+# ----------------------------------------------------------------------------
+# scenario: critical-path conservation on a traced stall-heavy run
+# ----------------------------------------------------------------------------
+def run_conservation(args) -> dict:
+    from repro.configs.registry import get_config
+    from repro.core.cost_model import CostEnv, Workload
+    from repro.core.profiles import env_lowmem, mbps
+    from repro.obs import critical_path as cp
+    from repro.obs.trace import tracing
+    from repro.serving import (ContinuousBatchingScheduler,
+                               SchedulerConfig, SimBackend, cli_arrivals,
+                               requests_from_arrivals)
+
+    # memory-constrained 70B: weights stream every round, so the
+    # weight-stall bucket is nonzero and conservation is tested against
+    # a timeline with every bucket class present
+    cfg = get_config("llama3.3-70b")
+    w = Workload(cfg, mb=1, ctx=512, n_micro=2)
+    env = CostEnv(env_lowmem(1), mbps(args.bw_mbps), w)
+    backend = SimBackend(env, n_slots=2, prompt_tokens=512)
+    arrivals = cli_arrivals("bursty", 4, seed=args.seed, prompt_len=512,
+                            max_new_tokens=4, gap_s=5.0, burst_size=2)
+    with tracing(capacity=1 << 18) as tr:
+        sched = ContinuousBatchingScheduler(backend, SchedulerConfig())
+        sched.serve(requests_from_arrivals(arrivals, seed=args.seed))
+        rep = cp.analyze(tr.events())
+    err = rep.conservation_error()
+    fr = rep.fractions
+    return {"scenario": "conservation", "n_rounds": len(rep.rounds),
+            "round_time_s": rep.round_time_s,
+            "fractions": fr, "bottlenecks": rep.bottlenecks,
+            "conservation_error": err,
+            "ok": (len(rep.rounds) > 0
+                   and err < CONSERVATION_TOL
+                   and fr.get("weight_stall", 0.0) > 0.0
+                   and fr.get("compute", 0.0) > 0.0)}
+
+
+# ----------------------------------------------------------------------------
+# scenario: observability overhead on the virtual clock
+# ----------------------------------------------------------------------------
+def _serve_ms_per_token(args, observed: bool) -> float:
+    from repro.obs.slo import SLOEngine
+    from repro.obs.trace import tracing
+    from repro.serving import (ContinuousBatchingScheduler,
+                               SchedulerConfig, cli_arrivals,
+                               requests_from_arrivals, summarize)
+
+    backend = _mk_backend(args, slow=False)
+    arrivals = cli_arrivals("bursty", 8, seed=args.seed,
+                            prompt_len=args.prompt_len, max_new_tokens=16,
+                            gap_s=4.0, burst_size=args.slots)
+    reqs = requests_from_arrivals(arrivals, seed=args.seed)
+    scfg = SchedulerConfig(hist_capacity=1024) if observed \
+        else SchedulerConfig()
+    if observed:
+        with tracing(capacity=1 << 16):
+            sched = ContinuousBatchingScheduler(backend, scfg)
+            sched.attach_slo(SLOEngine())      # default (loose) targets
+            done = sched.serve(reqs)
+    else:
+        sched = ContinuousBatchingScheduler(backend, scfg)
+        done = sched.serve(reqs)
+    return summarize(done, pattern="bursty", backend="sim",
+                     stats=sched.stats).ms_per_token
+
+
+def run_overhead(args) -> dict:
+    base = _serve_ms_per_token(args, observed=False)
+    full = _serve_ms_per_token(args, observed=True)
+    rel = abs(full - base) / max(base, 1e-12)
+    return {"scenario": "overhead", "ms_per_token_off": base,
+            "ms_per_token_on": full, "rel_delta": rel,
+            "budget": OVERHEAD_TOL, "ok": rel < OVERHEAD_TOL}
+
+
+# ----------------------------------------------------------------------------
+SCENARIOS = {"sketch": run_sketch, "overload": run_overload,
+             "conservation": run_conservation, "overhead": run_overhead}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scenario", default="all",
+                    choices=tuple(SCENARIOS) + ("all",))
+    ap.add_argument("--arch", default="llama2-13b")
+    ap.add_argument("--bw-mbps", type=float, default=200.0)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--overload-requests", type=int, default=120)
+    ap.add_argument("--sketch-capacity", type=int, default=1024)
+    ap.add_argument("--sketch-samples", type=int, default=20000,
+                    help="per-replica sample count (4 replicas pooled)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="also write JSON here")
+    args = ap.parse_args(argv)
+
+    names = list(SCENARIOS) if args.scenario == "all" else [args.scenario]
+    results = []
+    rc = 0
+    for name in names:
+        r = SCENARIOS[name](args)
+        results.append(r)
+        if name == "sketch":
+            print(f"# sketch: worst rank error "
+                  f"{r['worst_rank_error']:.4f} vs bound "
+                  f"{r['eps_bound']:.4f} over {r['pooled_samples']} "
+                  f"pooled samples", file=sys.stderr)
+        elif name == "overload":
+            print(f"# overload: slow replica breached "
+                  f"{r['health_on']['slow_breaches']}x at "
+                  f"t={r['health_on']['first_breach_s']:.1f}s, health "
+                  f"{r['health_on']['slow_health']:.2f}; routed "
+                  f"{r['slow_routed_health_on']} (health-weighted) vs "
+                  f"{r['slow_routed_health_off']} (w_health=0)",
+                  file=sys.stderr)
+        elif name == "conservation":
+            fr = r["fractions"]
+            print(f"# conservation: {r['n_rounds']} rounds, max error "
+                  f"{r['conservation_error']:.2e}; compute "
+                  f"{fr['compute']:.0%} stall {fr['weight_stall']:.0%} "
+                  f"hop {fr['act_hop']:.0%} bubble {fr['bubble']:.0%}",
+                  file=sys.stderr)
+        elif name == "overhead":
+            print(f"# overhead: ms/token off={r['ms_per_token_off']:.3f} "
+                  f"on={r['ms_per_token_on']:.3f} (rel "
+                  f"{r['rel_delta'] * 100:.2f}%, budget "
+                  f"{r['budget'] * 100:.0f}%)", file=sys.stderr)
+        if not r["ok"]:
+            print(f"# WARNING: scenario {name} failed its enforcement",
+                  file=sys.stderr)
+            rc = 1
+
+    from repro.serving.metrics import SCHEMA_VERSION
+    payload = {"schema_version": SCHEMA_VERSION, "config": vars(args),
+               "results": results}
+    text = json.dumps(payload, indent=2)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    return rc
+
+
+def run():
+    """benchmarks.run harness hook: the full enforcement, sim-only."""
+    class _Row:
+        def __init__(self, name):
+            self.name = name
+
+        def csv(self):
+            return f"slo,{self.name},0.0,ok"
+
+    rc = main(["--overload-requests", "80", "--sketch-samples", "8000"])
+    if rc:
+        raise SystemExit("bench_slo enforcement failed")
+    return [_Row("sketch_overload_conservation_overhead")]
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

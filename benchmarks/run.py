@@ -33,7 +33,57 @@ SUITES = {
                                                   "vs static plan"),
     "fleet": ("benchmarks.bench_fleet", "multi-replica router vs single "
                                         "pipeline"),
+    "slo": ("benchmarks.bench_slo", "SLO engine: sketches, burn-rate "
+                                    "shed, critical path"),
 }
+
+HISTORY_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "BENCH_HISTORY.jsonl")
+
+
+def append_history(suite, rows, elapsed_s, path=HISTORY_PATH):
+    """One summary line per suite run, appended to BENCH_HISTORY.jsonl so
+    drift is visible across commits without digging through CI logs.
+    Timestamps/revisions come from the environment (BENCH_DATE,
+    BENCH_GIT_REV or the checkout itself) so replays are deterministic."""
+    rev = os.environ.get("BENCH_GIT_REV")
+    if rev is None:
+        try:
+            import subprocess
+            rev = subprocess.run(
+                ["git", "rev-parse", "--short", "HEAD"],
+                capture_output=True, text=True, timeout=10,
+                cwd=os.path.dirname(os.path.abspath(__file__)),
+            ).stdout.strip() or None
+        except (OSError, subprocess.SubprocessError):
+            rev = None
+    entry = {"suite": suite, "date": os.environ.get("BENCH_DATE"),
+             "git_rev": rev, "elapsed_s": round(elapsed_s, 2),
+             "rows": [r.csv() if hasattr(r, "csv") else list(r)
+                      for r in rows]}
+    with open(path, "a") as f:
+        f.write(json.dumps(entry) + "\n")
+    return entry
+
+
+def read_history(path=HISTORY_PATH):
+    """Parse BENCH_HISTORY.jsonl, skipping corrupt lines (appends from a
+    killed run can truncate the tail)."""
+    out = []
+    if not os.path.exists(path):
+        return out
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                d = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if isinstance(d, dict) and "suite" in d:
+                out.append(d)
+    return out
 
 
 def check_baselines(baseline_dir=None):
@@ -69,6 +119,15 @@ def check_baselines(baseline_dir=None):
                 f"comparisons may miss newer fields; regenerate with the "
                 f"suite's --out flag")
             stale.append(path)
+    hist = read_history()
+    if hist:
+        last = {}
+        for h in hist:
+            last[h["suite"]] = h
+        log.info(f"bench history: {len(hist)} runs on record, latest per "
+                 f"suite: "
+                 + ", ".join(f"{s}@{h.get('git_rev') or '?'}"
+                             for s, h in sorted(last.items())))
     return stale
 
 
@@ -88,7 +147,9 @@ def main(argv=None):
         t0 = time.time()
         mod = __import__(mod_name, fromlist=["run"])
         rows = mod.run() or []
-        print(f"--- {name} done in {time.time() - t0:.1f}s")
+        elapsed = time.time() - t0
+        print(f"--- {name} done in {elapsed:.1f}s")
+        append_history(name, rows, elapsed)
         for r in rows:
             if hasattr(r, "csv"):
                 all_rows.append(r.csv())

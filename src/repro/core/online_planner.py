@@ -74,6 +74,15 @@ class OnlinePlanner:
         self.ladders: List[List[OffloadPlanStep]] = [
             self._build_ladder(i, horizon_tokens)
             for i in range(len(plan.stages))]
+        # SLO pressure (DESIGN.md §17): 0 when healthy; a breaching SLO
+        # engine pushes (1 - health) here, which scales the effective
+        # token count so TS thresholds fire EARLY — weight blocks demote
+        # before the next admission would have queued on a dry pool
+        self.slo_pressure = 0.0
+
+    def note_slo_pressure(self, pressure: float) -> None:
+        """Adopt the serving layer's SLO pressure in [0, 1] (clamped)."""
+        self.slo_pressure = min(max(pressure, 0.0), 1.0)
 
     # -- memory bookkeeping ---------------------------------------------------
     def _free_bytes(self, i: int, alpha: int, beta: int) -> float:
@@ -142,6 +151,11 @@ class OnlinePlanner:
             lad = self.ladders[st.dev_idx]
             eff = total_tokens - (transferred[st.dev_idx]
                                   if transferred else 0)
+            if self.slo_pressure > 0.0:
+                # under SLO stress the planner acts as if occupancy were
+                # up to 2x what it is: thresholds fire sooner, HBM turns
+                # into KV headroom before queueing compounds the breach
+                eff = int(eff * (1.0 + self.slo_pressure))
             while st.plan_idx < len(lad) \
                     and eff >= lad[st.plan_idx].threshold_tokens:
                 step = lad[st.plan_idx]

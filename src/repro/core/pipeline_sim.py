@@ -196,9 +196,16 @@ class InterleavedPipelineSim:
                                 args={"segment": s, "n_micro": n_micro,
                                       "stall_s": seg_stall})
                     if seg_stall > 0:
-                        tr.instant(tr_ev.WEIGHT_STALL, ts=seg_start,
-                                   track=dev_track(i),
-                                   args={"stall_s": seg_stall})
+                        # the stall is always the FIRST micro-batch waiting
+                        # on w_ready (later ones inherit dev_free >= w_ready)
+                        # so it is one contiguous interval ending at
+                        # seg_start — emit it as a span so critical-path
+                        # attribution can classify the wall-clock it covers
+                        tr.complete(tr_ev.WEIGHT_STALL,
+                                    ts=seg_start - seg_stall, dur=seg_stall,
+                                    track=dev_track(i),
+                                    args={"stall_s": seg_stall,
+                                          "segment": s})
                     # last micro-batch's hand-off to the next device
                     tr.complete(tr_ev.ACT_HOP, ts=last_end, dur=hop,
                                 track=dev_track(i), args={"segment": s})

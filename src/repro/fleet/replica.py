@@ -61,6 +61,15 @@ class Replica:
     def outstanding(self) -> int:
         return self.sched.outstanding
 
+    def health(self) -> float:
+        """SLO health in [0, 1] from an attached SLOEngine (DESIGN.md
+        §17): 1.0 while every target holds (or no engine is attached), 0
+        under runaway burn. The router subtracts w_health * (1 - health)
+        from this replica's score, shedding traffic off a breaching
+        replica."""
+        slo = getattr(self.sched, "slo", None)
+        return slo.health if slo is not None else 1.0
+
     def free_kv_frac(self) -> float:
         """Free device-tier KV as a fraction of capacity (1.0 when the
         replica is not page-managed — no KV pressure signal to score)."""

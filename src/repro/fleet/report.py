@@ -81,7 +81,11 @@ class FleetResult:
                 "retired_s": rep.retired_s,
                 "draining": rep.draining,
                 "live": rep.live,
+                "health": rep.health(),
             }
+            slo = getattr(rep.sched, "slo", None)
+            if slo is not None:
+                membership[rep.name]["slo"] = slo.snapshot(rep.now())
         aggregate = summarize(self.requests, pattern=pattern,
                               backend=backend, stats=merged)
         return FleetReport(pattern=pattern, backend=backend,

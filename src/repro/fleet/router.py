@@ -12,6 +12,12 @@ the determinism property tests/test_fleet.py asserts. Four policies:
 
     score(r) = w_prefix * overlap(r) + w_sticky * [home(session) == r]
              - w_queue * queue_depth(r)/n_slots - w_kv * (1 - free_kv(r))
+             - w_health * (1 - health(r))
+
+  health(r) is the replica's SLO health (DESIGN.md §17): 1.0 when no
+  SLOEngine is attached or every target holds, falling toward 0 under
+  burn — traffic sheds away from a breaching replica before its queue
+  compounds the breach.
 
   overlap(r) is the matched-prefix *fraction* of the prompt against
   replica r's digest — the live radix summary unioned with an
@@ -54,6 +60,7 @@ class RouterConfig:
     w_sticky: float = 0.5         # incumbent-home bonus
     w_queue: float = 0.25         # per queued request (slot-normalized)
     w_kv: float = 0.25            # per unit KV fullness
+    w_health: float = 1.0         # per unit SLO unhealth (1 - health)
     saturation_queue: int = 8     # spillover threshold (queue depth)
     hysteresis: float = 0.15      # margin to move a sticky session
     seed: int = 0                 # random policy / any future jitter
@@ -104,6 +111,7 @@ class FleetRouter:
             s += cfg.w_sticky
         s -= cfg.w_queue * rep.queue_depth / max(rep.backend.n_slots, 1)
         s -= cfg.w_kv * (1.0 - rep.free_kv_frac())
+        s -= cfg.w_health * (1.0 - rep.health())
         return s
 
     # -- placement ---------------------------------------------------------------

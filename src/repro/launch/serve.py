@@ -82,6 +82,19 @@ def main(argv=None):
     ap.add_argument("--n-templates", type=int, default=4)
     ap.add_argument("--prefix-len", type=int, default=32)
     ap.add_argument("--turns", type=int, default=3)
+    ap.add_argument("--slo", action="store_true",
+                    help="online SLO engine (DESIGN.md §17): burn-rate "
+                         "alerts on TTFT/TPOT/goodput/reject targets, "
+                         "health fed to router scoring and planner "
+                         "pressure; final report gains an 'slo' section")
+    ap.add_argument("--slo-ttft", type=float, default=8.0,
+                    help="TTFT p99 threshold in seconds (--slo)")
+    ap.add_argument("--slo-tpot", type=float, default=1.0,
+                    help="TPOT p50 threshold in seconds/token (--slo)")
+    ap.add_argument("--dash-interval", type=float, default=0.0,
+                    help="seconds between live dashboard snapshots on "
+                         "stdout (0 = off; backend clock, so virtual "
+                         "seconds in sim runs)")
     args = ap.parse_args(argv)
 
     import jax
@@ -195,7 +208,16 @@ def main(argv=None):
     if args.trace:
         tracer = Tracer()
         set_tracer(tracer)
+
+    def mk_slo():
+        if not args.slo:
+            return None
+        from repro.obs.slo import SLOEngine, default_targets
+        return SLOEngine(default_targets(ttft_p99_s=args.slo_ttft,
+                                         tpot_p50_s=args.slo_tpot))
+
     fleet_report = None
+    slo = None
     try:
         reqs = requests_from_arrivals(arrivals, vocab_size=cfg.vocab_size)
         if args.replicas > 1:
@@ -214,6 +236,11 @@ def main(argv=None):
                         prefill_chunk_tokens=args.prefill_chunk,
                         page_size=args.page_size), scfg)
                     for i in range(args.replicas)]
+            if args.slo:
+                # one engine per replica: health is a per-replica signal
+                # (the router sheds off the breaching one, not the fleet)
+                for rep in reps:
+                    rep.sched.attach_slo(mk_slo())
             fleet = Fleet(reps, config=RouterConfig(policy=args.router,
                                                     seed=args.seed))
             result = fleet.run(reqs)
@@ -222,7 +249,22 @@ def main(argv=None):
                 pattern=args.pattern, backend=f"fleet{args.replicas}")
         else:
             sched = ContinuousBatchingScheduler(srv.make_backend(), scfg)
-            done = sched.serve(reqs)
+            slo = mk_slo()
+            if slo is not None:
+                sched.attach_slo(slo)
+            if args.dash_interval > 0:
+                from repro.obs.dashboard import Dashboard
+                dash = Dashboard(slo=slo, sched=sched, tracer=tracer,
+                                 interval_s=args.dash_interval)
+                sched.begin(reqs)
+                while sched.step():
+                    snap = dash.tick(sched.now())
+                    if snap is not None:
+                        print(snap)
+                done = sched.finish_run()
+                print(dash.render(sched.now()))
+            else:
+                done = sched.serve(reqs)
     finally:
         if tracer is not None:
             set_tracer(None)
@@ -241,7 +283,10 @@ def main(argv=None):
         report = summarize(done, pattern=args.pattern,
                            backend="engine" if engine else "fallback",
                            stats=sched.stats)
-        print(json.dumps(report.to_dict(), indent=2))
+        doc = report.to_dict()
+        if slo is not None:
+            doc["slo"] = slo.snapshot(sched.now())
+        print(json.dumps(doc, indent=2))
     return 0
 
 

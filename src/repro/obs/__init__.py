@@ -1,19 +1,35 @@
 """repro.obs: flight-recorder tracing, metrics registry, structured
-logging (DESIGN.md §15).
+logging (DESIGN.md §15), and the online SLO engine (DESIGN.md §17).
 
-  trace      ring-buffered Tracer + the stable event vocabulary; zero
-             cost when no tracer is installed (get_tracer() -> None)
-  exporters  Chrome trace-event JSON (Perfetto) + JSONL round-trip +
-             schema validation
-  metrics    MetricsRegistry (counters/gauges/histograms) behind the
-             scheduler's stats — ServingReport is a derived view
-  log        level-gated structured logger (quiet under pytest)
+  trace          ring-buffered Tracer + the stable event vocabulary; zero
+                 cost when no tracer is installed (get_tracer() -> None)
+  exporters      Chrome trace-event JSON (Perfetto) + JSONL round-trip +
+                 schema validation
+  metrics        MetricsRegistry (counters/gauges/histograms) behind the
+                 scheduler's stats — ServingReport is a derived view
+  log            level-gated structured logger (quiet under pytest)
+  sketch         bounded streaming instruments: ReservoirSketch (mergeable
+                 quantiles with a documented rank-error bound), P2Quantile,
+                 EWMA, WindowedCounter
+  slo            declarative SLO targets, multi-window burn-rate alerts,
+                 live health the router/planner consume
+  critical_path  per-round latency attribution (compute / weight-stall /
+                 hop / kv-migration / bubble) + per-request waterfalls
+  dashboard      periodic text/JSON snapshots, live or offline from JSONL
 """
+from repro.obs.critical_path import (CriticalPathReport,  # noqa: F401
+                                     analyze, analyze_all, analyze_jsonl)
+from repro.obs.dashboard import Dashboard, render_offline  # noqa: F401
 from repro.obs.exporters import (export_chrome, export_jsonl,  # noqa: F401
                                  read_jsonl, to_chrome, validate_chrome,
                                  validate_chrome_file)
 from repro.obs.log import get_logger  # noqa: F401
 from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401
                                MetricsRegistry)
+from repro.obs.sketch import (EWMA, P2Quantile,  # noqa: F401
+                              ReservoirSketch, WindowedCounter,
+                              reservoir_rank_error)
+from repro.obs.slo import (SLOEngine, SLOTarget,  # noqa: F401
+                           default_targets)
 from repro.obs.trace import (Tracer, get_tracer,  # noqa: F401
                              set_tracer, tracing)

@@ -14,14 +14,25 @@ Instrument semantics:
              accumulated total (the pool's spilled_pages etc. — counters
              owned by a subsystem the scheduler reads at drain time).
   Gauge      last-written value + high-water mark (`peak`): occupancy
-             style quantities where the report wants the max.
-  Histogram  raw observations + nearest-rank percentiles (small request
-             counts; same convention as serving.metrics.percentile).
+             style quantities where the report wants the max. The peak
+             tracks from the FIRST observation — a gauge that only ever
+             goes negative peaks at its (negative) maximum, not at the
+             0.0 it was constructed with.
+  Histogram  nearest-rank percentiles over either every raw observation
+             (exact — the default, right for benchmark-sized runs) or a
+             bounded reservoir sketch (`MetricsRegistry(hist_capacity=m)`,
+             DESIGN.md §17): million-request runs keep m samples per
+             histogram instead of all of them, percentiles carry the
+             documented reservoir rank-error bound
+             (obs/sketch.reservoir_rank_error), and fleet merge() still
+             pools correctly (reservoir merge is population-weighted).
 """
 from __future__ import annotations
 
 import math
-from typing import Dict, List
+from typing import Dict, List, Optional
+
+from repro.obs.sketch import ReservoirSketch
 
 
 class Counter:
@@ -39,46 +50,110 @@ class Counter:
 
 
 class Gauge:
-    __slots__ = ("name", "value", "peak")
+    __slots__ = ("name", "value", "_peak")
 
     def __init__(self, name: str):
         self.name = name
         self.value = 0.0
-        self.peak = 0.0
+        self._peak: Optional[float] = None   # None until first set():
+        # initializing to 0.0 made every never-positive gauge report a
+        # phantom peak of 0.0 (satellite fix, ISSUE 9)
+
+    @property
+    def peak(self) -> float:
+        """High-water mark since the first observation; 0.0 before any
+        (the legacy empty-gauge value, kept for report compatibility)."""
+        return 0.0 if self._peak is None else self._peak
 
     def set(self, v: float) -> None:
         self.value = v
-        if v > self.peak:
-            self.peak = v
+        if self._peak is None or v > self._peak:
+            self._peak = v
 
 
 class Histogram:
-    __slots__ = ("name", "values")
+    """Raw-sample (exact) or reservoir-backed (bounded) percentile
+    tracker. `values` is the raw list in exact mode; in bounded mode it
+    stays empty and the samples live in `sketch` (percentiles then carry
+    the sketch's rank-error bound, not exactness)."""
 
-    def __init__(self, name: str):
+    __slots__ = ("name", "values", "sketch")
+
+    def __init__(self, name: str, capacity: Optional[int] = None,
+                 seed: int = 0):
         self.name = name
+        self.sketch: Optional[ReservoirSketch] = None
+        if capacity is not None:
+            # per-histogram seed: two same-capacity sketches in one
+            # registry must not share their replacement schedule
+            self.sketch = ReservoirSketch(
+                capacity, seed=seed ^ (hash(name) & 0xFFFF))
         self.values: List[float] = []
 
+    @property
+    def bounded(self) -> bool:
+        return self.sketch is not None
+
     def observe(self, v: float) -> None:
-        self.values.append(v)
+        if self.sketch is not None:
+            self.sketch.observe(v)
+        else:
+            self.values.append(v)
 
     @property
     def count(self) -> int:
-        return len(self.values)
+        return self.sketch.count if self.sketch is not None \
+            else len(self.values)
 
     def percentile(self, p: float) -> float:
-        """Nearest-rank (serving.metrics convention); NaN when empty."""
+        """Nearest-rank (serving.metrics convention); NaN when empty.
+        Bounded mode: nearest rank over the reservoir — within the
+        documented rank-error bound of the exact answer."""
+        if self.sketch is not None:
+            return self.sketch.quantile(p)
         if not self.values:
             return float("nan")
         xs = sorted(self.values)
         k = max(math.ceil(p / 100.0 * len(xs)) - 1, 0)
         return xs[min(k, len(xs) - 1)]
 
+    def merge_from(self, other: "Histogram") -> None:
+        """Pool `other`'s observations into self (the fleet fold).
+        exact+exact concatenates (merged percentiles == pooled, exact);
+        any bounded side merges reservoirs (population-weighted — the
+        bound survives). An exact self folding a bounded other promotes
+        itself to bounded first (the raw samples seed the reservoir);
+        mixing modes across a fleet is legal but the result is bounded."""
+        if self.sketch is None and other.sketch is None:
+            self.values.extend(other.values)
+            return
+        if self.sketch is None:           # promote: raw -> reservoir
+            self.sketch = ReservoirSketch(
+                other.sketch.capacity,
+                seed=hash(self.name) & 0xFFFF)
+            for v in self.values:
+                self.sketch.observe(v)
+            self.values = []
+        if other.sketch is not None:
+            self.sketch.merge(other.sketch)
+        else:
+            for v in other.values:
+                self.sketch.observe(v)
+
 
 class MetricsRegistry:
-    """Get-or-create instrument registry with a flat dict view."""
+    """Get-or-create instrument registry with a flat dict view.
 
-    def __init__(self):
+    `hist_capacity=None` (default) keeps every histogram observation —
+    exact percentiles, memory grows with the run. `hist_capacity=m`
+    (DESIGN.md §17) bounds every histogram at an m-sample reservoir:
+    constant memory at any request count, percentiles within
+    `obs.sketch.reservoir_rank_error(m)` rank error of exact, and
+    fleet merge() still pools correctly."""
+
+    def __init__(self, hist_capacity: Optional[int] = None, seed: int = 0):
+        self.hist_capacity = hist_capacity
+        self._seed = seed
         self._counters: Dict[str, Counter] = {}
         self._gauges: Dict[str, Gauge] = {}
         self._hists: Dict[str, Histogram] = {}
@@ -99,7 +174,8 @@ class MetricsRegistry:
     def histogram(self, name: str) -> Histogram:
         h = self._hists.get(name)
         if h is None:
-            h = self._hists[name] = Histogram(name)
+            h = self._hists[name] = Histogram(name, self.hist_capacity,
+                                              seed=self._seed)
         return h
 
     # -- shorthands (the scheduler's hot-path calls) -----------------------------
@@ -126,18 +202,26 @@ class MetricsRegistry:
         primitive (DESIGN.md §16). Counters sum (totals across replicas),
         gauges take the max (a fleet's peak occupancy is the max of the
         replicas' peaks, not their sum — each replica's pool is its own),
-        histograms concatenate raw samples so merged percentiles equal
+        histograms pool raw samples so merged percentiles equal
         percentiles over the pooled observations *exactly* (asserted in
-        tests; merging precomputed percentiles would not be). Returns self
-        so merges chain."""
+        tests; merging precomputed percentiles would not be) — unless a
+        side is reservoir-bounded, in which case the merge is population-
+        weighted and the rank-error bound carries over. Returns self so
+        merges chain."""
         for name, c in other._counters.items():
             self.counter(name).inc(c.value)
         for name, g in other._gauges.items():
             mine = self.gauge(name)
-            mine.value = max(mine.value, g.value)
-            mine.peak = max(mine.peak, g.peak)
+            # a never-set local gauge adopts the other's value outright —
+            # max() against the constructed 0.0 would invent a zero
+            # observation (the negative-gauge peak bug, ISSUE 9)
+            if mine._peak is None:
+                mine.value, mine._peak = g.value, g._peak
+            elif g._peak is not None:
+                mine.value = max(mine.value, g.value)
+                mine._peak = max(mine._peak, g._peak)
         for name, h in other._hists.items():
-            self.histogram(name).values.extend(h.values)
+            self.histogram(name).merge_from(h)
         return self
 
     # -- views -------------------------------------------------------------------
@@ -151,8 +235,11 @@ class MetricsRegistry:
         for name, g in self._gauges.items():
             out[name] = g.peak if name.startswith("peak_") else g.value
         for name, h in self._hists.items():
-            out[f"{name}_p50"] = h.percentile(50)
-            out[f"{name}_p99"] = h.percentile(99)
+            # empty histogram -> None (not NaN): the stats dict gets
+            # json.dumps'd into reports, and NaN is not valid JSON
+            p50, p99 = h.percentile(50), h.percentile(99)
+            out[f"{name}_p50"] = None if p50 != p50 else p50
+            out[f"{name}_p99"] = None if p99 != p99 else p99
             out[f"{name}_count"] = h.count
         return out
 

@@ -103,6 +103,9 @@ FLEET_SPILLOVER = "fleet.spillover"
 FLEET_DRAIN = "fleet.drain"
 FLEET_DRAINED = "fleet.drained"
 FLEET_JOIN = "fleet.join"
+# SLO engine (DESIGN.md §17; track "slo")
+SLO_BREACH = "slo.breach"
+SLO_RECOVER = "slo.recover"
 
 # tracks
 TRACK_SCHED = "sched"
@@ -111,6 +114,7 @@ TRACK_KV = "kv"
 TRACK_PREFIX = "prefix"
 TRACK_ENGINE = "engine"
 TRACK_ROUTER = "router"
+TRACK_SLO = "slo"
 
 
 def req_track(rid: int) -> str:

@@ -148,6 +148,13 @@ class SimBackend:
         ladder (paper Eq. 5) fires on what admission actually holds."""
         self._kv_pages = (pages_in_use, page_size)
 
+    def note_slo_pressure(self, pressure: float) -> None:
+        """Scheduler callback (DESIGN.md §17): forward SLO pressure
+        (1 - health) to the sim's OnlinePlanner so its TS thresholds
+        fire early while the serving layer is breaching."""
+        if self.sim.planner is not None:
+            self.sim.planner.note_slo_pressure(pressure)
+
     def attach_page_pool(self, pool) -> None:
         """Expose a PagePool to the simulator so Eq. 8 volumes move real
         pages (core/kv_transfer.sync_pool) every step, and to the
@@ -710,6 +717,12 @@ class EngineBackend:
                 if dev < self.engine.plan.n_stage:
                     self._retier_to(dev, max(step.alpha, step.beta))
         self._maybe_promote()
+
+    def note_slo_pressure(self, pressure: float) -> None:
+        """Scheduler callback with SLO pressure (DESIGN.md §17): forward
+        to the planner so its TS ladder fires early under burn."""
+        if self.planner is not None:
+            self.planner.note_slo_pressure(pressure)
 
     def reclaim_kv_pages(self, n_pages: int) -> int:
         """Scheduler pressure hook: before preempting a request, demote

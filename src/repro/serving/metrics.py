@@ -91,10 +91,16 @@ class ServingReport:
     schema_version: int = SCHEMA_VERSION
 
     def to_dict(self) -> Dict:
-        return dataclasses.asdict(self)
+        # NaN (empty-percentile sentinel) is not valid JSON — json.dumps
+        # happily emits a bare `NaN` token that strict parsers (jq,
+        # browsers, other languages) reject. Serialize it as null;
+        # report_from_dict maps null back to NaN on the way in.
+        return {k: (None if isinstance(v, float) and math.isnan(v) else v)
+                for k, v in dataclasses.asdict(self).items()}
 
     def to_json(self, indent: Optional[int] = 2) -> str:
-        return json.dumps(self.to_dict(), indent=indent)
+        return json.dumps(self.to_dict(), indent=indent,
+                          allow_nan=False)
 
 
 def summarize(requests: List, *, pattern: str = "", backend: str = "",
@@ -205,6 +211,11 @@ def report_from_dict(d: Dict, *, source: str = "",
         warn("baseline missing report fields (defaults used)",
              source=source or "<dict>", fields=",".join(missing))
     kw = {k: v for k, v in d.items() if k in fields}
+    # null in the JSON is the wire form of an empty-percentile NaN
+    # (to_dict wrote it); restore the float sentinel for numeric fields
+    for name, v in list(kw.items()):
+        if v is None and str(fields[name].type) == "float":
+            kw[name] = float("nan")
     fill = {"str": "", "int": 0, "float": float("nan")}
     for name in required - set(kw):
         kw[name] = fill.get(str(fields[name].type), 0)

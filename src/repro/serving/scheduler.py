@@ -146,6 +146,10 @@ class SchedulerConfig:
                                                  # into chunks that ride
                                                  # mixed rounds with decode
                                                  # (None = monolithic)
+    hist_capacity: Optional[int] = None      # bounded-memory histograms
+                                             # (obs.sketch reservoir of
+                                             # this many samples; None =
+                                             # exact raw-sample mode)
 
 
 class ContinuousBatchingScheduler:
@@ -211,7 +215,7 @@ class ContinuousBatchingScheduler:
         # (summarize sums Request.preempted — single source of truth).
         # Typed instruments (DESIGN.md §15); `stats` below keeps the
         # legacy flat-dict view for tests/benches that read it directly.
-        self.metrics = MetricsRegistry()
+        self.metrics = MetricsRegistry(hist_capacity=config.hist_capacity)
         for k in ("kv_pages_spilled", "kv_pages_fetched",
                   "kv_migrated_bytes", "prefix_lookups", "prefix_hits",
                   "cached_tokens", "prefill_tokens_saved",
@@ -226,6 +230,11 @@ class ContinuousBatchingScheduler:
         self._tr = get_tracer()
         if self._tr is not None:
             self._tr.clock = backend.now
+        # online SLO engine (DESIGN.md §17): attach_slo installs one;
+        # finishes and rejections feed its burn-rate windows, and its
+        # pressure signal reaches the backend's OnlinePlanner
+        self.slo = None
+        self._slo_pressure_fn = getattr(backend, "note_slo_pressure", None)
         # empty run state so load signals (queue_depth / in_flight /
         # outstanding) read sanely before begin() installs a stream
         self.begin([])
@@ -234,6 +243,22 @@ class ContinuousBatchingScheduler:
     def stats(self) -> Dict[str, float]:
         """Legacy flat stats view (the registry is the source of truth)."""
         return self.metrics.to_stats_dict()
+
+    def attach_slo(self, engine) -> None:
+        """Install an obs.slo.SLOEngine: every finish/reject from now on
+        feeds its burn-rate windows (DESIGN.md §17)."""
+        self.slo = engine
+
+    def _note_slo(self, req: Request, now: float,
+                  rejected: bool = False) -> None:
+        if self.slo is None:
+            return
+        if rejected:
+            self.slo.observe_reject(req, now)
+        else:
+            self.slo.observe_request(req, now)
+        if self._slo_pressure_fn is not None:
+            self._slo_pressure_fn(self.slo.pressure())
 
     def _page_bytes(self) -> float:
         fn = getattr(self.backend, "kv_bytes_per_token", None)
@@ -583,6 +608,7 @@ class ContinuousBatchingScheduler:
         if self._tr is not None:
             self._tr.instant(tr_ev.REQ_REJECT, track=req_track(r.rid),
                              args={"prompt_len": r.prompt_len})
+        self._note_slo(r, self.backend.now(), rejected=True)
 
     def _intake(self, now: float) -> None:
         while self._pending and self._pending[0].arrival_s <= now:
@@ -663,6 +689,7 @@ class ContinuousBatchingScheduler:
         self.backend.release(slot)
         if self._tr is not None:
             self._trace_lifecycle(r)
+        self._note_slo(r, t)
 
     def step(self) -> bool:
         """One scheduler iteration: intake due arrivals, then either form

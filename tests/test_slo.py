@@ -1,0 +1,354 @@
+"""Online SLO engine (DESIGN.md §17): sketch error bounds (incl. after
+merge), burn-rate window algebra, breach/recover hysteresis, health ->
+router/planner wiring, and critical-path conservation on a seeded sim."""
+import json
+import math
+import types
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_config
+from repro.core.cost_model import CostEnv, Workload
+from repro.core.profiles import env_E3, mbps
+from repro.obs import critical_path as cp
+from repro.obs.sketch import (EWMA, P2Quantile, ReservoirSketch,
+                              WindowedCounter, reservoir_rank_error)
+from repro.obs.slo import SLOEngine, SLOTarget, default_targets
+from repro.obs.trace import Tracer, set_tracer, tracing
+from repro.serving import (ContinuousBatchingScheduler, SchedulerConfig,
+                           SimBackend, make_arrivals,
+                           requests_from_arrivals)
+from repro.serving.metrics import percentile
+
+
+# ----------------------------------------------------------------------------
+# helpers
+# ----------------------------------------------------------------------------
+def _exact_rank(xs_sorted, v):
+    """Fraction of the population strictly below v (rank of v)."""
+    import bisect
+    return bisect.bisect_left(xs_sorted, v) / len(xs_sorted)
+
+
+def _req(arrival, first, finish, generated=4, rejected=False):
+    return types.SimpleNamespace(arrival_s=arrival, first_token_s=first,
+                                 finish_s=finish, generated=generated,
+                                 rejected=rejected)
+
+
+def _lat_target(**kw):
+    base = dict(threshold_s=1.0, target=0.5, fast_window_s=10.0,
+                slow_window_s=30.0, burn_threshold=1.5,
+                recovery_frac=0.5)
+    base.update(kw)
+    return SLOTarget("lat_p50", "latency", **base)
+
+
+# ----------------------------------------------------------------------------
+# ReservoirSketch: documented rank-error bound, exact small-n, merge
+# ----------------------------------------------------------------------------
+def test_reservoir_exact_below_capacity():
+    s = ReservoirSketch(64, seed=1)
+    vals = [float(v) for v in (9, 1, 5, 3, 7)]
+    s.extend(vals)
+    # below capacity the reservoir IS the population: every quantile
+    # matches the exact serving-convention nearest-rank answer
+    for p in (0, 25, 50, 75, 99, 100):
+        assert s.quantile(p) == percentile(vals, p)
+    assert s.count == 5
+
+
+def test_reservoir_rank_error_bound_beyond_capacity():
+    import numpy as np
+    rng = np.random.default_rng(7)
+    xs = rng.lognormal(mean=0.0, sigma=0.8, size=20000).tolist()
+    s = ReservoirSketch(512, seed=3)
+    s.extend(xs)
+    xs_sorted = sorted(xs)
+    eps = reservoir_rank_error(512)
+    for p in (25, 50, 75, 90, 99):
+        est = s.quantile(p)
+        assert abs(_exact_rank(xs_sorted, est) - p / 100.0) <= eps, p
+    # extremes are tracked exactly, not sampled
+    assert s.quantile(0) == min(xs)
+    assert s.quantile(100) == max(xs)
+
+
+def test_reservoir_rank_error_bound_survives_merge():
+    import numpy as np
+    rng = np.random.default_rng(11)
+    # two disjoint regimes: merged percentiles are only right if the
+    # merge re-samples proportionally to population counts
+    a = rng.normal(1.0, 0.1, size=12000).tolist()
+    b = rng.normal(5.0, 0.2, size=4000).tolist()
+    sa, sb = ReservoirSketch(512, seed=5), ReservoirSketch(512, seed=6)
+    sa.extend(a)
+    sb.extend(b)
+    sa.merge(sb)
+    pooled = sorted(a + b)
+    assert sa.count == len(pooled)
+    eps = reservoir_rank_error(512)
+    for p in (50, 75, 90, 99):
+        est = sa.quantile(p)
+        assert abs(_exact_rank(pooled, est) - p / 100.0) <= eps, p
+
+
+@settings(max_examples=30)
+@given(st.lists(st.floats(min_value=-1e3, max_value=1e3), min_size=0,
+                max_size=40),
+       st.lists(st.floats(min_value=-1e3, max_value=1e3), min_size=0,
+                max_size=40),
+       st.integers(min_value=1, max_value=16))
+def test_reservoir_merge_invariants(xs, ys, cap):
+    """Property: after any merge, the reservoir is a <=cap-sized subset of
+    the pooled population with exact count/min/max, and every quantile
+    lies inside the pooled [min, max]."""
+    a, b = ReservoirSketch(cap, seed=1), ReservoirSketch(cap, seed=2)
+    a.extend(xs)
+    b.extend(ys)
+    a.merge(b)
+    pooled = xs + ys
+    assert a.count == len(pooled)
+    assert len(a.samples) <= cap
+    if pooled:
+        pool_set = sorted(pooled)
+        for v in a.samples:
+            assert v in pooled
+        assert a.quantile(0) == min(pooled)
+        assert a.quantile(100) == max(pooled)
+        q = a.quantile(50)
+        assert pool_set[0] <= q <= pool_set[-1]
+    else:
+        assert math.isnan(a.quantile(50))
+
+
+def test_reservoir_merge_exact_when_everything_fits():
+    a, b = ReservoirSketch(16, seed=0), ReservoirSketch(16, seed=0)
+    a.extend([1.0, 2.0])
+    b.extend([3.0, 4.0, 5.0])
+    a.merge(b)
+    assert sorted(a.samples) == [1.0, 2.0, 3.0, 4.0, 5.0]
+    assert a.quantile(50) == percentile([1.0, 2.0, 3.0, 4.0, 5.0], 50)
+
+
+# ----------------------------------------------------------------------------
+# P2 / EWMA
+# ----------------------------------------------------------------------------
+def test_p2_quantile_tracks_smooth_stream():
+    import numpy as np
+    rng = np.random.default_rng(3)
+    xs = rng.normal(10.0, 2.0, size=8000).tolist()
+    p2 = P2Quantile(q=0.9)
+    for v in xs:
+        p2.observe(v)
+    exact = percentile(xs, 90)
+    # empirical gate: ~2x the reservoir bound on a smooth stream
+    assert abs(_exact_rank(sorted(xs), p2.value()) - 0.9) \
+        <= 2 * reservoir_rank_error(512)
+    assert abs(p2.value() - exact) / exact < 0.05
+
+
+def test_ewma_halflife_and_rate():
+    e = EWMA(half_life_s=10.0)
+    assert math.isnan(e.value())
+    e.update(100.0, now=0.0)
+    assert e.value(0.0) == 100.0
+    e.update(0.0, now=10.0)       # old sample decayed to weight 0.5
+    assert e.value(10.0) == pytest.approx(100.0 * 0.5 / 1.5)
+    # rate: weight 1.5 over effective window 10/ln2
+    assert e.rate(10.0) == pytest.approx(1.5 / (10.0 / math.log(2.0)))
+
+
+# ----------------------------------------------------------------------------
+# WindowedCounter: the burn-rate window algebra
+# ----------------------------------------------------------------------------
+def test_windowed_counter_trailing_windows():
+    w = WindowedCounter(60.0, n_buckets=60)      # 1s buckets
+    w.add(0.0, good=1.0)
+    w.add(20.0, bad=2.0)
+    w.add(25.0, good=3.0)
+    # fast window (10s @ t=25) sees t=20 and t=25, not t=0
+    good, bad = w.totals(10.0, 25.0)
+    assert (good, bad) == (3.0, 2.0)
+    # slow window (60s) sees everything
+    good, bad = w.totals(60.0, 25.0)
+    assert (good, bad) == (4.0, 2.0)
+    assert w.bad_fraction(10.0, 25.0) == pytest.approx(2.0 / 5.0)
+
+
+def test_windowed_counter_quantization_bound():
+    # documented algebra: a window of W covers between W and W + bucket
+    # seconds — an event just past W may still be counted, one past
+    # W + bucket never is
+    w = WindowedCounter(60.0, n_buckets=60)      # bucket = 1s
+    w.add(0.5, bad=1.0)
+    assert w.totals(10.0, 10.4)[1] == 1.0        # 9.9s old: inside
+    assert w.totals(10.0, 11.6)[1] == 0.0        # 11.1s > W + bucket: out
+
+
+def test_windowed_counter_expiry_and_empty():
+    w = WindowedCounter(30.0, n_buckets=30)
+    w.add(0.0, bad=5.0)
+    assert w.bad_fraction(30.0, 0.0) == 1.0
+    # ring fully rolled over: everything expired
+    assert w.totals(30.0, 100.0) == (0.0, 0.0)
+    assert w.bad_fraction(30.0, 100.0) == 0.0    # idle burns no budget
+
+
+# ----------------------------------------------------------------------------
+# SLOEngine: breach fires / clears at the documented thresholds
+# ----------------------------------------------------------------------------
+def test_breach_needs_both_windows():
+    eng = SLOEngine([_lat_target(fast_window_s=5.0, slow_window_s=30.0)])
+    # seed the slow window with good traffic so slow burn stays low
+    for i in range(20):
+        eng.observe_request(_req(i, i + 0.1, i + 0.5), now=float(i + 1))
+    assert eng.breaching == []
+    # burst of bad inside the fast window only: fast burn spikes, slow
+    # burn stays under threshold -> still no breach (two-window rule)
+    for i in range(9):
+        t = 20.2 + 0.2 * i
+        eng.observe_request(_req(t - 2.5, t - 2.0, t), now=t)
+    fast, slow = eng.burn_rates("lat_p50", 22.0)
+    assert fast >= 1.5 and slow < 1.5
+    assert eng.breaching == []
+    assert eng.health == 1.0
+
+
+def test_breach_and_recovery_hysteresis():
+    tr = Tracer(capacity=256)
+    set_tracer(tr)
+    try:
+        eng = SLOEngine([_lat_target()])
+        # sustained bad traffic: both windows burn at 2.0 >= 1.5
+        for i in range(8):
+            t = float(i + 1)
+            eng.observe_request(_req(t - 3.0, t - 2.5, t), now=t)
+        assert eng.breaching == ["lat_p50"]
+        st = eng.snapshot(8.0)["targets"]["lat_p50"]
+        assert st["breached"] and st["breaches"] == 1
+        # health at burn 2.0 / threshold 1.5: 1/(1 + 4/3) = 3/7
+        assert eng.health == pytest.approx(1.0 / (1.0 + 2.0 / 1.5))
+        assert eng.pressure() == pytest.approx(1.0 - eng.health)
+        # good traffic ages the bad out of the fast (10s) window; breach
+        # clears only once fast burn < threshold x recovery_frac = 0.75
+        for i in range(30):
+            t = 9.0 + i
+            eng.observe_request(_req(t - 0.5, t - 0.4, t), now=t)
+        assert eng.breaching == []
+        snap = eng.snapshot(40.0)["targets"]["lat_p50"]
+        assert snap["recoveries"] == 1
+        assert eng.health == 1.0
+        names = [e[0] for e in tr.events()]
+        assert "slo.breach" in names and "slo.recover" in names
+    finally:
+        set_tracer(None)
+
+
+def test_reject_target_counts_sheds():
+    eng = SLOEngine([SLOTarget("rej", "reject", target=0.5,
+                               fast_window_s=10.0, slow_window_s=10.0,
+                               burn_threshold=1.5)])
+    for i in range(4):
+        eng.observe_reject(_req(0, None, None, rejected=True),
+                           now=float(i))
+    assert eng.breaching == ["rej"]          # 100% shed, budget 0.5
+    assert eng.snapshot(4.0)["targets"]["rej"]["observed"] == 0
+
+
+def test_target_validation():
+    with pytest.raises(ValueError):
+        SLOTarget("x", "not_a_metric")
+    with pytest.raises(ValueError):
+        SLOTarget("x", "ttft", target=1.0)
+    with pytest.raises(ValueError):
+        SLOTarget("x", "ttft", fast_window_s=60.0, slow_window_s=30.0)
+    with pytest.raises(ValueError):
+        SLOEngine([_lat_target(), _lat_target()])
+    assert {t.name for t in default_targets()} == \
+        {"ttft_p99", "tpot_p50", "goodput_p95", "reject_rate"}
+
+
+def test_snapshot_is_json_clean():
+    eng = SLOEngine([_lat_target()])
+    s = json.dumps(eng.snapshot(0.0), allow_nan=False)   # no NaN leaks
+    d = json.loads(s)
+    assert d["targets"]["lat_p50"]["p50"] is None        # nothing observed
+
+
+# ----------------------------------------------------------------------------
+# scheduler wiring: attach_slo feeds finishes/rejects, health reaches planner
+# ----------------------------------------------------------------------------
+def _backend(slots=2, prompt=64):
+    cfg = get_config("llama2-13b")
+    w = Workload(cfg, mb=1, ctx=prompt, n_micro=slots)
+    return SimBackend(CostEnv(env_E3(), mbps(200.0), w), n_slots=slots,
+                      prompt_tokens=prompt)
+
+
+def test_scheduler_feeds_slo_engine():
+    sched = ContinuousBatchingScheduler(_backend(), SchedulerConfig())
+    eng = SLOEngine()                        # loose defaults: no breach
+    sched.attach_slo(eng)
+    arr = make_arrivals("bursty", 4, seed=0, prompt_len=64,
+                        max_new_tokens=4, gap_s=5.0, burst_size=2)
+    done = sched.serve(requests_from_arrivals(arr, seed=0))
+    snap = eng.snapshot(sched.now())
+    assert snap["targets"]["ttft_p99"]["observed"] == len(done)
+    assert snap["targets"]["ttft_p99"]["p50"] > 0
+    assert eng.breaching == []
+
+
+def test_slo_pressure_reaches_backend():
+    calls = []
+    backend = _backend()
+    backend.note_slo_pressure = lambda p: calls.append(p)
+    sched = ContinuousBatchingScheduler(backend, SchedulerConfig())
+    sched.attach_slo(SLOEngine([_lat_target(threshold_s=1e-9)]))
+    arr = make_arrivals("bursty", 4, seed=0, prompt_len=64,
+                        max_new_tokens=4, gap_s=5.0, burst_size=2)
+    sched.serve(requests_from_arrivals(arr, seed=0))
+    # impossible threshold -> every finish is bad -> breach -> pressure
+    assert calls and max(calls) > 0.0
+
+
+# ----------------------------------------------------------------------------
+# critical path: conservation + request decomposition on a seeded sim
+# ----------------------------------------------------------------------------
+def test_critical_path_conservation_seeded_sim():
+    with tracing(capacity=1 << 16) as tr:
+        sched = ContinuousBatchingScheduler(_backend(), SchedulerConfig())
+        arr = make_arrivals("bursty", 4, seed=0, prompt_len=64,
+                            max_new_tokens=4, gap_s=5.0, burst_size=2)
+        done = sched.serve(requests_from_arrivals(arr, seed=0))
+        rep = cp.analyze(tr.events())
+    assert rep.rounds, "traced run must produce STEP rounds"
+    # every round's buckets sum to the measured round time within 1%
+    assert rep.conservation_error() < 0.01
+    for r in rep.rounds:
+        assert sum(r.buckets.values()) == pytest.approx(r.dur, rel=1e-6)
+        assert min(r.buckets.values()) >= 0.0
+        assert r.bottleneck.startswith("dev:")
+    fr = rep.fractions
+    assert sum(fr.values()) == pytest.approx(1.0)
+    assert fr["compute"] > 0.5               # E3/13B is compute-dominated
+    # request decomposition: queue + buckets == end-to-end, exactly
+    assert len(rep.requests) == len(done)
+    for rq in rep.requests:
+        assert rq.queue_s + sum(rq.buckets.values()) \
+            == pytest.approx(rq.total_s, rel=1e-9)
+    # renderers stay well-formed
+    assert "critical path" in rep.render()
+    assert rep.to_dict()["totals"]["compute"] > 0
+
+
+def test_critical_path_namespace_split():
+    assert cp.split_track("r2:dev:3") == ("r2", "dev:3")
+    assert cp.split_track("dev:3") == (None, "dev:3")
+    ev = [("step", "X", 0.0, 1.0, "r0:pipeline", {}),
+          ("step", "X", 0.0, 1.0, "r1:pipeline", {})]
+    assert cp.namespaces(ev) == ["r0", "r1"]
+    per = cp.analyze_all(ev)
+    assert set(per) == {"r0", "r1"}
+    assert all(len(r.rounds) == 1 for r in per.values())
