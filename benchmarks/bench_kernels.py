@@ -1,22 +1,23 @@
 """Kernel micro-benchmarks: wall time of the jnp reference paths on CPU
 (the Pallas kernels are TPU-target; interpret mode measures Python, not
 hardware) + the analytic VMEM working-set / arithmetic-intensity numbers
-the BlockSpec choices are based on."""
-import time
+the BlockSpec choices are based on.
 
+Timing goes through the autotuner's shared clock discipline
+(repro.tune.measure.timeit_median: warmup, block_until_ready,
+median-of-reps) so these numbers are comparable with the sweep's."""
 import jax
 import jax.numpy as jnp
 
 from repro.models.attention import chunked_attention, decode_attention_ref
 from repro.models.ssm import wkv_scan_ref
+from repro.tune.measure import timeit_median
 
 
 def _time(fn, *args, reps=3):
-    jax.block_until_ready(fn(*args))          # compile + warm
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / reps * 1e6
+    med, _ = timeit_median(lambda: jax.block_until_ready(fn(*args)),
+                           reps=reps, warmup=1)
+    return med * 1e6
 
 
 def run():

@@ -35,6 +35,9 @@ SUITES = {
                                         "pipeline"),
     "slo": ("benchmarks.bench_slo", "SLO engine: sketches, burn-rate "
                                     "shed, critical path"),
+    "autotune": ("benchmarks.bench_autotune", "measured-profile plan vs "
+                                              "analytic + kernel sweep + "
+                                              "online re-fit"),
 }
 
 HISTORY_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),

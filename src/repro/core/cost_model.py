@@ -271,6 +271,14 @@ class CostEnv:
                                        # dominates TP's per-layer syncs
 
     # -- building blocks -----------------------------------------------------
+    def replace_device(self, dev_idx: int, dev: DeviceProfile) -> "CostEnv":
+        """A copy of this env with one device swapped — how the online
+        re-fit (repro.tune.refit) folds a measured bandwidth/flops drift
+        into the planning model without mutating shared state."""
+        devs = list(self.devices)
+        devs[dev_idx] = dev
+        return dataclasses.replace(self, devices=devs)
+
     def comp_layers(self, dev_idx: int, n_layers: float) -> float:
         return n_layers * self.work.comp_layer(self.devices[dev_idx])
 

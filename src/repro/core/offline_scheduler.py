@@ -259,3 +259,25 @@ def allocate(env: CostEnv, n_layers: int, *, n_emp: int = 512,
                               "no feasible (#Seg, allocation) found",
                               tuple(cands))
     return ScheduleResult(best, True, "", tuple(cands))
+
+
+def allocate_with_retry(mk_env, n_layers: int, *, n_emp: int = 512,
+                        max_seg: Optional[int] = None, balance: bool = True,
+                        factor: float = 1.4, max_scale: float = 16.0
+                        ) -> Tuple[ScheduleResult, CostEnv, float]:
+    """allocate() under a feasibility-relaxation ladder (the launcher's
+    historical retry loop, now shared with the measured-profile path):
+    `mk_env(scale)` builds the CostEnv at a memory relaxation `scale`,
+    starting at 1.0 and multiplying by `factor` until allocate() finds a
+    feasible plan or `scale` exceeds `max_scale`. Returns (result, env,
+    scale) — `result.feasible` is False only if even max_scale failed."""
+    scale = 1.0
+    env = mk_env(scale)
+    r = allocate(env, n_layers, n_emp=n_emp, max_seg=max_seg,
+                 balance=balance)
+    while not r.feasible and scale < max_scale:
+        scale *= factor
+        env = mk_env(scale)
+        r = allocate(env, n_layers, n_emp=n_emp, max_seg=max_seg,
+                     balance=balance)
+    return r, env, scale

@@ -38,6 +38,8 @@ class DevicePlannerState:
     plan_idx: int = 0          # next threshold to trigger
     alpha: int = 0             # currently offloaded MHA blocks
     beta: int = 0              # currently offloaded MLP blocks
+    last_eff: int = 0          # last effective token count seen (rebuild
+                               # re-anchors plan_idx to this occupancy)
 
 
 def _min_load_plan(need_bytes: float, attn_b: float, mlp_b: float,
@@ -69,6 +71,9 @@ class OnlinePlanner:
         self.plan = plan
         self.work = env.work
         self.chunk = ladder_chunk_tokens
+        self.base_chunk = ladder_chunk_tokens
+        self.horizon = horizon_tokens
+        self.rebuilds = 0
         self.states = [DevicePlannerState(i)
                        for i in range(len(plan.stages))]
         self.ladders: List[List[OffloadPlanStep]] = [
@@ -156,6 +161,7 @@ class OnlinePlanner:
                 # up to 2x what it is: thresholds fire sooner, HBM turns
                 # into KV headroom before queueing compounds the breach
                 eff = int(eff * (1.0 + self.slo_pressure))
+            st.last_eff = max(st.last_eff, int(eff))
             while st.plan_idx < len(lad) \
                     and eff >= lad[st.plan_idx].threshold_tokens:
                 step = lad[st.plan_idx]
@@ -163,6 +169,45 @@ class OnlinePlanner:
                 st.plan_idx += 1
                 fired.append((st.dev_idx, step))
         return fired
+
+    # -- re-fit hook (repro.tune.refit, DESIGN.md §18) -------------------------
+    def rebuild(self, env: Optional[CostEnv] = None, *,
+                chunk_scale: float = 1.0) -> None:
+        """Recompute every TS ladder against an updated CostEnv — the
+        online re-fit calls this when measured bandwidth/compute drifts
+        from the planned model.
+
+        The thresholds themselves are memory-driven (Eq. 5), so the env
+        swap mostly matters downstream (all pricing now uses measured
+        numbers); what bandwidth drift changes *here* is the ladder
+        chunk: `chunk_scale` = measured/planned load bandwidth. A slower
+        loader (< 1) shrinks the chunk, so each re-solved plan (Eq. 6/7)
+        covers less KV growth and streams fewer extra bytes per segment;
+        a faster loader affords bigger chunks and fewer, larger demotion
+        steps.
+
+        Physical state is preserved: alpha/beta never decrease across a
+        rebuild (un-evicting would be a promotion the runtime hasn't
+        performed), and plan_idx re-anchors to each device's last
+        effective occupancy so already-passed thresholds don't re-fire.
+        """
+        if env is not None:
+            self.env = env
+            self.work = env.work
+        self.chunk = max(32, int(round(self.base_chunk
+                                       * min(max(chunk_scale, 0.1), 10.0))))
+        self.ladders = [self._build_ladder(i, self.horizon)
+                        for i in range(len(self.plan.stages))]
+        for st in self.states:
+            lad = self.ladders[st.dev_idx]
+            idx = 0
+            while idx < len(lad) and st.last_eff >= lad[idx].threshold_tokens:
+                idx += 1
+            st.plan_idx = idx
+            if idx > 0:
+                st.alpha = max(st.alpha, lad[idx - 1].alpha)
+                st.beta = max(st.beta, lad[idx - 1].beta)
+        self.rebuilds += 1
 
     def on_pages(self, pages_in_use: int, page_size: int,
                  transferred: Optional[List[int]] = None

@@ -69,8 +69,16 @@ class InterleavedPipelineSim:
                  planner_full_layer_fallback: bool = False,
                  horizon_tokens: Optional[int] = None,
                  bandwidth_schedule: Optional[Callable[[int], float]] = None,
-                 prompt_tokens: int = 64):
+                 prompt_tokens: int = 64,
+                 true_env: Optional[CostEnv] = None):
         self.env = env
+        # planned-vs-true split (DESIGN.md §18): `env` is the *model* the
+        # planner/scheduler reason with; `true_env` is what the hardware
+        # actually does — the sim prices compute and loader time from it.
+        # They are the same object unless a drift experiment separates
+        # them (set_true_env mid-run injects a throttle/contention event).
+        self.true_env = true_env if true_env is not None else env
+        self.refit = None
         self.plan = plan
         self.w = env.work
         self.D = len(plan.stages)
@@ -107,6 +115,23 @@ class InterleavedPipelineSim:
     def attach_page_pool(self, pool) -> None:
         self.page_pool = pool
 
+    def set_true_env(self, true_env: CostEnv) -> None:
+        """Inject a ground-truth drift mid-run (thermal throttle, SSD
+        contention): subsequent steps *execute* at true_env's rates while
+        the planner keeps reasoning with `self.env` until a re-fit folds
+        the observed drift back in."""
+        self.true_env = true_env
+
+    def attach_refit(self, refit) -> None:
+        """Wire an OnlineRefit: the sim feeds it per-segment fetch and
+        compute observations and gives it a shot at rebuilding after
+        every step. The refit must share `self.env` (the planned model)."""
+        if not isinstance(self.env.devices, list):
+            self.env.devices = list(self.env.devices)
+        refit.env = self.env
+        refit.planner = self.planner
+        self.refit = refit
+
     def charge_transfer(self, nbytes: float) -> float:
         """Price scheduler-driven page movement (preemption spill/fetch)
         at the current network bandwidth; advances the virtual clock —
@@ -121,15 +146,19 @@ class InterleavedPipelineSim:
         d = self.plan.stages[i]
         return d.resident_total / self.n_seg + d.off_layers_seg()
 
-    def _comp_seg_mb(self, i: int, ctx: int, q_len: int = 1) -> float:
+    def _comp_seg_mb(self, i: int, ctx: int, q_len: int = 1,
+                     env: Optional[CostEnv] = None) -> float:
         """One micro-batch's compute for device i's slice of one segment.
         q_len > 1 prices a speculative verify round (DESIGN.md §11): the
         round scores q_len query positions, so FLOPs and KV reads scale
         with q_len (mb -> mb*q_len in the roofline) while weight bytes —
-        the term that dominates offloaded decode — are read once."""
+        the term that dominates offloaded decode — are read once.
+        Prices from true_env (what the hardware does); pass env=self.env
+        to price the planned model instead (re-fit drift observation)."""
+        env = self.true_env if env is None else env
         w = dataclasses.replace(self.w, ctx=max(ctx, 1),
                                 mb=self.w.mb * max(q_len, 1))
-        return self._layers_seg(i) * w.comp_layer(self.env.devices[i])
+        return self._layers_seg(i) * w.comp_layer(env.devices[i])
 
     def _load_bytes_seg(self, i: int) -> float:
         d = self.plan.stages[i]
@@ -209,16 +238,25 @@ class InterleavedPipelineSim:
                     # last micro-batch's hand-off to the next device
                     tr.complete(tr_ev.ACT_HOP, ts=last_end, dur=hop,
                                 track=dev_track(i), args={"segment": s})
+                if self.refit is not None and seg_start is not None:
+                    actual = sum(self._comp_seg_mb(i, ctx, qm) for qm in qs)
+                    planned = sum(self._comp_seg_mb(i, ctx, qm, env=self.env)
+                                  for qm in qs)
+                    self.refit.observe_compute(i, actual, planned,
+                                               now=last_end)
                 # interleave: evict seg-s blocks, fetch seg-(s+1) blocks
                 lb = self._load_bytes_seg(i)
                 if lb > 0:
                     ld_start = max(last_end, self._loader_free[i])
-                    ld_end = ld_start + lb / self.env.devices[i].load_bw
+                    ld_end = ld_start + lb / self.true_env.devices[i].load_bw
                     # KV-transfer wire time rides the otherwise-idle network
                     # inside the uncovered window (Eq. 8 sizes it to fit), so
                     # it adds no loader-channel latency by construction.
                     self._loader_free[i] = ld_end
                     self._load_done[i][(s + 1) % S] = ld_end
+                    if self.refit is not None:
+                        self.refit.observe_fetch(i, lb, ld_end - ld_start,
+                                                 now=ld_end)
                     if tr is not None:
                         tr.complete(tr_ev.WEIGHT_FETCH, ts=ld_start,
                                     dur=ld_end - ld_start,
@@ -301,6 +339,8 @@ class InterleavedPipelineSim:
                           kv_moved_bytes=moved)
         self.now = t_end
         self._tok_count += 1
+        if self.refit is not None:
+            self.refit.maybe_refit(self.now)
         return trace
 
     # -- main loop ---------------------------------------------------------------

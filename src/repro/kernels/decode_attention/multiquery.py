@@ -31,6 +31,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 # one definition each — the bit-wise kernel-vs-ref contracts depend on
 # every module in this package masking with the same constant
+from repro.kernels import tuning
 from repro.kernels.decode_attention.kernel import NEG_INF
 from repro.kernels.decode_attention.ops import GLOBAL_WINDOW, _auto_interpret
 
@@ -133,10 +134,11 @@ def mq_decode_attention_kernel(q, k, v, pos_ids, pos, window, *,
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
 def mq_decode_attention(q, k_cache, v_cache, pos_ids, pos, *, window=None,
-                        block_k: int = 512, interpret=None):
+                        block_k=None, interpret=None):
     """q: (B, q_len, H, dh); k/v_cache: (B, S_c, KV, dh); pos_ids: (S_c,);
     pos: int32 scalar, the absolute position of query 0 (query i sits at
-    pos + i) -> (B, q_len, H, dh)."""
+    pos + i) -> (B, q_len, H, dh). block_k=None consults the tuned table
+    (repro.kernels.tuning) at trace time; 512 with none installed."""
     if interpret is None:
         interpret = _auto_interpret()
     B, Q, H, dh = q.shape
@@ -144,6 +146,8 @@ def mq_decode_attention(q, k_cache, v_cache, pos_ids, pos, *, window=None,
     G = H // KV
     if window is None:
         window = GLOBAL_WINDOW
+    block_k = tuning.resolve("mq_decode_attention", S_c, dh, "block_k",
+                             block_k)
 
     bk = min(block_k, max(S_c, 128))
     pad_s = (-S_c) % bk

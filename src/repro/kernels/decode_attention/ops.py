@@ -11,6 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import tuning
 from repro.kernels.decode_attention.kernel import decode_attention_kernel
 
 GLOBAL_WINDOW = 2 ** 30
@@ -22,9 +23,10 @@ def _auto_interpret() -> bool:
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
 def decode_attention(q, k_cache, v_cache, pos_ids, pos, *, window=None,
-                     block_k: int = 512, interpret=None):
+                     block_k=None, interpret=None):
     """q: (B, 1, H, dh); k/v_cache: (B, S_c, KV, dh); pos_ids: (S_c,);
-    pos: int32 scalar -> (B, 1, H, dh)."""
+    pos: int32 scalar -> (B, 1, H, dh). block_k=None consults the tuned
+    table (repro.kernels.tuning) at trace time; 512 with none installed."""
     if interpret is None:
         interpret = _auto_interpret()
     B, _, H, dh = q.shape
@@ -32,6 +34,7 @@ def decode_attention(q, k_cache, v_cache, pos_ids, pos, *, window=None,
     G = H // KV
     if window is None:
         window = GLOBAL_WINDOW
+    block_k = tuning.resolve("decode_attention", S_c, dh, "block_k", block_k)
 
     bk = min(block_k, max(S_c, 128))
     pad_s = (-S_c) % bk

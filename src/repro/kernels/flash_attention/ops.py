@@ -16,6 +16,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import tuning
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
 
 GLOBAL_WINDOW = 2 ** 30
@@ -38,15 +39,19 @@ def _pad_to(x, axis: int, mult: int):
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
                                              "q_offset", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, window=None,
-                    block_q: int = 128, block_k: int = 512,
+                    block_q=None, block_k=None,
                     q_offset: int = 0, interpret=None):
-    """q: (B, Sq, H, dh); k, v: (B, Skv, KV, dh) -> (B, Sq, H, dh)."""
+    """q: (B, Sq, H, dh); k, v: (B, Skv, KV, dh) -> (B, Sq, H, dh).
+    block_q/block_k=None consult the tuned table (repro.kernels.tuning)
+    at trace time; (128, 512) with none installed."""
     if interpret is None:
         interpret = _auto_interpret()
     B, Sq, H, dh = q.shape
     Skv = k.shape[1]
     if window is None:
         window = GLOBAL_WINDOW
+    block_q = tuning.resolve("flash_attention", Skv, dh, "block_q", block_q)
+    block_k = tuning.resolve("flash_attention", Skv, dh, "block_k", block_k)
     ws = jnp.asarray(window, jnp.int32).reshape(1)
 
     qt = _pad_to(_pad_to(jnp.moveaxis(q, 2, 1), 2, block_q), 3, 128)

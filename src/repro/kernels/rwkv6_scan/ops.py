@@ -12,6 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import tuning
 from repro.kernels.rwkv6_scan.kernel import wkv_kernel
 
 
@@ -20,12 +21,15 @@ def _auto_interpret() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
-def wkv(r, k, v, w, u, state, *, block_t: int = 256, interpret=None):
+def wkv(r, k, v, w, u, state, *, block_t=None, interpret=None):
     """r/k/v/w: (B, S, H, dh); u: (H, dh); state: (B, H, dh, dh) fp32.
-    Returns (out (B, S, H, dh) fp32, new_state fp32)."""
+    Returns (out (B, S, H, dh) fp32, new_state fp32). block_t=None
+    consults the tuned table (repro.kernels.tuning); 256 with none
+    installed."""
     if interpret is None:
         interpret = _auto_interpret()
     B, S, H, dh = r.shape
+    block_t = tuning.resolve("rwkv6_scan", S, dh, "block_t", block_t)
     bt = min(block_t, max(S, 8))
     pad_t = (-S) % bt
     pad_d = (-dh) % 128 if not interpret else 0

@@ -11,6 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import tuning
 from repro.kernels.ssm_scan.kernel import ssm_scan_kernel
 
 
@@ -19,13 +20,16 @@ def _auto_interpret() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
-def ssm_scan(xh, dt, B_in, C_in, A, state, *, block_t: int = 256,
+def ssm_scan(xh, dt, B_in, C_in, A, state, *, block_t=None,
              interpret=None):
-    """Returns (y (B, S, H, dh) fp32, new_state (B, H, N, dh) fp32)."""
+    """Returns (y (B, S, H, dh) fp32, new_state (B, H, N, dh) fp32).
+    block_t=None consults the tuned table (repro.kernels.tuning); 256
+    with none installed."""
     if interpret is None:
         interpret = _auto_interpret()
     B, S, H, dh = xh.shape
     N = B_in.shape[-1]
+    block_t = tuning.resolve("ssm_scan", S, dh, "block_t", block_t)
     bt = min(block_t, max(S, 8))
     pad_t = (-S) % bt
     pad_d = (-dh) % 128 if not interpret else 0

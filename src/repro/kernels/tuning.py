@@ -1,0 +1,84 @@
+"""Runtime registry for measured kernel block-size configs (DESIGN.md §18).
+
+Every Pallas wrapper in this package historically hardcoded its block
+sizes (``block_k=512``, ``block_t=256``) — numbers nobody ever swept.
+The autotuner (``repro.tune.sweep``) times real candidates per device
+kind and shape bucket and persists the winners; this module is the
+*consultation point*: wrappers now default their block argument to
+``None``, and ``resolve(...)`` answers with the tuned value when a table
+is installed, or the historical default when none is — so behaviour is
+bit-identical to the pre-autotune repo until a sweep has actually run.
+
+Layering: ``repro.kernels`` must not depend on ``repro.tune`` (the tuner
+imports the kernels it sweeps), so the table lives here as plain data —
+``{kernel: {bucket: {param: value}}}`` — and ``repro.tune.cache`` only
+*fills* it.
+
+Shape bucketing: tuned configs are keyed by the power-of-two bucket of
+the blocked axis (KV span for attention, time for the scans) and the
+lane-padded head dim — close shapes share a winner, and the key is
+stable across runs/processes (tested in test_tune.py).
+
+Install-before-trace: jit caches key on the *resolved* static block
+values only through the wrapper's ``None`` sentinel, so a table
+installed after a shape was already traced does not retrace it. The
+launchers install the table at startup, before any model code runs; the
+sweep itself always passes explicit block values.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+# historical hardcoded defaults, one row per sweepable kernel entry point
+DEFAULTS: Dict[str, Dict[str, int]] = {
+    "flash_attention": {"block_q": 128, "block_k": 512},
+    "decode_attention": {"block_k": 512},
+    "mq_decode_attention": {"block_k": 512},
+    "paged_decode_attention": {"page_size": 64},   # pool-level knob
+    "mq_paged_decode_attention": {"page_size": 64},
+    "rwkv6_scan": {"block_t": 256},
+    "ssm_scan": {"block_t": 256},
+}
+
+_table: Optional[Dict[str, Dict[str, Dict[str, int]]]] = None
+
+
+def _pow2_at_least(n: int, floor: int = 8) -> int:
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+def shape_bucket(span: int, dh: int) -> str:
+    """Stable cache key for a kernel shape: power-of-two bucket of the
+    blocked axis (ceil) x the 128-lane-padded head/feature dim."""
+    lanes = max(-(-dh // 128) * 128, 128)
+    return f"s{_pow2_at_least(max(span, 1))}_d{lanes}"
+
+
+def set_tuning_table(table) -> None:
+    """Install (or clear, with None) the process-wide tuned-config table:
+    ``{kernel: {bucket: {param: int}}}``. Wrappers consult it at trace
+    time, so installing a table invalidates nothing — jit caches key on
+    the resolved static values."""
+    global _table
+    _table = table
+
+
+def get_tuning_table():
+    return _table
+
+
+def resolve(kernel: str, span: int, dh: int, param: str,
+            override: Optional[int] = None) -> int:
+    """The wrapper-facing lookup: explicit caller override wins, then the
+    installed table's (kernel, bucket) entry, then the historical
+    default. `span` is the size of the axis the kernel blocks over."""
+    if override is not None:
+        return override
+    if _table is not None:
+        cfg = _table.get(kernel, {}).get(shape_bucket(span, dh))
+        if cfg and param in cfg:
+            return int(cfg[param])
+    return DEFAULTS[kernel][param]

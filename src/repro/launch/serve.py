@@ -91,6 +91,24 @@ def main(argv=None):
                     help="TTFT p99 threshold in seconds (--slo)")
     ap.add_argument("--slo-tpot", type=float, default=1.0,
                     help="TPOT p50 threshold in seconds/token (--slo)")
+    ap.add_argument("--measure", action="store_true",
+                    help="measured-profile autotune (DESIGN.md §18): run "
+                         "the microbenchmark harness on this device and "
+                         "plan from timed FLOP/s + stream bandwidth "
+                         "instead of the analytic knobs; results persist "
+                         "to --profile-cache")
+    ap.add_argument("--profile-cache", default=None, metavar="PATH",
+                    help="tune-cache JSON (measured profiles + swept "
+                         "kernel block configs, keyed by device kind); "
+                         "loaded at startup — tuned kernel configs are "
+                         "installed before the first trace — and updated "
+                         "by --measure. Default: ~/.cache/repro/"
+                         "tune_cache.json when --measure is set")
+    ap.add_argument("--refit", action="store_true",
+                    help="online re-fit (DESIGN.md §18): EWMA-track "
+                         "measured weight-stream bandwidth during "
+                         "serving and rebuild the planner's TS ladders "
+                         "when it drifts >20%% from the planned model")
     ap.add_argument("--dash-interval", type=float, default=0.0,
                     help="seconds between live dashboard snapshots on "
                          "stdout (0 = off; backend clock, so virtual "
@@ -111,6 +129,36 @@ def main(argv=None):
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     n_dev = len(jax.devices())
+
+    # measured-profile autotune (DESIGN.md §18): load the tune cache and
+    # install tuned kernel block configs BEFORE any model code traces
+    # (jit caches do not retrace on a later install); --measure runs the
+    # harness and persists the profile for next launch
+    measured = None
+    if args.measure or args.profile_cache:
+        from repro.tune import TuneCache, default_cache_path
+        from repro.tune.measure import device_kind
+        cache_path = args.profile_cache or default_cache_path()
+        tune_cache = TuneCache.load(cache_path)
+        dk = device_kind()
+        n_installed = tune_cache.install(dk)
+        if n_installed:
+            log.info(f"installed {n_installed} tuned kernel configs "
+                     f"for {dk} from {cache_path}")
+        measured = tune_cache.get_profile(dk)
+        if args.measure:
+            from repro.core.profiles import TPU_V5E
+            from repro.tune.measure import measure_profile
+            log.info("running microbenchmark harness (--measure)...")
+            measured = measure_profile(dk, TPU_V5E)
+            tune_cache.put_profile(measured)
+            tune_cache.save(cache_path)
+            log.info(f"measured profile for {dk}: "
+                     f"flops={measured.flops:.3g} "
+                     f"load_bw={measured.load_bw:.3g} -> {cache_path}")
+        elif measured is not None:
+            log.info(f"planning from cached measured profile for {dk} "
+                     f"(measured {measured.measured_at})")
     use_engine = n_dev >= args.stages * args.tp and args.stages > 1
     params = M.init_params(cfg, jax.random.PRNGKey(0))
 
@@ -133,25 +181,34 @@ def main(argv=None):
             fracs = ([2.0, 1.2, 1.6, 1.0] if args.plan == "hetero"
                      else [1.5])
 
+            # measured throughputs override the synthetic knobs (memory
+            # stays the enforced budget — DESIGN.md §18)
+            overrides = {}
+            if measured is not None:
+                from repro.tune.profiles import MEASURED_FIELDS
+                overrides = {f: getattr(measured, f)
+                             for f in MEASURED_FIELDS
+                             if getattr(measured, f) > 0}
+
             def mk_env(scale):
                 devs = [_dc.replace(TPU_V5E, name=f"stage{i}",
                                     mem_bytes=base * scale
-                                    * fracs[i % len(fracs)])
+                                    * fracs[i % len(fracs)],
+                                    **overrides)
                         for i in range(args.stages)]
                 return CostEnv(devs, mbps(200.0),
                                Workload(cfg, mb=1, ctx=args.prompt_len,
                                         n_micro=n_mb))
             env = mk_env(1.0)
         if args.plan == "hetero":
-            from repro.core.offline_scheduler import allocate
-            r = allocate(env, cfg.n_layers, n_emp=args.max_len)
-            scale = 1.0
-            while not r.feasible and scale < 16.0:
-                scale *= 1.4          # too tight for ANY allocation: relax
-                env = mk_env(scale)
-                r = allocate(env, cfg.n_layers, n_emp=args.max_len)
+            from repro.core.offline_scheduler import allocate_with_retry
+            r, env, scale = allocate_with_retry(mk_env, cfg.n_layers,
+                                                n_emp=args.max_len)
             if not r.feasible:
                 raise SystemExit(f"hetero allocation infeasible: {r.reason}")
+            if scale > 1.0:
+                log.info(f"hetero allocation relaxed memory x{scale:.2f} "
+                         f"for feasibility")
             plan = r.plan
             log.info(f"hetero plan: seg={plan.n_seg} "
                      f"k_res={plan.k_res_list} k_off={plan.k_off_list}")
@@ -175,6 +232,10 @@ def main(argv=None):
     else:
         log.info("single-device fallback (no engine)")
 
+    if args.refit and planner is None:
+        log.info("--refit needs an OnlinePlanner to rebuild (engine path "
+                 "with --adapt); ignoring")
+
     spec = None
     if args.spec:
         from repro.specdec import SpecConfig
@@ -188,7 +249,7 @@ def main(argv=None):
                      prefix_cache=args.prefix_cache,
                      prefill_chunk_tokens=args.prefill_chunk,
                      page_size=args.page_size,
-                     planner=planner)
+                     planner=planner, refit=args.refit)
 
     arrivals = cli_arrivals(args.pattern, args.requests, seed=args.seed,
                             prompt_len=args.prompt_len,

@@ -106,6 +106,8 @@ FLEET_JOIN = "fleet.join"
 # SLO engine (DESIGN.md §17; track "slo")
 SLO_BREACH = "slo.breach"
 SLO_RECOVER = "slo.recover"
+# measured-profile autotuner (DESIGN.md §18; track "tune")
+TUNE_REFIT = "tune.refit"
 
 # tracks
 TRACK_SCHED = "sched"
@@ -115,6 +117,7 @@ TRACK_PREFIX = "prefix"
 TRACK_ENGINE = "engine"
 TRACK_ROUTER = "router"
 TRACK_SLO = "slo"
+TRACK_TUNE = "tune"
 
 
 def req_track(rid: int) -> str:

@@ -57,7 +57,8 @@ class SimBackend:
 
     def __init__(self, env: CostEnv, plan=None, *, n_slots: int = 0,
                  use_planner: bool = True, use_kv_transfer: bool = True,
-                 prompt_tokens: int = 64, spec=None, adapt: bool = False):
+                 prompt_tokens: int = 64, spec=None, adapt: bool = False,
+                 refit: bool = False, true_env: Optional[CostEnv] = None):
         if plan is None:
             from repro.core.offline_scheduler import allocate
             r = allocate(env, env.work.cfg.n_layers,
@@ -70,7 +71,15 @@ class SimBackend:
         self.n_slots = n_slots or max(env.work.n_micro, 1)
         self.sim = InterleavedPipelineSim(
             env, plan, use_planner=use_planner,
-            use_kv_transfer=use_kv_transfer, prompt_tokens=prompt_tokens)
+            use_kv_transfer=use_kv_transfer, prompt_tokens=prompt_tokens,
+            true_env=true_env)
+        # online re-fit (DESIGN.md §18): observe the sim's fetch/compute
+        # telemetry and fold measured drift back into the planned env
+        self.refit = None
+        if refit:
+            from repro.tune.refit import OnlineRefit
+            self.refit = OnlineRefit(env)
+            self.sim.attach_refit(self.refit)
         self._ctx: Dict[int, int] = {}        # slot -> prompt + generated
         self._kv_pages = None                 # (pages_in_use, page_size)
         # adaptation telemetry (DESIGN.md §13): planner (α, β) moves are
@@ -478,7 +487,7 @@ class EngineBackend:
                  max_len: int = 512, sampler=None, prompt_seed: int = 0,
                  paged: bool = False, page_size: int = 64, spec=None,
                  prefix_cache: bool = False, prefill_chunk_tokens: int = 0,
-                 cache_pages: int = 0, planner=None):
+                 cache_pages: int = 0, planner=None, refit: bool = False):
         import jax
 
         from repro.models import model as M
@@ -495,6 +504,15 @@ class EngineBackend:
         # scheduler may also force demotions (reclaim_kv_pages) before
         # preempting a request.
         self.planner = planner
+        # online re-fit on the real engine (DESIGN.md §18): wall-clock
+        # weight-load / stage-compute timings go in via note_load_timing
+        # and fold drift back into the planner's CostEnv
+        self.refit = None
+        if refit and planner is not None:
+            from repro.tune.refit import OnlineRefit
+            if not isinstance(planner.env.devices, list):
+                planner.env.devices = list(planner.env.devices)
+            self.refit = OnlineRefit(planner.env, planner)
         self._pool = None                 # admission PagePool (scheduler's)
         self._grants = []                 # reclaim-driven (stage, pages)
         self._reclaim_dry = False         # retier slots too small to grant
@@ -723,6 +741,17 @@ class EngineBackend:
         to the planner so its TS ladder fires early under burn."""
         if self.planner is not None:
             self.planner.note_slo_pressure(pressure)
+
+    def note_load_timing(self, stage: int, nbytes: float,
+                         seconds: float) -> None:
+        """Wall-clock weight-load observation from the engine's streaming
+        path (DESIGN.md §18): feed the online re-fit and let it rebuild
+        the planner's ladders if the measured bandwidth has drifted."""
+        if self.refit is None:
+            return
+        now = time.monotonic()
+        self.refit.observe_fetch(stage, nbytes, seconds, now=now)
+        self.refit.maybe_refit(now)
 
     def reclaim_kv_pages(self, n_pages: int) -> int:
         """Scheduler pressure hook: before preempting a request, demote

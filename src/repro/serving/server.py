@@ -69,7 +69,7 @@ class LimeServer:
                  max_len: int = 512, sampler: SamplerConfig = SamplerConfig(),
                  pattern: str = "sporadic", spec=None,
                  prefix_cache: bool = False, prefill_chunk_tokens: int = 0,
-                 page_size: int = 64, planner=None,
+                 page_size: int = 64, planner=None, refit: bool = False,
                  trace: Optional[str] = None,
                  trace_capacity: int = 1 << 16):
         self.cfg = cfg
@@ -83,6 +83,7 @@ class LimeServer:
         self.prefill_chunk_tokens = prefill_chunk_tokens
         self.page_size = page_size
         self.planner = planner                # OnlinePlanner (DESIGN §13)
+        self.refit = refit                    # online re-fit (DESIGN §18)
         # flight recorder (DESIGN.md §15): a path arms tracing for every
         # serve_all() — Chrome trace-event JSON (Perfetto), or JSONL when
         # the suffix is .jsonl
@@ -108,7 +109,8 @@ class LimeServer:
                 sampler=self.sampler, spec=self.spec,
                 prefix_cache=self.prefix_cache and self.engine is None,
                 prefill_chunk_tokens=self.prefill_chunk_tokens,
-                page_size=self.page_size, planner=self.planner)
+                page_size=self.page_size, planner=self.planner,
+                refit=self.refit)
         return self._backend
 
     def serve_all(self) -> List[Request]:

@@ -1,0 +1,14 @@
+"""Measured-profile autotuner (DESIGN.md §18).
+
+measure  - microbenchmark harness -> MeasuredProfile
+profiles - MeasuredProfile (DeviceProfile + provenance/confidence)
+sweep    - Pallas kernel block-size autotuner
+cache    - TuneCache JSON persistence + kernel-table install
+refit    - online EWMA re-fit of CostEnv from serving telemetry
+"""
+from repro.tune.profiles import (MEASURED_FIELDS, SANITY_FACTOR,
+                                 MeasuredProfile, from_analytic)
+from repro.tune.cache import TuneCache, default_cache_path
+
+__all__ = ["MEASURED_FIELDS", "SANITY_FACTOR", "MeasuredProfile",
+           "from_analytic", "TuneCache", "default_cache_path"]

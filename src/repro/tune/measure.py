@@ -1,0 +1,227 @@
+"""Microbenchmark harness: time the device, emit a MeasuredProfile.
+
+The analytic profiles in `repro.core.profiles` are knobs; this module
+replaces them with clocks. Four primitive measurements map one-to-one
+onto the fields the cost model prices:
+
+  - ``measure_flops``      -> DeviceProfile.flops    (bf16 matmul loop)
+  - ``measure_mem_bw``     -> DeviceProfile.mem_bw   (triad read+write)
+  - ``measure_stream_bw``  -> load_bw / host_bw (H2D) and
+                              load_write_bw (D2H) via real device_put /
+                              host round-trips of a weight-sized buffer
+  - ``measure_decode_loop``-> extras: a MaxText-style timed
+                              prefill / insert / generate loop on a real
+                              smoke model (end-to-end cross-check that
+                              the primitives above aren't fantasy)
+
+``measure_profile`` assembles them into a MeasuredProfile carrying
+per-field confidence (coefficient of variation across trials). Memory
+capacity (`mem_bytes`) is deliberately *not* measured: on the edge
+devices LIME targets it's an enforced budget, not a throughput, so the
+analytic base's value is kept.
+
+All timing goes through ``timeit_median`` — also the single timing
+helper `benchmarks/bench_kernels.py` and `repro.tune.sweep` use, so
+every number in the repo is produced by the same clock discipline
+(warmup, block_until_ready, median-of-reps).
+"""
+from __future__ import annotations
+
+import datetime
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.profiles import DeviceProfile
+from repro.tune.profiles import MEASURED_FIELDS, MeasuredProfile
+
+
+def _stats(ts) -> Tuple[float, float]:
+    """(median, coefficient-of-variation) of a list of seconds."""
+    a = np.asarray(ts, dtype=np.float64)
+    med = float(np.median(a))
+    cov = float(a.std() / a.mean()) if a.mean() > 0 else float("nan")
+    return med, cov
+
+
+def timeit_median(fn: Callable[[], object], *, reps: int = 5,
+                  warmup: int = 2) -> Tuple[float, float]:
+    """Time ``fn()`` (which must block until its work is done — call
+    ``jax.block_until_ready`` inside) and return (median_s, cov)."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return _stats(ts)
+
+
+# -- primitives ----------------------------------------------------------------
+
+def measure_flops(*, n: int = 1024, reps: int = 5) -> Tuple[float, float]:
+    """Dense-compute throughput: timed (n x n) bf16 matmul; returns
+    (flops_per_s, cov)."""
+    import jax
+    import jax.numpy as jnp
+
+    x = jnp.ones((n, n), jnp.bfloat16)
+
+    @jax.jit
+    def mm(a):
+        return a @ a
+
+    med, cov = timeit_median(lambda: jax.block_until_ready(mm(x)), reps=reps)
+    return 2.0 * n * n * n / med, cov
+
+
+def measure_mem_bw(*, mb: int = 64, reps: int = 5) -> Tuple[float, float]:
+    """On-device memory bandwidth: timed triad ``y = a*x + b`` over an
+    ``mb``-MiB fp32 buffer (one read + one write stream); returns
+    (bytes_per_s, cov)."""
+    import jax
+    import jax.numpy as jnp
+
+    n = mb * (1 << 20) // 4
+    x = jnp.ones((n,), jnp.float32)
+
+    @jax.jit
+    def triad(a):
+        return a * 1.0001 + 0.5
+
+    med, cov = timeit_median(lambda: jax.block_until_ready(triad(x)),
+                             reps=reps)
+    return 2.0 * n * 4 / med, cov
+
+
+def measure_stream_bw(*, mb: int = 32,
+                      reps: int = 5) -> Dict[str, Tuple[float, float]]:
+    """Weight-streaming bandwidth both ways, the quantity the LIME
+    pipeline lives or dies on. ``h2d``: host buffer -> device
+    (``jax.device_put``), prices `load_bw`/`host_bw`; ``d2h``: device ->
+    host (``np.asarray``), prices `load_write_bw`. Returns
+    {dir: (bytes_per_s, cov)}."""
+    import jax
+
+    nbytes = mb * (1 << 20)
+    host = np.ones((nbytes // 4,), np.float32)
+    dev = jax.block_until_ready(jax.device_put(host))
+
+    h2d_med, h2d_cov = timeit_median(
+        lambda: jax.block_until_ready(jax.device_put(host)), reps=reps)
+    # force a copy: on CPU backends np.asarray aliases the buffer and
+    # would "measure" a no-op at absurd bandwidth
+    d2h_med, d2h_cov = timeit_median(lambda: np.array(dev, copy=True),
+                                     reps=reps)
+    return {"h2d": (nbytes / h2d_med, h2d_cov),
+            "d2h": (nbytes / d2h_med, d2h_cov)}
+
+
+# -- end-to-end decode loop ----------------------------------------------------
+
+def measure_decode_loop(arch: str = "gemma3-1b", *, batch: int = 1,
+                        prompt: int = 32, gen: int = 8,
+                        reps: int = 3) -> Dict[str, float]:
+    """MaxText-style decode microbenchmark on a real (smoke-sized) model:
+    timed prefill (prompt pass), insert (prefilled cache round-tripped
+    through the device, the per-slot KV adoption copy), and generate
+    (autoregressive ``decode_step`` loop). Returns raw observations for
+    MeasuredProfile.extras — an end-to-end cross-check on the primitive
+    measurements, not a pricing input."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.registry import get_smoke_config
+    import repro.models.model as M
+
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    max_len = prompt + gen + 8
+    tokens = jnp.ones((batch, prompt), jnp.int32)
+
+    def do_prefill():
+        cache = M.init_cache(cfg, batch, max_len)
+        logits, cache = M.prefill(cfg, params, tokens, cache)
+        return jax.block_until_ready(logits), cache
+
+    prefill_s, prefill_cov = timeit_median(do_prefill, reps=reps, warmup=1)
+    _, cache = do_prefill()
+
+    leaves = jax.tree_util.tree_leaves(cache)
+    cache_bytes = float(sum(x.size * x.dtype.itemsize for x in leaves
+                            if hasattr(x, "dtype")))
+    insert_s, _ = timeit_median(
+        lambda: jax.block_until_ready(jax.device_put(cache)),
+        reps=reps, warmup=1)
+
+    tok = jnp.ones((batch, 1), jnp.int32)
+
+    def do_generate():
+        c, t = cache, tok
+        for _ in range(gen):
+            logits, c = M.decode_step(cfg, params, c, t)
+            t = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return jax.block_until_ready(logits)
+
+    gen_s, gen_cov = timeit_median(do_generate, reps=reps, warmup=1)
+    per_tok = gen_s / gen
+    return {
+        "prefill_s": prefill_s,
+        "prefill_cov": prefill_cov,
+        "insert_s": insert_s,
+        "insert_bytes": cache_bytes,
+        "insert_bw": cache_bytes / insert_s if insert_s > 0 else float("nan"),
+        "decode_tok_s": batch / per_tok if per_tok > 0 else float("nan"),
+        "decode_cov": gen_cov,
+        "prompt": float(prompt),
+        "gen": float(gen),
+    }
+
+
+# -- assembly ------------------------------------------------------------------
+
+def device_kind() -> str:
+    import jax
+    d = jax.devices()[0]
+    return getattr(d, "device_kind", None) or d.platform
+
+
+def measure_profile(name: str, base: DeviceProfile, *,
+                    reps: int = 5, mb: int = 32,
+                    decode_arch: Optional[str] = None) -> MeasuredProfile:
+    """Run the harness and assemble a MeasuredProfile. `base` supplies
+    the non-throughput knobs (mem_bytes stays an enforced budget) and
+    the analytic comparison for `check_sane`. ``decode_arch`` optionally
+    adds the end-to-end decode-loop observations to extras (slower, so
+    off by default)."""
+    flops, flops_cov = measure_flops(reps=reps)
+    mem_bw, mem_cov = measure_mem_bw(mb=max(mb, 16), reps=reps)
+    stream = measure_stream_bw(mb=mb, reps=reps)
+    (h2d, h2d_cov), (d2h, d2h_cov) = stream["h2d"], stream["d2h"]
+
+    extras: Dict[str, float] = {}
+    if decode_arch:
+        extras.update(measure_decode_loop(decode_arch))
+
+    vals = dict(name=name, mem_bytes=base.mem_bytes, flops=flops,
+                mem_bw=mem_bw, load_bw=h2d, load_write_bw=d2h, host_bw=h2d)
+    conf = {"flops": flops_cov, "mem_bw": mem_cov, "load_bw": h2d_cov,
+            "load_write_bw": d2h_cov, "host_bw": h2d_cov}
+    prof = MeasuredProfile(
+        device_kind=device_kind(), source="measured",
+        measured_at=datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        n_trials=reps, confidence=conf, extras=extras, **vals)
+    prof.check_sane(base)
+    return prof
+
+
+def measure_fields(base: DeviceProfile) -> Tuple[Dict[str, float],
+                                                 Dict[str, float]]:
+    """Primitive measurements only, as ({field: value}, {field: cov})
+    over MEASURED_FIELDS — the pieces `measure_profile` assembles."""
+    prof = measure_profile(base.name, base, reps=3, mb=16)
+    return ({f: getattr(prof, f) for f in MEASURED_FIELDS},
+            dict(prof.confidence))

@@ -155,6 +155,47 @@ def test_execution_plan_budget_and_coverage(devs, n_emp, bw_mbps):
     assert p.k_max == max(r + o for r, o in zip(p.k_res_list, p.k_off_list))
 
 
+@st.composite
+def measured_fleets(draw):
+    """fleets() whose members are MeasuredProfiles: every throughput
+    field independently perturbed by up to 3x either way — the
+    harness-on-a-noisy-box case the autotuner must plan through."""
+    from repro.tune.profiles import MEASURED_FIELDS, from_analytic
+    devs = draw(fleets())
+    out = []
+    for d in devs:
+        factors = {f: draw(st.floats(1 / 3, 3.0)) for f in MEASURED_FIELDS}
+        out.append(from_analytic(
+            d, device_kind="hyp", source="measured",
+            **{f: getattr(d, f) * v for f, v in factors.items()
+               if getattr(d, f) > 0}))
+    return out
+
+
+@given(measured_fleets(), st.sampled_from([128, 512, 1024]),
+       st.sampled_from([100, 200, 500]))
+@settings(max_examples=40, deadline=None)
+def test_allocate_over_measured_profiles(devs, n_emp, bw_mbps):
+    """ISSUE 10 S3: allocate() over randomly perturbed MeasuredProfile
+    fleets (the DeviceProfile subtype the harness emits) preserves the
+    per-stage memory budget and exact layer coverage — measurement noise
+    moves the *plan*, never breaks its feasibility invariants."""
+    env = CostEnv(devs, mbps(bw_mbps), Workload(CFG, mb=1, ctx=n_emp))
+    r = allocate(env, CFG.n_layers, n_emp=n_emp)
+    if not r.feasible:
+        return
+    p = r.plan
+    w = env.work
+    assert p.layers_total() == CFG.n_layers
+    for i, stg in enumerate(p.stages):
+        used = (stg.resident_bytes(w, p.n_seg)
+                + stg.layers_total(p.n_seg) * n_emp
+                * w.kv_bytes_per_token_layer())
+        assert used <= devs[i].mem_bytes + 1e-6, (i, used, devs[i].mem_bytes)
+    assert env.mem_ok(p, n_emp)
+    assert p.t_total < float("inf")
+
+
 @given(st.integers(1, 8), st.integers(0, 8), st.integers(2, 6),
        st.floats(0.1, 4.0))
 @settings(max_examples=60, deadline=None)

@@ -1,0 +1,279 @@
+"""Autotuner tests: MeasuredProfile JSON, TuneCache keys, kernel-config
+resolution, the microbenchmark clock, and the online re-fit loop.
+
+The sweep itself (timing real Pallas kernels) lives in CI's dry-run and
+bench_autotune — here we pin the contracts everything else builds on:
+round-trips are exact, cache keys are stable across processes, resolve
+precedence is override > table > default, and drift actually rebuilds
+the planner without touching anything when within tolerance.
+"""
+import dataclasses
+import json
+import math
+
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.cost_model import CostEnv, Workload
+from repro.core.offline_scheduler import allocate, allocate_with_retry
+from repro.core.online_planner import OnlinePlanner
+from repro.core.profiles import (AGX_ORIN_32, TPU_V5E, XAVIER_NX_16,
+                                 env_E3, mbps)
+from repro.kernels import tuning
+from repro.tune.cache import TuneCache
+from repro.tune.profiles import MeasuredProfile, from_analytic
+from repro.tune.refit import OnlineRefit, RefitConfig
+
+
+@pytest.fixture(autouse=True)
+def _clean_tuning_table():
+    """resolve() consults process-wide state; never leak it across tests."""
+    saved = tuning.get_tuning_table()
+    yield
+    tuning.set_tuning_table(saved)
+
+
+# ----------------------------------------------------------------------------
+# MeasuredProfile JSON round-trip (NaN -> null convention)
+# ----------------------------------------------------------------------------
+def test_measured_profile_json_roundtrip_exact():
+    p = from_analytic(TPU_V5E, device_kind="tpu-v5e", source="measured",
+                      load_bw=1.5e9)
+    # unmeasured fields carry NaN confidence; overridden ones are exact
+    assert math.isnan(p.confidence["flops"])
+    assert p.confidence["load_bw"] == 0.0
+    text = p.to_json()
+    assert "NaN" not in text and "null" in text
+    q = MeasuredProfile.from_dict(json.loads(text))
+    # NaN != NaN, so compare through to_dict (NaN -> None on both sides)
+    assert q.to_dict() == p.to_dict()
+    assert isinstance(q, MeasuredProfile) and q.load_bw == 1.5e9
+    assert math.isnan(q.confidence["mem_bw"])
+
+
+def test_measured_profile_extras_nan_roundtrip():
+    p = from_analytic(AGX_ORIN_32, device_kind="orin", source="measured")
+    p = dataclasses.replace(
+        p, extras={"decode_tok_s": 12.5, "insert_bw": float("nan")})
+    q = MeasuredProfile.from_dict(json.loads(p.to_json()))
+    assert q.extras["decode_tok_s"] == 12.5
+    assert math.isnan(q.extras["insert_bw"])
+
+
+def test_from_analytic_keeps_unmeasured_fields():
+    p = from_analytic(XAVIER_NX_16, device_kind="nx", flops=2e12)
+    assert p.flops == 2e12
+    assert p.mem_bytes == XAVIER_NX_16.mem_bytes
+    assert p.mem_bw == XAVIER_NX_16.mem_bw
+    assert p.name == XAVIER_NX_16.name
+    # still a DeviceProfile: flows through CostEnv / allocate unchanged
+    env = CostEnv([p, p], mbps(200),
+                  Workload(get_config("llama2-13b"), mb=1, ctx=256))
+    r = allocate(env, 40, n_emp=256)
+    assert r.feasible or r.reason
+
+
+# ----------------------------------------------------------------------------
+# sanity guard: measured vs analytic > 3x warns and reports
+# ----------------------------------------------------------------------------
+def test_check_sane_flags_only_3x_deviations():
+    p = from_analytic(TPU_V5E, device_kind="t",
+                      flops=TPU_V5E.flops * 4.0,        # 4x: flagged
+                      load_bw=TPU_V5E.load_bw * 0.2,    # 5x slow: flagged
+                      mem_bw=TPU_V5E.mem_bw * 2.0)      # 2x: fine
+    bad = p.check_sane(TPU_V5E)
+    assert set(bad) == {"flops", "load_bw"}
+    assert bad["flops"] == pytest.approx(4.0)
+    assert bad["load_bw"] == pytest.approx(0.2)
+    # within-tolerance profile is silent
+    ok = from_analytic(TPU_V5E, device_kind="t")
+    assert ok.check_sane(TPU_V5E) == {}
+
+
+# ----------------------------------------------------------------------------
+# cache keys: shape buckets and save/load stability
+# ----------------------------------------------------------------------------
+def test_shape_bucket_stable_and_padded():
+    assert tuning.shape_bucket(2048, 64) == "s2048_d128"
+    assert tuning.shape_bucket(1500, 128) == "s2048_d128"
+    assert tuning.shape_bucket(2049, 130) == "s4096_d256"
+    assert tuning.shape_bucket(1, 1) == "s8_d128"
+    # deterministic: same inputs, same key, every call
+    assert all(tuning.shape_bucket(512, 64) == "s512_d128"
+               for _ in range(3))
+
+
+def test_tune_cache_roundtrip_and_key_stability(tmp_path):
+    c = TuneCache()
+    c.put_profile(from_analytic(TPU_V5E, device_kind="cpu"))
+    c.put_kernel("cpu", "decode_attention", "s2048_d128",
+                 {"block_k": 2048}, speedup=2.99, us=123.4)
+    c.put_kernel("cpu", "flash_attention", "s2048_d128",
+                 {"block_q": 256, "block_k": 2048}, speedup=2.01)
+    path = str(tmp_path / "tc.json")
+    c.save(path)
+    d = TuneCache.load(path)
+    assert d.kernels == c.kernels          # keys and rows survive exactly
+    assert d.get_profile("cpu").to_dict() == c.get_profile("cpu").to_dict()
+    # a second save/load cycle is a fixed point
+    path2 = str(tmp_path / "tc2.json")
+    d.save(path2)
+    assert TuneCache.load(path2).kernels == c.kernels
+    # kernel_table strips _meta but keeps every block param
+    table = d.kernel_table("cpu")
+    assert table["decode_attention"]["s2048_d128"] == {"block_k": 2048}
+    assert table["flash_attention"]["s2048_d128"] == {"block_q": 256,
+                                                      "block_k": 2048}
+
+
+def test_tune_cache_tolerates_missing_and_corrupt(tmp_path):
+    assert TuneCache.load(str(tmp_path / "nope.json")).kernels == {}
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    assert TuneCache.load(str(bad)).profiles == {}
+    stale = tmp_path / "stale.json"
+    stale.write_text(json.dumps({"version": 999, "kernels": {"x": {}}}))
+    assert TuneCache.load(str(stale)).kernels == {}
+
+
+# ----------------------------------------------------------------------------
+# resolve precedence: override > installed table > historical default
+# ----------------------------------------------------------------------------
+def test_resolve_precedence():
+    tuning.set_tuning_table(None)
+    assert tuning.resolve("decode_attention", 2048, 64, "block_k") == \
+        tuning.DEFAULTS["decode_attention"]["block_k"]
+    c = TuneCache()
+    c.put_kernel("cpu", "decode_attention", "s2048_d128",
+                 {"block_k": 1024}, speedup=2.0)
+    assert c.install("cpu") == 1
+    assert tuning.resolve("decode_attention", 2048, 64, "block_k") == 1024
+    # nearby shape, same bucket -> same winner; other bucket -> default
+    assert tuning.resolve("decode_attention", 1500, 100, "block_k") == 1024
+    assert tuning.resolve("decode_attention", 4096, 64, "block_k") == 512
+    # explicit caller override always wins
+    assert tuning.resolve("decode_attention", 2048, 64, "block_k",
+                          override=256) == 256
+    # empty cache installs nothing (defaults stay untouched)
+    tuning.set_tuning_table(None)
+    assert TuneCache().install("cpu") == 0
+    assert tuning.get_tuning_table() is None
+
+
+# ----------------------------------------------------------------------------
+# microbenchmark clock
+# ----------------------------------------------------------------------------
+def test_timeit_median_counts_and_shape():
+    from repro.tune.measure import timeit_median
+    calls = []
+    med, cov = timeit_median(lambda: calls.append(1), reps=4, warmup=2)
+    assert len(calls) == 6          # warmup runs execute but aren't timed
+    assert med >= 0.0 and cov >= 0.0
+
+
+def test_measure_stream_bw_smoke():
+    from repro.tune.measure import measure_stream_bw
+    bw = measure_stream_bw(mb=1, reps=2)
+    for d in ("h2d", "d2h"):
+        v, cov = bw[d]
+        assert v > 0 and math.isfinite(v)
+        # a CPU "copy" that aliased the buffer would report PB/s
+        assert v < 1e15, f"{d} bandwidth {v:.3g} B/s is not a real copy"
+
+
+# ----------------------------------------------------------------------------
+# launch-time feasibility retry (shared by serve.py for measured profiles)
+# ----------------------------------------------------------------------------
+def test_allocate_with_retry_relaxes_until_feasible():
+    cfg = get_config("llama2-13b")
+
+    def mk_env(scale):
+        devs = [XAVIER_NX_16.scaled_mem(0.25 * scale) for _ in range(2)]
+        return CostEnv(devs, mbps(200), Workload(cfg, mb=1, ctx=1024))
+
+    r0 = allocate(mk_env(1.0), cfg.n_layers, n_emp=1024)
+    assert not r0.feasible          # the premise: 1.0 is too tight
+    r, env, scale = allocate_with_retry(mk_env, cfg.n_layers, n_emp=1024)
+    assert r.feasible and scale > 1.0
+    assert env.mem_ok(r.plan, 1024)
+
+
+# ----------------------------------------------------------------------------
+# online re-fit
+# ----------------------------------------------------------------------------
+def _offload_env_and_planner():
+    """A fleet that must stream weights (the refit path only matters when
+    load_bw prices something): E3 at 0.45x memory under llama3.3-70b."""
+    cfg = get_config("llama3.3-70b")
+    devs = [dataclasses.replace(d, mem_bytes=int(d.mem_bytes * 0.45))
+            for d in env_E3()]
+    env = CostEnv(devs, mbps(200), Workload(cfg, mb=1, ctx=512))
+    r = allocate(env, cfg.n_layers, n_emp=512)
+    assert r.feasible, r.reason
+    assert any(d.off_layers_seg() > 0 for d in r.plan.devices)
+    return env, OnlinePlanner(env, r.plan, horizon_tokens=2 ** 16)
+
+
+def test_refit_quiet_within_tolerance():
+    env, pl = _offload_env_and_planner()
+    rf = OnlineRefit(env, pl, config=RefitConfig(min_samples=2,
+                                                 cooldown_s=0.0))
+    planned = [d.load_bw for d in env.devices]
+    for t in range(4):
+        for i, bw in enumerate(planned):
+            rf.observe_fetch(i, nbytes=bw * 0.01, seconds=0.01,
+                             now=float(t))
+    assert rf.maybe_refit(now=5.0) == []
+    assert pl.rebuilds == 0
+    assert [d.load_bw for d in env.devices] == planned
+
+
+def test_refit_drift_updates_env_and_rebuilds_ladder():
+    env, pl = _offload_env_and_planner()
+    chunk0 = pl.chunk
+    rf = OnlineRefit(env, pl, config=RefitConfig(min_samples=2,
+                                                 cooldown_s=0.0))
+    planned = [d.load_bw for d in env.devices]
+    # every loader actually delivers half the knob
+    for t in range(4):
+        for i, bw in enumerate(planned):
+            rf.observe_fetch(i, nbytes=bw * 0.5 * 0.01, seconds=0.01,
+                             now=float(t))
+    fired = rf.maybe_refit(now=5.0)
+    assert fired and rf.n_refits == len(fired)
+    assert all(ev.field == "load_bw" for ev in fired)
+    for i, bw in enumerate(planned):
+        assert env.devices[i].load_bw == pytest.approx(bw * 0.5, rel=1e-6)
+    assert pl.rebuilds == 1
+    # slower loader -> smaller demotion chunks (scaled by measured/planned)
+    assert pl.chunk == max(32, int(round(chunk0 * 0.5)))
+    # planner ladders still monotone after the rebuild
+    for lad in pl.ladders:
+        ts = [s.threshold_tokens for s in lad]
+        assert ts == sorted(ts)
+    # cooldown: an immediate second call is a no-op
+    assert rf.maybe_refit(now=5.0 + 0.5) == []
+
+
+def test_refit_compute_drift_scales_flops():
+    env, pl = _offload_env_and_planner()
+    rf = OnlineRefit(env, pl, config=RefitConfig(min_samples=2,
+                                                 cooldown_s=0.0))
+    flops0 = env.devices[0].flops
+    # device 0 computes 2x slower than planned (planned/observed = 0.5)
+    for t in range(4):
+        rf.observe_compute(0, seconds=0.02, planned_seconds=0.01,
+                           now=float(t))
+    fired = rf.maybe_refit(now=5.0)
+    assert [ev.field for ev in fired] == ["flops"]
+    assert env.devices[0].flops == pytest.approx(flops0 * 0.5, rel=1e-6)
+
+
+def test_refit_needs_min_samples():
+    env, pl = _offload_env_and_planner()
+    rf = OnlineRefit(env, pl, config=RefitConfig(min_samples=4,
+                                                 cooldown_s=0.0))
+    bw = env.devices[0].load_bw
+    rf.observe_fetch(0, nbytes=bw * 0.1 * 1.0, seconds=1.0, now=0.0)
+    assert rf.drift(0) == {}
+    assert rf.maybe_refit(now=1.0) == []
